@@ -1,0 +1,260 @@
+"""One benchmark per paper table/figure. Each returns a list of CSV rows
+(name, value, derived) and asserts the paper's headline claim."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import dpa, protocol
+from repro.core.simulator import (FabricParams, WorkerParams, simulate_allgather,
+                                  simulate_broadcast, sweep_phase_breakdown)
+from repro.core.topology import FatTree
+
+GIB = 1 << 30
+ROWS = list
+
+
+def fig2_traffic_model():
+    """Fig 2: theoretical bandwidth savings, 1024-node fat-tree, radix 32."""
+    tree = FatTree(k=32, n_hosts=1024)
+    n = 1 << 20
+    rows = []
+    ring = cm.p2p_ring_allgather_traffic(tree, 1024, n)
+    mc_ag = cm.mcast_allgather_traffic(tree, 1024, n)
+    kno = cm.p2p_knomial_bcast_traffic(tree, 1024, n, k=4)
+    mc_bc = cm.mcast_bcast_traffic(tree, 1024, n)
+    rows.append(("fig2.allgather_ring_bytes", ring, f"x{ring/mc_ag:.2f} vs mcast"))
+    rows.append(("fig2.allgather_mcast_bytes", mc_ag, "every byte crosses each link once"))
+    rows.append(("fig2.bcast_knomial_bytes", kno, f"x{kno/mc_bc:.2f} vs mcast"))
+    rows.append(("fig2.bcast_mcast_bytes", mc_bc, "bandwidth-optimal"))
+    assert 1.5 <= ring / mc_ag <= 2.5, "paper: ~2x traffic reduction"
+    return rows
+
+
+def fig5_cpu_datapath():
+    """Fig 5: single CPU core vs single multithreaded DPA core at 200 Gbit/s."""
+    link = dpa.LINK_200G_BYTES
+    rows = []
+    for name, gib in dpa.CPU_CORE_TPUT_GIB.items():
+        rows.append((f"fig5.cpu_core.{name}_gibs", gib,
+                     f"{gib*GIB/link*100:.0f}% of 200G link"))
+        assert gib * GIB < link  # CPU core cannot sustain the link
+    d = dpa.sustained_tput(dpa.DpaConfig("UD", 16)) / GIB
+    rows.append(("fig5.dpa_core16t_UD_gibs", round(d, 2), "scales to peak"))
+    assert d * GIB >= 0.99 * link
+    return rows
+
+
+def fig10_critical_path():
+    """Fig 10: protocol phase breakdown vs scale and message size."""
+    rows = []
+    data = sweep_phase_breakdown(
+        sizes=[4096, 1 << 17, 4 << 20], nodes=[2, 16, 188], seed=0
+    )
+    for r in data:
+        rows.append((
+            f"fig10.P{r['nodes']}.{r['bytes']}B.mcast_frac",
+            round(r["mcast_frac"], 4),
+            f"rnr={r['rnr_frac']:.3f} rel={r['reliability_frac']:.3f}",
+        ))
+    big = next(r for r in data if r["nodes"] >= 16 and r["bytes"] == 4 << 20)
+    assert big["mcast_frac"] > 0.99, "paper: 99% of time in data movement at 16+ nodes"
+    return rows
+
+
+def fig11_throughput_188():
+    """Fig 11: per-rank receive throughput at 188 nodes (56 Gbit/s CX-3)."""
+    fab = FabricParams(b_link=56e9 / 8)
+    wk = WorkerParams(n_recv_workers=2, thread_tput=9.0 * GIB)
+    rng = np.random.default_rng(0)
+    rows = []
+    p = 188
+    for size in (1 << 14, 1 << 17, 1 << 20):
+        ag = simulate_allgather(p, size, fab, wk, rng)
+        t_ring = cm.allgather_time_ring(size, fab.b_link, p)
+        ring_tput = (p - 1) * size / t_ring
+        rows.append((f"fig11.allgather.{size}B.mcast_GBs",
+                     round(ag.per_rank_recv_tput / 1e9, 3),
+                     f"ring={ring_tput/1e9:.3f} GB/s (both receive-bound)"))
+        # paper: mcast ~ ring for 128-256 KiB (receive-bound alignment)
+        if size == 1 << 17:
+            assert 0.5 < ag.per_rank_recv_tput / ring_tput < 1.5
+    n = 8 << 20  # paper reports the tree-vs-mcast gaps at large messages
+    t_mc = cm.bcast_time_multicast(n, fab.b_link, p)
+    t_kno = cm.bcast_time_knomial(n, fab.b_link, p)
+    t_bin = cm.bcast_time_binary_tree(n, fab.b_link, p)
+    rows.append(("fig11.bcast.mcast_vs_knomial_x", round(t_kno / t_mc, 2),
+                 "paper: up to 1.3x"))
+    rows.append(("fig11.bcast.mcast_vs_binary_x", round(t_bin / t_mc, 2),
+                 "paper: up to 4.75x (ours is the store-and-forward bound)"))
+    assert 1.05 < t_kno / t_mc < 1.8
+    assert t_bin / t_mc > 3.0
+    return rows
+
+
+def fig12_traffic_savings():
+    """Fig 12: switch-port counter savings on the 188-node, 18-switch testbed."""
+    tree = FatTree(k=16, n_hosts=188)
+    n = 1 << 16  # 64 KiB per the paper's counter experiment
+    rows = []
+    ring = cm.p2p_ring_allgather_traffic(tree, 188, n * 188)
+    mc = cm.mcast_allgather_traffic(tree, 188, n * 188)
+    ringb = cm.p2p_ring_pipeline_bcast_traffic(tree, 188, n)
+    kno = cm.p2p_knomial_bcast_traffic(tree, 188, n)
+    mcb = cm.mcast_bcast_traffic(tree, 188, n)
+    rows.append(("fig12.allgather_reduction_x", round(ring / mc, 2),
+                 "paper: 1.5-2x"))
+    rows.append(("fig12.bcast_reduction_x", round(ringb / mcb, 2),
+                 "vs pipelined-ring P2P; paper: 1.5x"))
+    rows.append(("fig12.bcast_vs_knomial_x", round(kno / mcb, 2),
+                 "vs locality-naive k-nomial (worse baseline)"))
+    assert 1.5 <= ring / mc <= 2.2
+    assert 1.3 <= ringb / mcb <= 2.5
+    return rows
+
+
+def table1_datapath():
+    """Table I: single-thread DPA receive datapath metrics."""
+    rows = []
+    for t in ("UD", "UC"):
+        r = dpa.TABLE1[t]
+        rows.append((f"table1.{t}.tput_gibs", r["tput_gib"], ""))
+        rows.append((f"table1.{t}.cycles_per_cqe", r["cycles_per_cqe"],
+                     f"ipc={r['ipc']}"))
+    assert dpa.TABLE1["UC"]["tput_gib"] / dpa.TABLE1["UD"]["tput_gib"] > 2
+    return rows
+
+
+def fig13_14_thread_scaling():
+    """Figs 13/14: receive throughput vs DPA threads (8 MiB buffer, 4 KiB)."""
+    rows = []
+    for t in ("UD", "UC"):
+        for n in (1, 2, 4, 8, 16):
+            tput = dpa.sustained_tput(dpa.DpaConfig(t, n)) / GIB
+            rows.append((f"fig13.{t}.{n}threads_gibs", round(tput, 2), ""))
+        sat = dpa.threads_to_saturate(t)
+        rows.append((f"fig14.{t}.threads_to_linerate", sat,
+                     "paper: UC~4, UD 8-16"))
+    assert dpa.threads_to_saturate("UC") <= 4
+    assert 8 <= dpa.threads_to_saturate("UD") <= 16
+    return rows
+
+
+def fig15_chunk_sizes():
+    """Fig 15: UC multi-packet chunks saturate with fewer threads."""
+    rows = []
+    for chunk in (4096, 8192, 16384, 32768):
+        n = next(
+            t for t in range(1, 257)
+            if dpa.sustained_tput(dpa.DpaConfig("UC", t, chunk))
+            >= 0.99 * dpa.LINK_200G_BYTES
+        )
+        rows.append((f"fig15.UC.{chunk}B.threads_to_linerate", n, ""))
+    return rows
+
+
+def fig16_tbit():
+    """Fig 16: 64 B chunks — sustained chunk rate vs the 1.6 Tbit/s arrival."""
+    need = dpa.link_chunk_arrival_rate(dpa.LINK_1600G_BYTES)
+    rows = [("fig16.required_Mchunks_s", round(need / 1e6, 1), "1.6T, 4KiB MTU")]
+    for n in (16, 64, 128):
+        r = dpa.sustained_chunk_rate(
+            dpa.DpaConfig("UD", n, 64, dpa.LINK_1600G_BYTES)
+        )
+        rows.append((f"fig16.UD.{n}threads_Mchunks_s", round(r / 1e6, 1),
+                     "sustains 1.6T" if r >= need else "below"))
+    assert dpa.tbit_feasible("UD", 128)
+    return rows
+
+
+def appendix_b_speedup():
+    """Appendix B: S = 2 - 2/P for concurrent {AG, RS}."""
+    rows = []
+    for p in (2, 16, 256, 1024):
+        s = cm.concurrent_ag_rs_speedup(p)
+        t_rr = cm.concurrent_completion_time(1 << 20, p, 25e9, "ring_ring")
+        t_mi = cm.concurrent_completion_time(1 << 20, p, 25e9, "mc_inc")
+        rows.append((f"appB.S(P={p})", round(s, 4),
+                     f"sim ratio {t_rr/t_mi:.4f}"))
+        assert abs(t_rr / t_mi - s) < 1e-9
+    return rows
+
+
+def measured_protocol_micro():
+    """Measured on THIS machine: protocol hot-path microbenchmarks (us/call)."""
+    rows = []
+    buf = bytes(np.random.default_rng(0).integers(0, 256, 1 << 20, dtype=np.uint8))
+    t0 = time.perf_counter()
+    chunks = protocol.segment(buf)
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(("micro.segment_1MiB_us", round(dt, 1), f"{len(chunks)} chunks"))
+    leaf = protocol.LeafReceiver(len(buf))
+    t0 = time.perf_counter()
+    for c in chunks:
+        leaf.deliver(c)
+    dt = (time.perf_counter() - t0) * 1e6 / len(chunks)
+    rows.append(("micro.deliver_per_chunk_us", round(dt, 2), "bitmap+copy"))
+    rng = np.random.default_rng(1)
+    t0 = time.perf_counter()
+    r = simulate_broadcast(32, 1 << 20, FabricParams(p_drop=0.001),
+                           WorkerParams(8), rng)
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(("micro.simulate_bcast32_us", round(dt, 0),
+                 f"recovered={r.recovered}"))
+    return rows
+
+
+def measured_jax_collectives():
+    """Measured on THIS machine (8 fake CPU devices, subprocess): wall time of
+    the shard_map collective kernels. The host has no duplex ICI links, so
+    bidi/concurrent gains show structurally (validated in tests), not in
+    host wall-clock; the rows document measured reality."""
+    import os
+    import subprocess
+    import sys
+
+    code = """
+import time, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core import collectives as C
+mesh = jax.make_mesh((8,), ('x',))
+n = 1 << 20
+full = jnp.arange(8 * n, dtype=jnp.float32)
+sharded = jax.device_put(full, NamedSharding(mesh, P('x')))
+per_dev = jnp.stack([full * (i + 1) for i in range(8)])
+def t(f, *a):
+    f(*a)[0].block_until_ready() if isinstance(f(*a), tuple) else jax.block_until_ready(f(*a))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(f(*a))
+    return (time.perf_counter() - t0) / 5 * 1e6
+for mode in ['ring', 'bidi', 'bcast']:
+    ag = C.make_allgather(mesh, 'x', mode, n_chains=4 if mode == 'bcast' else None)
+    print(f'collective.allgather_{mode}_32MB_us,{t(ag, sharded):.0f},measured 8dev')
+rs = C.make_reduce_scatter(mesh, 'x', 'bidi')
+print(f'collective.reduce_scatter_bidi_32MB_us,{t(rs, per_dev.reshape(-1)):.0f},measured 8dev')
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    rows = []
+    for line in res.stdout.splitlines():
+        if line.startswith("collective."):
+            name, val, der = line.split(",", 2)
+            rows.append((name, val, der))
+    assert rows, res.stderr[-2000:]
+    return rows
+
+
+ALL = [
+    fig2_traffic_model, fig5_cpu_datapath, fig10_critical_path,
+    fig11_throughput_188, fig12_traffic_savings, table1_datapath,
+    fig13_14_thread_scaling, fig15_chunk_sizes, fig16_tbit,
+    appendix_b_speedup, measured_protocol_micro, measured_jax_collectives,
+]

@@ -1,0 +1,102 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM/chip,
+~50 GB/s/link ICI. Terms per (arch x shape x mesh):
+
+  T_compute    = impl_FLOPs   / (chips * 197e12)
+  T_memory     = HBM_bytes    / (chips * 819e9)     [per-device bytes * chips]
+  T_collective = coll_bytes   / (chips * 50e9)      [total over devices]
+
+Dominant term = the bottleneck; roofline fraction = T_compute / max(all)
+(how much of the step is MXU-limited — 1.0 means compute-bound at peak).
+MODEL_FLOPS/impl_FLOPs flags masked-attention waste and remat recompute.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def load_cells(result_dir: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("ok"):
+            rec["_file"] = os.path.basename(path)
+            out.append(rec)
+    return out
+
+
+def roofline_terms(rec: dict) -> dict:
+    chips = rec["mesh"]["n_devices"]
+    an = rec["analytic"]
+    t_comp = an["impl_flops"] / (chips * PEAK_FLOPS)
+    t_comp_useful = an["model_flops"] / (chips * PEAK_FLOPS)
+    t_mem = an["hbm_bytes_per_device"] / HBM_BW
+    coll_per_dev = an["collective_bytes_per_device"]["total"]
+    t_coll = coll_per_dev / ICI_BW
+    # cross-check: HLO-parsed collective bytes (loop-scaled)
+    hlo_coll = rec.get("collectives_hlo", {}).get("per_device_total", 0)
+    t_coll_hlo = hlo_coll / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    step = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "2pod" if rec["multi_pod"] else "1pod",
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "t_collective_hlo_s": t_coll_hlo,
+        "dominant": dom,
+        "roofline_fraction": t_comp_useful / step if step else 0.0,
+        "useful_ratio": an["useful_ratio"],
+        "model_flops": an["model_flops"],
+        "impl_flops": an["impl_flops"],
+        "params_B": an["params_total"] / 1e9,
+        "fsdp_mode": rec.get("fsdp_mode", "xla"),
+        "tag": rec["_file"].replace(".json", ""),
+    }
+
+
+def what_would_help(row: dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("overlap/bidirectional AG+RS schedule; replicate serve weights "
+                "over dp; larger per-gather granularity")
+    if d == "memory":
+        return ("remat policy with fewer activation passes; fuse elementwise "
+                "chains; bf16 optimizer reads; KV layout")
+    return ("remove masked-attention waste (triangle scheduling); drop remat "
+            "recompute where memory allows")
+
+
+def rows(result_dir: str = "dryrun_results", only_1pod: bool = True):
+    out = []
+    for rec in load_cells(result_dir):
+        if only_1pod and rec["multi_pod"]:
+            continue
+        if (rec.get("fsdp_mode", "xla") != "xla" or rec.get("mesh_shape")
+                or rec.get("serve_replicate") or rec.get("moe_groups")
+                or rec.get("grad_accum", 1) != 1):
+            continue  # baselines only; perf variants reported in §Perf
+        r = roofline_terms(rec)
+        out.append((
+            f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+            round(r["roofline_fraction"], 4),
+            f"dom={r['dominant']} Tc={r['t_compute_s']:.2e} "
+            f"Tm={r['t_memory_s']:.2e} Tx={r['t_collective_s']:.2e} "
+            f"useful={r['useful_ratio']:.2f}",
+        ))
+    return out
+
+
+def full_table(result_dir: str = "dryrun_results"):
+    return [roofline_terms(r) for r in load_cells(result_dir)]

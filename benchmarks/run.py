@@ -1,0 +1,57 @@
+"""Benchmark driver: one function per paper table/figure + the roofline table.
+
+Prints ``name,value,derived`` CSV. Paper-claim assertions fire inside each
+benchmark — a failing claim fails the run.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import paper_figs, roofline  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--results", default="dryrun_results")
+    args = ap.parse_args()
+
+    print("name,value,derived")
+    failures = 0
+    for fn in paper_figs.ALL:
+        t0 = time.perf_counter()
+        try:
+            for name, value, derived in fn():
+                print(f"{name},{value},{derived}")
+        except AssertionError as e:
+            failures += 1
+            print(f"{fn.__name__},FAILED,{e}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
+        dt = (time.perf_counter() - t0) * 1e6
+        print(f"bench.{fn.__name__}.us_per_call,{dt:.0f},wall")
+
+    if not args.skip_roofline and os.path.isdir(args.results):
+        try:
+            for name, value, derived in roofline.rows(args.results):
+                print(f"{name},{value},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"roofline,ERROR,{type(e).__name__}: {e}")
+
+    if failures:
+        print(f"bench.failures,{failures},", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+import os
+import sys
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+"""FSDP training with the paper's collectives on a (data=2, model=4) mesh.
+
+Runs the same step with fsdp_mode = xla (GSPMD-inserted all-gathers) and
+fsdp_mode = mcast (explicit bidirectional-ring broadcast-composed gathers,
+core/collectives.py) and verifies they produce identical numerics — the
+schedule is exchanged underneath an unchanged model.
+
+    python examples/fsdp_mcast_train.py        (sets 8 fake CPU devices itself)
+"""
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import (CollectiveConfig, MeshConfig, RunConfig, ShapeConfig,  # noqa: E402
+                           TrainConfig, get_model_config, reduced)
+from repro.data import SyntheticPipeline  # noqa: E402
+from repro.runtime import init_state  # noqa: E402
+from repro.runtime.train_loop import jit_train_step  # noqa: E402
+
+
+class DemoMesh(MeshConfig):
+    @property
+    def shape(self):
+        return (2, 4)
+
+    @property
+    def axes(self):
+        return ("data", "model")
+
+
+def main():
+    model = reduced(get_model_config("yi-9b"))
+    results = {}
+    for mode in ("xla", "mcast", "mcast_bcast"):
+        run = RunConfig(
+            model=model,
+            shape=ShapeConfig("t", "train", 128, 8),
+            mesh=DemoMesh(),
+            train=TrainConfig(steps=5, learning_rate=1e-2),
+            collective=CollectiveConfig(fsdp_mode=mode, n_chains=2),
+        )
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        api, jstep = jit_train_step(run, mesh)
+        state = init_state(run, mesh, jax.random.PRNGKey(0))
+        pipe = SyntheticPipeline(model, run.shape)
+        for i in range(5):
+            state, m = jstep(state, pipe.next_batch(i))
+        results[mode] = float(m["loss"])
+        print(f"fsdp_mode={mode:12s} step-5 loss = {results[mode]:.6f}")
+    base = results["xla"]
+    for mode, loss in results.items():
+        assert abs(loss - base) < 1e-5, (mode, loss, base)
+    print("all FSDP modes numerically identical — the paper's schedule is a "
+          "drop-in replacement for the XLA collectives")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end driver: train the REAL smollm-135m (~135M params) with the full
+stack — synthetic data pipeline, FSDP-capable train step, AdamW, checkpointing
+and fault-tolerant supervision — for a few hundred steps.
+
+On this 1-core CPU container a (batch=2, seq=64) step is ~2-4 s, so 200 steps
+is ~10 min; on real hardware use --batch/--seq/--steps at will.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 200
+"""
+import argparse
+
+import jax
+
+from repro.configs import RunConfig, ShapeConfig, TrainConfig, get_model_config
+from repro.data import SyntheticPipeline
+from repro.runtime import init_state, make_train_step
+from repro.runtime.fault import StragglerMonitor, TrainSupervisor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    model = get_model_config("smollm-135m")   # the real ~135M-param config
+    run = RunConfig(
+        model=model,
+        shape=ShapeConfig("t", "train", args.seq, args.batch),
+        train=TrainConfig(steps=args.steps, learning_rate=3e-4, warmup_steps=20,
+                          remat="none"),
+    )
+    api, ctx, step = make_train_step(run, None)
+    state = init_state(run, None, jax.random.PRNGKey(0))
+    n_params = sum(l.size for l in jax.tree.leaves(state.params))
+    print(f"[100m] smollm-135m: {n_params/1e6:.1f}M params, "
+          f"B={args.batch} S={args.seq}, {args.steps} steps")
+
+    pipe = SyntheticPipeline(model, run.shape)
+    sup = TrainSupervisor(
+        step_fn=jax.jit(step), pipeline=pipe, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, monitor=StragglerMonitor(threshold=4.0),
+    )
+    state, hist = sup.run(state, args.steps)
+    first = sum(h["loss"] for h in hist[:10]) / max(len(hist[:10]), 1)
+    last = sum(h["loss"] for h in hist[-10:]) / max(len(hist[-10:]), 1)
+    for h in hist:
+        if h["step"] % 25 == 0 or h["step"] == args.steps - 1:
+            print(f"step {h['step']:4d}  loss {h['loss']:.4f}  dt {h['dt']:.2f}s")
+    print(f"[100m] mean loss first-10 {first:.4f} -> last-10 {last:.4f} "
+          f"(descended: {last < first})")
+
+
+if __name__ == "__main__":
+    main()

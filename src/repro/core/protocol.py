@@ -1,0 +1,176 @@
+"""Reliable constant-time Broadcast protocol state machines (paper §III).
+
+These classes model the *logical* protocol exactly — segmentation with PSNs,
+receive-side staging ring, per-chunk bitmap, cutoff timer, fetch-ring
+recovery, RNR barrier, final handshake — independent of timing. The
+discrete-event timing lives in core/simulator.py; hypothesis property tests
+drive these machines directly with adversarial drop/reorder patterns.
+
+On TPU this layer applies to the switched inter-pod (DCN) axis; intra-pod ICI
+is reliable (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+MTU = 4096
+PSN_BITS = 24           # of the 32-bit CQE immediate (rest: collective id, Fig 7)
+IMM_BITS = 32
+
+
+@dataclass
+class Chunk:
+    psn: int
+    payload: bytes
+
+
+def segment(buffer: bytes, mtu: int = MTU) -> list[Chunk]:
+    """Zero-copy fragmentation at the root (§III-A): chunk PSN enumerates the
+    chunk within the send buffer and rides the 32-bit immediate."""
+    n = len(buffer)
+    n_chunks = -(-n // mtu) if n else 0
+    assert n_chunks < (1 << PSN_BITS), "PSN must fit the immediate (Fig 7)"
+    return [Chunk(i, buffer[i * mtu : (i + 1) * mtu]) for i in range(n_chunks)]
+
+
+def max_addressable_buffer(psn_bits: int, mtu: int = MTU) -> int:
+    """Fig 7: the receive buffer addressable with psn_bits of immediate."""
+    return (1 << psn_bits) * mtu
+
+
+def bitmap_bytes(buffer_bytes: int, mtu: int = MTU) -> int:
+    """Fig 7 / §III-D: one bit per chunk."""
+    return (-(-buffer_bytes // mtu) + 7) // 8
+
+
+@dataclass
+class Bitmap:
+    n_chunks: int
+    words: list[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.words = [0] * ((self.n_chunks + 63) // 64)
+
+    def set(self, psn: int) -> None:
+        assert 0 <= psn < self.n_chunks
+        self.words[psn >> 6] |= 1 << (psn & 63)
+
+    def get(self, psn: int) -> bool:
+        return bool(self.words[psn >> 6] >> (psn & 63) & 1)
+
+    def popcount(self) -> int:
+        return sum(w.bit_count() for w in self.words)
+
+    def complete(self) -> bool:
+        return self.popcount() == self.n_chunks
+
+    def missing(self) -> list[int]:
+        return [i for i in range(self.n_chunks) if not self.get(i)]
+
+
+@dataclass
+class StagingRing:
+    """Receive-side staging area (§III-B): chunks land here (tolerating
+    out-of-order arrival), then are copied to the user buffer at the offset
+    given by the PSN. Ring occupancy beyond capacity = RNR drop."""
+    capacity_chunks: int
+    occupied: int = 0
+    rnr_drops: int = 0
+
+    def arrive(self) -> bool:
+        if self.occupied >= self.capacity_chunks:
+            self.rnr_drops += 1
+            return False
+        self.occupied += 1
+        return True
+
+    def drain(self, k: int = 1) -> None:
+        assert self.occupied >= k
+        self.occupied -= k
+
+
+class LeafReceiver:
+    """Broadcast leaf datapath (§III-B/C): staging -> bitmap -> user buffer."""
+
+    def __init__(self, n_bytes: int, mtu: int = MTU, staging_chunks: int = 8192):
+        self.mtu = mtu
+        self.n_chunks = -(-n_bytes // mtu) if n_bytes else 0
+        self.user = bytearray(n_bytes)
+        self.bitmap = Bitmap(max(self.n_chunks, 1))
+        self.staging = StagingRing(staging_chunks)
+        self.duplicates = 0
+
+    def deliver(self, chunk: Chunk) -> bool:
+        """Fast path: a multicast datagram arrived (any order). Returns False
+        on RNR drop (staging full)."""
+        if not self.staging.arrive():
+            return False
+        if self.bitmap.get(chunk.psn):
+            self.duplicates += 1
+        else:
+            off = chunk.psn * self.mtu
+            self.user[off : off + len(chunk.payload)] = chunk.payload
+            self.bitmap.set(chunk.psn)
+        self.staging.drain()
+        return True
+
+    def fetch_recover(self, peers: list["LeafReceiver"], root_buffer: bytes) -> int:
+        """Slow path (§III-C): recursive zero-copy fetch along the ring. For
+        each missing chunk, walk left neighbors until a holder is found
+        (Broadcast root in the worst case). Returns hops*chunks traversed."""
+        cost = 0
+        for psn in self.bitmap.missing():
+            holder_payload = None
+            for hops, peer in enumerate(peers, start=1):
+                cost += 1
+                if peer.bitmap.get(psn):
+                    off = psn * self.mtu
+                    holder_payload = bytes(peer.user[off : off + self.mtu])
+                    break
+            if holder_payload is None:  # fell through to the root
+                off = psn * self.mtu
+                holder_payload = root_buffer[off : off + self.mtu]
+                cost += 1
+            self.user[psn * self.mtu : psn * self.mtu + len(holder_payload)] = (
+                holder_payload
+            )
+            self.bitmap.set(psn)
+        return cost
+
+    def complete(self) -> bool:
+        return self.bitmap.complete()
+
+
+def cutoff_time(n_bytes: int, b_link: float, alpha: float = 50e-6) -> float:
+    """§III-C: timeout = N/B_link + alpha (RNR sync + network noise)."""
+    return n_bytes / b_link + alpha
+
+
+def final_handshake_ok(completed: list[bool]) -> bool:
+    """All leaves completed -> every final packet sent+received in the ring."""
+    return all(completed)
+
+
+# --------------------------------------------------------- memory footprint
+
+
+def memory_footprint(n_bytes: int, *, mtu: int = MTU, staging_chunks: int = 1024,
+                     n_leaf_rc_qps: int = 2, ctx_bytes: int = 16 << 10) -> dict:
+    """§III-D: protocol state per communicator."""
+    return {
+        "staging_bytes": staging_chunks * mtu,
+        "bitmap_bytes": bitmap_bytes(n_bytes, mtu),
+        "rc_qps": n_leaf_rc_qps,
+        "ud_qps": 1,
+        "context_bytes": ctx_bytes,
+    }
+
+
+def communicators_in_llc(llc_bytes: int = int(1.5e6), recvbuf_bytes: int = 16 << 30,
+                         ctx_bytes: int = 16 << 10,
+                         tracked_chunk: int = 32 << 10) -> int:
+    """§III-D(d): how many communicators fit the DPA LLC (paper: >16 with
+    64 KiB bitmaps for 16 GB receive buffers — which implies the bitmap tracks
+    32 KiB multi-packet UC chunks, not single 4 KiB MTUs; Fig. 15)."""
+    per = bitmap_bytes(recvbuf_bytes, tracked_chunk) + ctx_bytes
+    return llc_bytes // per

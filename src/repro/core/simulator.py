@@ -1,0 +1,252 @@
+"""Discrete-event timing simulator for the reliable multicast Broadcast /
+Allgather protocol (paper §III/§IV/§VI).
+
+Models, per chunk: root injection at send-link rate, fabric latency + adaptive
+-routing jitter (out-of-order delivery), Bernoulli fabric drops, the leaf
+worker pool (CPU or DPA threads; service = chunk/thread_tput), staging-ring
+occupancy (RNR drops), cutoff timer, fetch-ring recovery, RNR barrier and the
+final ring handshake. Produces the phase breakdown of Fig. 10, the throughput
+curves of Fig. 11 and the drop-recovery behaviour the property tests verify.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import schedule as sched
+
+
+@dataclass(frozen=True)
+class FabricParams:
+    b_link: float = 200e9 / 8       # bytes/s per direction
+    latency: float = 2e-6           # base one-way latency
+    jitter: float = 1e-6            # max extra delay (adaptive routing, OOO)
+    p_drop: float = 0.0             # per-datagram fabric drop probability
+    mtu: int = 4096
+    alpha: float = 50e-6            # cutoff-timer slack
+
+
+@dataclass(frozen=True)
+class WorkerParams:
+    n_recv_workers: int = 1
+    thread_tput: float = 5.2 * (1 << 30)   # bytes/s per worker (Table I UD)
+    staging_chunks: int = 8192
+    rnr_barrier_hop: float = 1.5e-6
+
+
+@dataclass
+class PhaseBreakdown:
+    rnr_sync: float = 0.0
+    multicast: float = 0.0
+    reliability: float = 0.0
+    handshake: float = 0.0
+
+    def total(self) -> float:
+        return self.rnr_sync + self.multicast + self.reliability + self.handshake
+
+
+@dataclass
+class BcastResult:
+    completion: np.ndarray            # per-leaf completion time (s)
+    phases: PhaseBreakdown
+    delivered_fast: int
+    recovered: int
+    rnr_drops: int
+    bytes_fast: int
+    bytes_recovery: int
+
+    @property
+    def time(self) -> float:
+        return float(self.completion.max(initial=0.0))
+
+
+def _worker_pool_completion(arrivals: np.ndarray, n_workers: int, service: float,
+                            staging: int) -> tuple[np.ndarray, int]:
+    """Completion times of a T-server queue with deterministic service; also
+    counts staging-overflow (RNR) drops. arrivals must be sorted."""
+    n = arrivals.shape[0]
+    done = np.empty(n)
+    rnr = 0
+    for k in range(n):
+        start = arrivals[k] if k < n_workers else max(arrivals[k], done[k - n_workers])
+        # staging occupancy at this arrival: arrived-but-not-processed
+        if k >= staging and done[k - staging] > arrivals[k]:
+            rnr += 1
+        done[k] = start + service
+    return done, rnr
+
+
+def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
+                       workers: WorkerParams, rng: np.random.Generator,
+                       root: int = 0) -> BcastResult:
+    n_chunks = max(-(-n_bytes // fabric.mtu), 1)
+    chunk = min(fabric.mtu, n_bytes) if n_bytes else fabric.mtu
+
+    # RNR barrier: recursive doubling (§V-A)
+    rnr_rounds = int(np.ceil(np.log2(max(p, 2))))
+    t_rnr = rnr_rounds * (fabric.latency + workers.rnr_barrier_hop)
+
+    inject = t_rnr + (np.arange(n_chunks) + 1) * (chunk / fabric.b_link)
+    service = chunk / workers.thread_tput
+
+    completion = np.zeros(p)
+    recovered_total = 0
+    rnr_total = 0
+    fast_total = 0
+    t_mcast_end = t_rnr
+    t_rel_end = 0.0
+    leaf_missing: dict[int, np.ndarray] = {}
+
+    cutoff = t_rnr + n_bytes / fabric.b_link + fabric.alpha
+
+    for leaf in range(p):
+        if leaf == root:
+            completion[leaf] = inject[-1]
+            continue
+        delay = fabric.latency + rng.uniform(0.0, fabric.jitter, size=n_chunks)
+        dropped = rng.random(n_chunks) < fabric.p_drop
+        arrivals = np.sort((inject + delay)[~dropped])
+        done, rnr = _worker_pool_completion(
+            arrivals, workers.n_recv_workers, service, workers.staging_chunks
+        )
+        rnr_total += rnr
+        fast = n_chunks - int(dropped.sum()) - rnr
+        fast_total += fast
+        t_fast = done[-1] if done.size else t_rnr
+        missing = int(dropped.sum()) + rnr
+        if missing:
+            # fetch ring (§III-C): wait for cutoff, then selective RDMA reads
+            # from the left neighbour (holder is >= left neighbour or root).
+            t0 = max(t_fast, cutoff)
+            t_fetch = t0 + missing * (2 * fabric.latency + chunk / fabric.b_link)
+            recovered_total += missing
+            completion[leaf] = t_fetch
+            t_rel_end = max(t_rel_end, t_fetch - t0)
+        else:
+            completion[leaf] = t_fast
+        t_mcast_end = max(t_mcast_end, t_fast)
+
+    # final handshake: send final to left, need final from right (§III-C)
+    shifted = np.roll(completion, -1)
+    completion = np.maximum(completion, shifted) + fabric.latency
+
+    phases = PhaseBreakdown(
+        rnr_sync=t_rnr,
+        multicast=t_mcast_end - t_rnr,
+        reliability=t_rel_end,
+        handshake=fabric.latency,
+    )
+    return BcastResult(
+        completion=completion,
+        phases=phases,
+        delivered_fast=fast_total,
+        recovered=recovered_total,
+        rnr_drops=rnr_total,
+        bytes_fast=fast_total * chunk,
+        bytes_recovery=recovered_total * chunk,
+    )
+
+
+@dataclass
+class AllgatherResult:
+    time: float
+    phases: PhaseBreakdown
+    recovered: int
+    bytes_fast: int
+    bytes_recovery: int
+    per_rank_recv_tput: float         # (P-1)*N / time  (Fig. 11 metric)
+
+
+def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
+                       workers: WorkerParams, rng: np.random.Generator,
+                       n_chains: int = 1) -> AllgatherResult:
+    """Allgather = R sequential rounds of M concurrent Broadcasts (§IV-A).
+    Within a round the M chain roots multicast concurrently; the leaf receive
+    path (link + worker pool) is the shared bottleneck; rounds are chained by
+    the activation signal."""
+    assert p % n_chains == 0
+    rounds = p // n_chains
+    n_chunks = max(-(-n_bytes // fabric.mtu), 1)
+    chunk = min(fabric.mtu, n_bytes) if n_bytes else fabric.mtu
+    service = chunk / workers.thread_tput
+
+    rnr_rounds = int(np.ceil(np.log2(max(p, 2))))
+    t_rnr = rnr_rounds * (fabric.latency + workers.rnr_barrier_hop)
+
+    t = t_rnr
+    recovered_total = 0
+    fast_bytes = 0
+    rec_bytes = 0
+    mcast_time = 0.0
+    rel_time = 0.0
+    for r in range(rounds):
+        m = n_chains
+        total_chunks = m * n_chunks
+        # merged arrival stream at the leaf: m roots inject concurrently;
+        # leaf ingest capped by the receive link
+        rate = min(fabric.b_link, m * fabric.b_link) / chunk  # chunks/s in
+        inject = t + (np.arange(total_chunks) + 1) / (m * fabric.b_link / chunk)
+        arrive_spacing = np.maximum.accumulate(
+            np.maximum(inject, t + (np.arange(total_chunks) + 1) / rate)
+        )
+        delay = fabric.latency + rng.uniform(0.0, fabric.jitter, size=total_chunks)
+        dropped = rng.random(total_chunks) < fabric.p_drop
+        arrivals = np.sort((arrive_spacing + delay)[~dropped])
+        done, rnr = _worker_pool_completion(
+            arrivals, workers.n_recv_workers, service, workers.staging_chunks
+        )
+        t_fast = done[-1] if done.size else t
+        missing = int(dropped.sum()) + rnr
+        cutoff = t + m * n_bytes / fabric.b_link + fabric.alpha
+        t_round_end = t_fast
+        if missing:
+            t0 = max(t_fast, cutoff)
+            t_round_end = t0 + missing * (2 * fabric.latency + chunk / fabric.b_link)
+            rel_time += t_round_end - t0
+            recovered_total += missing
+        mcast_time += max(t_fast - t, 0.0)
+        fast_bytes += (total_chunks - missing) * chunk
+        rec_bytes += missing * chunk
+        # activation signal to the next root in every chain
+        t = t_round_end + fabric.latency
+
+    t_done = t + fabric.latency  # final handshake
+    phases = PhaseBreakdown(
+        rnr_sync=t_rnr, multicast=mcast_time, reliability=rel_time,
+        handshake=fabric.latency,
+    )
+    total = (p - 1) * n_bytes
+    return AllgatherResult(
+        time=t_done,
+        phases=phases,
+        recovered=recovered_total,
+        bytes_fast=fast_bytes,
+        bytes_recovery=rec_bytes,
+        per_rank_recv_tput=total / t_done,
+    )
+
+
+def sweep_phase_breakdown(sizes: list[int], nodes: list[int],
+                          fabric: FabricParams | None = None,
+                          workers: WorkerParams | None = None,
+                          seed: int = 0):
+    """Fig. 10: fraction of protocol time per phase across scale/message size."""
+    fabric = fabric or FabricParams(b_link=56e9 / 8)   # UCC testbed: 56 Gbit CX-3
+    workers = workers or WorkerParams(n_recv_workers=1, thread_tput=9.0 * (1 << 30))
+    out = []
+    rng = np.random.default_rng(seed)
+    for p in nodes:
+        for n in sizes:
+            res = simulate_allgather(p, n, fabric, workers, rng)
+            ph = res.phases
+            tot = ph.total()
+            out.append({
+                "nodes": p, "bytes": n,
+                "rnr_frac": ph.rnr_sync / tot,
+                "mcast_frac": ph.multicast / tot,
+                "reliability_frac": ph.reliability / tot,
+                "handshake_frac": ph.handshake / tot,
+                "time": res.time,
+            })
+    return out

@@ -1,0 +1,173 @@
+"""Network topologies with per-link byte counters.
+
+Used to *measure* (by counting, the software analogue of the paper's switch
+port counters, Fig. 12) the traffic of P2P vs multicast collective schedules:
+
+  - FatTree: 3-level full fat-tree of radix-k switches (paper's testbed shape;
+    Fig. 2 models 1024 nodes / radix 32). Unicast routes are deterministic
+    up-down ECMP; multicast routes are spanning trees rooted at the core.
+  - Torus2D: the TPU ICI analogue; ring/bidirectional neighbor links.
+
+All counting is exact integer bytes; "bandwidth-optimal" on the fat-tree means
+every byte of every send buffer crosses any link at most once (Insight 1).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+
+@dataclass
+class LinkCounters:
+    bytes_by_link: dict[tuple[str, str], int] = field(default_factory=lambda: defaultdict(int))
+
+    def add(self, a: str, b: str, n: int) -> None:
+        self.bytes_by_link[(a, b)] += n
+
+    def total(self) -> int:
+        return sum(self.bytes_by_link.values())
+
+    def max_link(self) -> int:
+        return max(self.bytes_by_link.values(), default=0)
+
+    def switch_port_total(self) -> int:
+        """Sum over all switch ports (paper Fig. 12 counts switch port counters:
+        every directed link endpoint at a switch counts its traffic)."""
+        return self.total()
+
+
+class FatTree:
+    """Full 3-level fat-tree, radix ``k``: k pods, k/2 edge + k/2 agg switches
+    per pod, (k/2)^2 cores, (k/2)^2 hosts per pod. Host ids are 0..n_hosts-1.
+    """
+
+    def __init__(self, k: int, n_hosts: int | None = None):
+        assert k % 2 == 0
+        self.k = k
+        self.max_hosts = k * (k // 2) ** 2
+        self.n_hosts = n_hosts or self.max_hosts
+        assert self.n_hosts <= self.max_hosts
+        self.counters = LinkCounters()
+
+    # --- naming -----------------------------------------------------------
+    def host(self, h: int) -> str:
+        return f"h{h}"
+
+    def edge_of(self, h: int) -> str:
+        pod, esw = self._loc(h)
+        return f"e{pod}.{esw}"
+
+    def _loc(self, h: int) -> tuple[int, int]:
+        per_pod = (self.k // 2) ** 2
+        pod = h // per_pod
+        esw = (h % per_pod) // (self.k // 2)
+        return pod, esw
+
+    def agg(self, pod: int, a: int) -> str:
+        return f"a{pod}.{a}"
+
+    def core(self, c: int) -> str:
+        return f"c{c}"
+
+    # --- deterministic ECMP up-down route ----------------------------------
+    def route(self, src: int, dst: int) -> list[tuple[str, str]]:
+        if src == dst:
+            return []
+        sp, se = self._loc(src)
+        dp, de = self._loc(dst)
+        h2 = self.k // 2
+        path = [(self.host(src), self.edge_of(src))]
+        if sp == dp and se == de:
+            path.append((self.edge_of(src), self.host(dst)))
+            return path
+        # hash-based ECMP choice, deterministic on (src, dst)
+        a = (src + dst) % h2
+        if sp == dp:
+            path.append((self.edge_of(src), self.agg(sp, a)))
+            path.append((self.agg(sp, a), f"e{dp}.{de}"))
+        else:
+            c = (src * 31 + dst) % (h2 * h2)
+            path.append((self.edge_of(src), self.agg(sp, a)))
+            path.append((self.agg(sp, a), self.core(c)))
+            path.append((self.core(c), self.agg(dp, c // h2)))
+            path.append((self.agg(dp, c // h2), f"e{dp}.{de}"))
+        path.append((f"e{dp}.{de}", self.host(dst)))
+        return path
+
+    def unicast(self, src: int, dst: int, nbytes: int) -> None:
+        for a, b in self.route(src, dst):
+            self.counters.add(a, b, nbytes)
+
+    # --- multicast spanning tree -------------------------------------------
+    def multicast_tree(self, root: int, members: list[int]) -> set[tuple[str, str]]:
+        """Edges of the multicast distribution tree: root -> its edge switch ->
+        (agg -> core as needed) -> down to every member's edge switch -> hosts.
+        Each fabric link appears once — this is the hardware multicast
+        replication the switches perform."""
+        edges: set[tuple[str, str]] = set()
+        rp, _ = self._loc(root)
+        h2 = self.k // 2
+        up_agg = self.agg(rp, root % h2)
+        core = self.core((root * 31) % (h2 * h2))
+        pods = {self._loc(m)[0] for m in members if m != root}
+        edges.add((self.host(root), self.edge_of(root)))
+        cross_pod = any(p != rp for p in pods)
+        same_pod_other_edge = any(
+            self._loc(m)[0] == rp and self.edge_of(m) != self.edge_of(root)
+            for m in members if m != root
+        )
+        if cross_pod or same_pod_other_edge:
+            edges.add((self.edge_of(root), up_agg))
+        if cross_pod:
+            edges.add((up_agg, core))
+        for m in members:
+            if m == root:
+                continue
+            mp, me = self._loc(m)
+            if mp == rp:
+                if self.edge_of(m) != self.edge_of(root):
+                    edges.add((up_agg, f"e{mp}.{me}"))
+            else:
+                down_agg = self.agg(mp, (root * 31) % (h2 * h2) // h2)
+                edges.add((core, down_agg))
+                edges.add((down_agg, f"e{mp}.{me}"))
+            edges.add((f"e{mp}.{me}", self.host(m)))
+        return edges
+
+    def multicast(self, root: int, members: list[int], nbytes: int) -> None:
+        for a, b in self.multicast_tree(root, members):
+            self.counters.add(a, b, nbytes)
+
+    def reset(self) -> None:
+        self.counters = LinkCounters()
+
+
+class Torus2D:
+    """2-D torus with bidirectional neighbor links (TPU ICI analogue)."""
+
+    def __init__(self, nx: int, ny: int):
+        self.nx, self.ny = nx, ny
+        self.counters = LinkCounters()
+
+    def node(self, x: int, y: int) -> str:
+        return f"t{x % self.nx}.{y % self.ny}"
+
+    def ring_x_link(self, x: int, y: int, direction: int = +1) -> tuple[str, str]:
+        return (self.node(x, y), self.node(x + direction, y))
+
+    def send_ring_x(self, x: int, y: int, nbytes: int, direction: int = +1) -> None:
+        a, b = self.ring_x_link(x, y, direction)
+        self.counters.add(a, b, nbytes)
+
+    def ring_allgather_traffic(self, axis_len: int, shard_bytes: int, *, bidi: bool) -> None:
+        """Count per-link bytes for a ring allgather over the x axis rings."""
+        per_dir = shard_bytes // (2 if bidi else 1)
+        for y in range(self.ny):
+            for step in range(axis_len - 1 if not bidi else (axis_len - 1 + 1) // 2):
+                for x in range(self.nx):
+                    self.send_ring_x(x, y, per_dir, +1)
+                    if bidi:
+                        self.send_ring_x(x, y, per_dir, -1)
+
+    def reset(self) -> None:
+        self.counters = LinkCounters()

@@ -1,0 +1,91 @@
+"""Deterministic synthetic data pipeline.
+
+Generates a reproducible token stream (and stub frame/patch embeddings) per
+(seed, step), sharded across hosts: each host materializes only its slice of
+the global batch and the global array is assembled with
+``jax.make_array_from_callback``. Determinism across restarts is what lets
+checkpoint/restart resume mid-stream (runtime/fault.py) — the step index is
+the only data-pipeline state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import batch_dims
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    # markov-ish structure so the loss has signal to descend on
+    n_states: int = 64
+
+
+class SyntheticPipeline:
+    """next_batch(step) -> dict of jnp/global arrays for the (model, shape) cell."""
+
+    def __init__(self, model: ModelConfig, shape: ShapeConfig,
+                 data: DataConfig = DataConfig(), sharding=None):
+        self.model = model
+        self.shape = shape
+        self.data = data
+        self.sharding = sharding  # dict name -> jax.sharding.Sharding | None
+        self.dims = batch_dims(model, shape)
+
+    def _host_tokens(self, step: int, lo: int, hi: int, seq: int) -> np.ndarray:
+        """Deterministic pseudo-text: a noisy periodic walk over the vocab."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.data.seed, step, lo])
+        )
+        b = hi - lo
+        v = self.model.vocab_size
+        base = rng.integers(0, self.data.n_states, size=(b, 1))
+        drift = np.cumsum(rng.integers(0, 3, size=(b, seq)), axis=1)
+        noise = rng.integers(0, 2, size=(b, seq))
+        return ((base + drift + noise) % v).astype(np.int32)
+
+    def _full(self, name: str, step: int) -> np.ndarray:
+        shp = self.dims[name]
+        if name in ("tokens", "targets", "token"):
+            seq = shp[1] if len(shp) > 1 else 1
+            toks = self._host_tokens(step, 0, shp[0], seq + 1)
+            if name == "targets":
+                out = toks[:, 1 : seq + 1]
+                if self.model.family == "vlm":
+                    np_ = self.model.vision.n_patches
+                    pad = np.full((shp[0], np_), -1, np.int32)
+                    out = np.concatenate([pad, out[:, : shp[1] - np_]], axis=1)
+                return out[:, : shp[1]] if out.ndim > 1 else out[:, 0]
+            out = toks[:, :seq]
+            return out if len(shp) > 1 else out[:, 0]
+        if name == "pos":
+            return np.zeros(shp, np.int32)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.data.seed, step, hash(name) & 0xFFFF])
+        )
+        return (rng.standard_normal(shp) * 0.02).astype(np.float32)
+
+    def next_batch(self, step: int) -> dict[str, jax.Array]:
+        out = {}
+        for name in self.dims:
+            arr = self._full(name, step)
+            if self.sharding and self.sharding.get(name) is not None:
+                sh = self.sharding[name]
+                out[name] = jax.make_array_from_callback(
+                    arr.shape, sh, lambda idx, a=arr: a[idx]
+                )
+            else:
+                dt = jnp.int32 if arr.dtype == np.int32 else None
+                out[name] = jnp.asarray(arr, dtype=dt)
+                if arr.dtype != np.int32:
+                    out[name] = out[name].astype(
+                        {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[
+                            self.model.compute_dtype
+                        ]
+                    )
+        return out

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the data-movement hot spots the paper offloads:
+#   chunk_reassembly — the DPA receive datapath (Appendix C) as a TPU kernel
+#   collective_matmul — allgather-fused MXU matmul (latency hiding)
+#   bitmap — reliability-state pack/popcount
+# Validated on CPU via interpret=True against the pure-jnp oracles in ref.py.
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

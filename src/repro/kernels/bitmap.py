@@ -1,0 +1,80 @@
+"""Bitmap kernels — the protocol's reliability state (paper §III-C, Fig. 7).
+
+The bitmap is the only protocol state that grows with the receive buffer
+(1 bit per MTU chunk; 1.5 MB LLC addresses ~50 GB). Two kernels:
+
+  - ``bitmap_pack``: pack per-chunk received flags (u32 0/1) into u32 words
+    (32 chunks/word), tiled so each grid step packs a VMEM block.
+  - ``bitmap_popcount``: count set bits per word block (completeness check —
+    the "all chunks received -> final handshake" predicate).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(flags_ref, words_ref):
+    f = flags_ref[...]                       # (bw, 32) u32 0/1
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, f.shape, 1)
+    words_ref[...] = jnp.sum(f << shifts, axis=1, dtype=jnp.uint32)[:, None]
+
+
+def bitmap_pack(flags: jax.Array, *, block_words: int = 256,
+                interpret: bool | None = None) -> jax.Array:
+    """flags (n,) uint32 in {0,1}, n % 32 == 0 -> packed (n/32,) uint32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = flags.shape[0]
+    assert n % 32 == 0
+    nw = n // 32
+    bw = min(block_words, nw)
+    assert nw % bw == 0
+    f2 = flags.reshape(nw, 32)
+    packed = pl.pallas_call(
+        _pack_kernel,
+        grid=(nw // bw,),
+        in_specs=[pl.BlockSpec((bw, 32), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bw, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nw, 1), jnp.uint32),
+        interpret=interpret,
+    )(f2)
+    return packed[:, 0]
+
+
+def _popcount_kernel(words_ref, out_ref):
+    w = words_ref[...].astype(jnp.uint32)
+    # SWAR popcount
+    w = w - ((w >> 1) & jnp.uint32(0x55555555))
+    w = (w & jnp.uint32(0x33333333)) + ((w >> 2) & jnp.uint32(0x33333333))
+    w = (w + (w >> 4)) & jnp.uint32(0x0F0F0F0F)
+    cnt = (w * jnp.uint32(0x01010101)) >> 24
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = jnp.uint32(0)
+
+    out_ref[0, 0] += jnp.sum(cnt, dtype=jnp.uint32)
+
+
+def bitmap_popcount(words: jax.Array, *, block: int = 1024,
+                    interpret: bool | None = None) -> jax.Array:
+    """Total set bits across packed u32 words (scalar uint32)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = words.shape[0]
+    b = min(block, n)
+    assert n % b == 0
+    out = pl.pallas_call(
+        _popcount_kernel,
+        grid=(n // b,),
+        in_specs=[pl.BlockSpec((b, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.uint32),
+        interpret=interpret,
+    )(words[:, None])
+    return out[0, 0]

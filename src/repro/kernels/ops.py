@@ -1,0 +1,31 @@
+"""Jitted public wrappers for the Pallas kernels (interpret=True on CPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.bitmap import bitmap_pack, bitmap_popcount
+from repro.kernels.chunk_reassembly import chunk_reassembly
+from repro.kernels.collective_matmul import (
+    allgather_matmul_local,
+    make_allgather_matmul,
+    matmul_pallas,
+)
+
+reassemble = jax.jit(chunk_reassembly, static_argnames=("interpret",))
+matmul = jax.jit(
+    matmul_pallas, static_argnames=("bm", "bk", "bn", "interpret")
+)
+pack_bitmap = jax.jit(bitmap_pack, static_argnames=("block_words", "interpret"))
+popcount = jax.jit(bitmap_popcount, static_argnames=("block", "interpret"))
+
+__all__ = [
+    "allgather_matmul_local",
+    "make_allgather_matmul",
+    "matmul",
+    "matmul_pallas",
+    "pack_bitmap",
+    "popcount",
+    "reassemble",
+]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_reassembly_ref(staging, psn, user, n_valid=None):
+    n_staged = staging.shape[0]
+    if n_valid is None:
+        n_valid = n_staged
+    valid = jnp.arange(n_staged) < n_valid
+    # emulate sequential writes (later duplicates win)
+    psn_eff = jnp.where(valid, psn, user.shape[0])  # invalid -> dropped (OOB)
+    user_out = user.at[psn_eff].set(staging, mode="drop")
+    bitmap = jnp.zeros((user.shape[0],), jnp.uint32).at[psn_eff].set(
+        jnp.uint32(1), mode="drop"
+    )
+    return user_out, bitmap
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def allgather_matmul_ref(x_full, w):
+    """x_full: the already-gathered (M, K)."""
+    return matmul_ref(x_full, w)
+
+
+def bitmap_pack_ref(flags):
+    nw = flags.shape[0] // 32
+    f = flags.reshape(nw, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+    return jnp.sum(f << shifts, axis=1, dtype=jnp.uint32)
+
+
+def bitmap_popcount_ref(words):
+    bits = (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :]) & 1
+    return jnp.sum(bits, dtype=jnp.uint32)

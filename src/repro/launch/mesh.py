@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+make_production_mesh() is a FUNCTION (not module-level state) so importing
+this module never touches jax device initialization. The dry-run entry point
+(launch/dryrun.py) sets XLA_FLAGS for 512 placeholder devices before any jax
+import; everything else (tests, benches) sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def describe(mesh: jax.sharding.Mesh) -> dict:
+    return {
+        "shape": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_devices": mesh.devices.size,
+        "platform": mesh.devices.reshape(-1)[0].platform,
+    }

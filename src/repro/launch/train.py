@@ -1,0 +1,107 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch smollm-135m --steps 100 --smoke
+    python -m repro.launch.train --arch yi-9b --shape train_4k \
+        --mesh production [--multi-pod] --fsdp-mode mcast
+
+--smoke runs the reduced config of the arch on the local devices (CPU-friendly
+end-to-end: data pipeline -> FSDP train step -> checkpoint/restart supervisor).
+On a real multi-host fleet, set JAX_COORDINATOR/process env and pass
+--distributed to jax.distributed.initialize() before mesh construction.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + local devices (CPU demo)")
+    ap.add_argument("--mesh", default="local", choices=["local", "production"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fsdp-mode", default="xla")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--batch", type=int, default=0, help="override global batch")
+    ap.add_argument("--seq", type=int, default=0, help="override seq len")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--distributed", action="store_true")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    from repro.configs import (SHAPES, ShapeConfig, TrainConfig, get_model_config,
+                               make_run_config, reduced)
+    from repro.data import SyntheticPipeline
+    from repro.runtime import init_state, make_train_step
+    from repro.runtime.fault import TrainSupervisor
+
+    run = make_run_config(args.arch, args.shape, multi_pod=args.multi_pod)
+    model = run.model
+    shape = run.shape
+    if args.smoke:
+        model = reduced(model)
+        shape = ShapeConfig(shape.name, shape.kind, args.seq or 128, args.batch or 8)
+    elif args.batch or args.seq:
+        shape = ShapeConfig(
+            shape.name, shape.kind, args.seq or shape.seq_len,
+            args.batch or shape.global_batch,
+        )
+    run = run.replace(
+        model=model, shape=shape,
+        train=TrainConfig(
+            steps=args.steps, grad_accum=args.grad_accum, remat=args.remat,
+            checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
+        ),
+        collective=dataclasses.replace(run.collective, fsdp_mode=args.fsdp_mode),
+    )
+
+    mesh = None
+    if args.mesh == "production":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    elif jax.device_count() > 1:
+        n = jax.device_count()
+        dp = max(1, n // 2)
+        mesh = jax.make_mesh((dp, n // dp), ("data", "model"))
+
+    print(f"[train] {model.name} shape={shape.name} B={shape.global_batch} "
+          f"S={shape.seq_len} devices={jax.device_count()} "
+          f"fsdp={args.fsdp_mode}", flush=True)
+
+    if mesh is not None:
+        from repro.runtime.train_loop import jit_train_step
+
+        api, step_fn = jit_train_step(run, mesh)
+    else:
+        api, ctx, step_raw = make_train_step(run, None)
+        step_fn = jax.jit(step_raw)
+
+    state = init_state(run, mesh, jax.random.PRNGKey(run.train.seed))
+    pipe = SyntheticPipeline(model, shape)
+    sup = TrainSupervisor(
+        step_fn=step_fn, pipeline=pipe, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+    )
+    state, history = sup.run(state, args.steps)
+    for h in history:
+        if h["step"] % args.log_every == 0 or h["step"] == args.steps - 1:
+            print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+                  f"gnorm {h.get('grad_norm', 0):.3f} dt {h['dt']*1e3:.0f}ms",
+                  flush=True)
+    print(f"[train] done; stragglers flagged: {len(sup.monitor.events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Fine-grained Mixture-of-Experts (DeepSeekMoE / Moonlight style).
+
+Token-choice top-k routing with GShard-style capacity dropping, expressed as
+static-shape gather/scatter so it lowers cleanly under pjit:
+
+  router -> top_k(gates) -> position-in-expert (cumsum) -> capacity drop
+  -> dispatch gather (E, C, D) -> per-expert FFN einsum -> combine scatter-add.
+
+Experts are sharded over the ``model`` mesh axis (EP); the dispatch/combine
+gathers become the EP collective traffic the paper's scheduler interleaves
+with the FSDP allgather/reduce-scatter streams.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def moe_init(rng, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    fe = m.d_ff_expert
+    kr, ks, kg = jax.random.split(rng, 3)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(fe)
+    k1, k2, k3 = jax.random.split(kr, 3)
+    p = {
+        "router": (jax.random.normal(kg, (d, m.n_routed_experts)) * s_in).astype(
+            jnp.float32
+        ),
+        "w_gate": (jax.random.normal(k1, (m.n_routed_experts, d, fe)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (m.n_routed_experts, d, fe)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (m.n_routed_experts, fe, d)) * s_out).astype(dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = layers.mlp_init(ks, d, fe * m.n_shared_experts, "swiglu", dtype)
+    return p
+
+
+def moe_param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    m = cfg.moe
+    n_routed = m.top_k if active_only else m.n_routed_experts
+    routed = n_routed * 3 * cfg.d_model * m.d_ff_expert
+    shared = 3 * cfg.d_model * m.d_ff_expert * m.n_shared_experts
+    router = cfg.d_model * m.n_routed_experts
+    return routed + shared + router
+
+
+def moe_apply(p, x: jax.Array, cfg: ModelConfig, *, no_drop: bool = False):
+    """x: (B, S, D) -> (out (B, S, D), aux_metrics dict).
+
+    ``no_drop=True`` (decode path): capacity = T so routing never drops —
+    single-token decode must be exact, not capacity-truncated.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.n_routed_experts, m.top_k
+    cap = t if no_drop else int(np.ceil(t * k / e * m.capacity_factor))
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    if m.routing_groups and m.routing_groups > 1:
+        # device-limited routing (DeepSeek-V3 style): keep only the top
+        # ``routing_group_topk`` expert groups per token, bounding cross-EP
+        # dispatch copies per token by the group count.
+        g = m.routing_groups
+        gs = e // g
+        grp = probs.reshape(t, g, gs)
+        # group score = sum of top-2 experts within the group
+        top2 = jax.lax.top_k(grp, min(2, gs))[0].sum(-1)          # (T, g)
+        _, gsel = jax.lax.top_k(top2, m.routing_group_topk)        # (T, G_act)
+        gmask = jnp.zeros((t, g), bool).at[
+            jnp.arange(t)[:, None], gsel
+        ].set(True)
+        probs = (grp * gmask[..., None]).reshape(t, e)
+    gates, expert_idx = jax.lax.top_k(probs, k)          # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert, in token order
+    flat_e = expert_idx.reshape(t * k)                    # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)   # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1             # (T*k, E)
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap
+
+    # dispatch table: slot (E*C) -> source token id (+ validity)
+    dest = flat_e * cap + jnp.where(keep, pos, 0)
+    token_id = jnp.repeat(jnp.arange(t), k)
+    disp_tok = jnp.zeros((e * cap,), jnp.int32).at[dest].set(
+        jnp.where(keep, token_id, 0), mode="drop"
+    )
+    disp_valid = jnp.zeros((e * cap,), jnp.bool_).at[dest].set(keep, mode="drop")
+    disp_gate = jnp.zeros((e * cap,), jnp.float32).at[dest].set(
+        jnp.where(keep, gates.reshape(t * k), 0.0), mode="drop"
+    )
+
+    xs = jnp.take(xt, disp_tok, axis=0)                   # (E*C, D)
+    xs = jnp.where(disp_valid[:, None], xs, 0).reshape(e, cap, d)
+
+    dt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", xs, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xs, p["w_up"].astype(dt))
+    ys = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"].astype(dt))
+    ys = ys.reshape(e * cap, d) * disp_gate[:, None].astype(dt)
+
+    out = jnp.zeros((t, d), dt).at[disp_tok].add(
+        jnp.where(disp_valid[:, None], ys, 0)
+    )
+
+    if m.n_shared_experts:
+        out = out + layers.mlp_apply(p["shared"], xt, "swiglu")
+
+    # aux losses (Switch-style load balance + router z-loss)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=(0, 1)
+    )  # mean over (T, k)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    zloss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    metrics = {
+        "moe_aux": aux * m.router_aux_coef,
+        "moe_zloss": zloss * m.router_z_coef,
+        "moe_drop_frac": dropped,
+    }
+    return out.reshape(b, s, d), metrics

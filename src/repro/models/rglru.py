@@ -1,0 +1,114 @@
+"""RecurrentGemma / Griffin building blocks: RG-LRU recurrent block with
+temporal conv, gated branches; local-attention blocks live in attention.py.
+
+RG-LRU (diagonal linear recurrence, associative-scan friendly):
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(lam) * r_t)                 (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Decode is a single-step update: state = h (B, lru_width) + conv tail — O(1)
+per token, which is what lets long_500k run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+RGLRU_C = 8.0
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None):
+    """h_t = a_t h_{t-1} + b_t along axis 1. a,b: (B,S,W). Returns (h (B,S,W), h_last)."""
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv along seq. x (B,S,W), w (K,W), tail (B,K-1,W) or None.
+    Returns (y (B,S,W), new_tail (B,K-1,W))."""
+    kw = w.shape[0]
+    pad = (
+        jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype) if tail is None else tail
+    )
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, W)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(kw)
+    ) + b.astype(x.dtype)
+    new_tail = xp[:, -(kw - 1) :] if kw > 1 else jnp.zeros_like(pad)
+    return y, new_tail
+
+
+def rec_block_init(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.rglru.lru_width
+    kw = cfg.rglru.conv_width
+    ks = jax.random.split(rng, 8)
+    s = 1.0 / np.sqrt(d)
+    sw = 1.0 / np.sqrt(w)
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "w_gate_in": (jax.random.normal(ks[0], (d, w)) * s).astype(dtype),
+        "w_rec_in": (jax.random.normal(ks[1], (d, w)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (kw, w)) * sw).astype(dtype),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "lru_a_gate": (jax.random.normal(ks[3], (w, w)) * sw).astype(dtype),
+        "lru_a_bias": jnp.zeros((w,), jnp.float32),
+        "lru_x_gate": (jax.random.normal(ks[4], (w, w)) * sw).astype(dtype),
+        "lru_x_bias": jnp.zeros((w,), jnp.float32),
+        # lambda parametrized so a^2 is uniform-ish in (0.9, 0.999) at r=1
+        "lru_lam": (jax.random.uniform(ks[5], (w,)) * 2.0 + 2.0).astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[6], (w, d)) * sw).astype(dtype),
+    }
+
+
+def rec_block_param_count(cfg: ModelConfig) -> int:
+    d, w = cfg.d_model, cfg.rglru.lru_width
+    kw = cfg.rglru.conv_width
+    return 2 * d * w + kw * w + 2 * w * w + w * d + 5 * w + d
+
+
+def rglru_apply(p, x: jax.Array, h0=None):
+    """Core RG-LRU. x (B,S,W) post-conv. Returns (y, h_last)."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", x32, p["lru_a_gate"].astype(jnp.float32))
+        + p["lru_a_bias"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", x32, p["lru_x_gate"].astype(jnp.float32))
+        + p["lru_x_bias"]
+    )
+    log_a = -RGLRU_C * jax.nn.softplus(p["lru_lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+    h, h_last = rglru_scan(a, b, h0)
+    return h.astype(x.dtype), h_last
+
+
+def rec_block_apply(p, x: jax.Array, cfg: ModelConfig, *, state=None):
+    """Full Griffin recurrent block. state = None | dict(h (B,W) f32, conv (B,K-1,W)).
+    Returns (x_out, new_state)."""
+    from repro.models import layers
+
+    dt = x.dtype
+    h = layers.rms_norm(x, p["ln"], 1e-6)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, p["w_gate_in"].astype(dt)))
+    rec = jnp.einsum("bsd,dw->bsw", h, p["w_rec_in"].astype(dt))
+    tail = None if state is None else state["conv"]
+    rec, new_tail = causal_conv1d(rec, p["conv_w"], p["conv_b"], tail)
+    h0 = None if state is None else state["h"]
+    rec, h_last = rglru_apply(p, rec, h0)
+    out = jnp.einsum("bsw,wd->bsd", gate * rec, p["w_out"].astype(dt))
+    return x + out, {"h": h_last, "conv": new_tail}

@@ -1,0 +1,240 @@
+"""RWKV6 "Finch": token-shift with LoRA mixing + data-dependent per-channel decay.
+
+WKV recurrence per head (state S in R^{K x V}):
+    o_t = r_t S_{t-1} + (r_t . (u o k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t            (w_t in (0,1), per channel)
+
+Training/prefill uses the chunked (block-parallel) form: sequential scan over
+chunks carrying S, parallel intra-chunk via the decay-factored score matrix
+(flash-linear-attention style). Decode is the O(1) recurrent step — this is
+what makes long_500k run with constant memory per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+# chunk size bounds the (B, c, c, H, hd) per-pair decay tensor of the exact
+# intra-chunk path; 32 keeps it ~16 MB/device at production shapes.
+DEFAULT_CHUNK = 32
+
+
+def _shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """Token shift: y_t = x_{t-1}; y_0 = prev (or zeros). x: (B, S, D)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def rwkv_block_init(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    r = cfg.rwkv
+    ks = jax.random.split(rng, 12)
+    s = 1.0 / np.sqrt(d)
+    h = cfg.num_heads
+
+    def mat(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(dtype)
+
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        # time-mix interpolation base (r,k,v,w,g) + token-shift LoRA
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(jnp.float32),
+        "ts_w1": mat(ks[1], (d, 5 * r.tokenshift_lora), s),
+        "ts_w2": mat(ks[2], (5, r.tokenshift_lora, d), 1.0 / np.sqrt(r.tokenshift_lora)),
+        "wr": mat(ks[3], (d, d), s),
+        "wk": mat(ks[4], (d, d), s),
+        "wv": mat(ks[5], (d, d), s),
+        "wg": mat(ks[6], (d, d), s),
+        "wo": mat(ks[7], (d, d), s),
+        # data-dependent decay: w = exp(-exp(base + lora))
+        "decay_base": (jax.random.uniform(ks[8], (d,)) * 2.0 - 4.0).astype(jnp.float32),
+        "decay_w1": mat(ks[9], (d, r.decay_lora), s),
+        "decay_w2": mat(ks[10], (r.decay_lora, d), 1.0 / np.sqrt(r.decay_lora)),
+        "bonus": (jax.random.normal(ks[11], (h, cfg.head_dim)) * 0.5).astype(jnp.float32),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "cm_mu_k": (jax.random.uniform(jax.random.fold_in(rng, 99), (d,)) * 0.5).astype(
+            jnp.float32
+        ),
+        "cm_mu_r": (jax.random.uniform(jax.random.fold_in(rng, 98), (d,)) * 0.5).astype(
+            jnp.float32
+        ),
+        "cm_wk": mat(jax.random.fold_in(rng, 97), (d, cfg.d_ff), s),
+        "cm_wv": mat(
+            jax.random.fold_in(rng, 96), (cfg.d_ff, d), 1.0 / np.sqrt(cfg.d_ff)
+        ),
+        "cm_wr": mat(jax.random.fold_in(rng, 95), (d, d), s),
+    }
+
+
+def rwkv_block_param_count(cfg: ModelConfig) -> int:
+    d, f, r = cfg.d_model, cfg.d_ff, cfg.rwkv
+    tm = 5 * d * d + d * 5 * r.tokenshift_lora + 5 * r.tokenshift_lora * d
+    tm += d * r.decay_lora + r.decay_lora * d + 5 * d + d + cfg.num_heads * cfg.head_dim
+    cm = d * f + f * d + d * d + 2 * d
+    return tm + cm + 4 * d  # + norms
+
+
+def _time_mix_inputs(p, x, x_prev, cfg: ModelConfig):
+    """Finch 5-way token-shift mixing -> (xr, xk, xv, xw, xg)."""
+    dt = x.dtype
+    sx = _shift(x, x_prev) - x                     # (B,S,D)
+    base = x + sx * p["mu"].astype(dt)[:, None, None, :]  # (5,B,S,D)
+    # data-dependent shift offsets
+    lora = jnp.tanh(jnp.einsum("bsd,de->bse", x, p["ts_w1"].astype(dt)))
+    lora = lora.reshape(*x.shape[:2], 5, -1)       # (B,S,5,ts)
+    off = jnp.einsum("bste,ted->tbsd", lora, p["ts_w2"].astype(dt))
+    return (base + sx[None] * off).astype(dt)      # (5,B,S,D)
+
+
+def _decay(p, xw: jax.Array) -> jax.Array:
+    """log(w) per channel, guaranteed negative: lw = -exp(base + lora)."""
+    lora = jnp.einsum(
+        "bsd,de->bse", jnp.tanh(jnp.einsum("bsd,de->bse", xw, p["decay_w1"].astype(xw.dtype))),
+        p["decay_w2"].astype(xw.dtype),
+    )
+    return -jnp.exp(jnp.clip(p["decay_base"] + lora.astype(jnp.float32), -8.0, 4.0))
+
+
+def wkv_chunked(r, k, v, lw, u, chunk: int):
+    """Chunked WKV. r,k,v,lw: (B,S,H,hd) (lw = log decay, f32); u: (H,hd).
+
+    Returns (o (B,S,H,hd) f32, S_final (B,H,K,V) f32)."""
+    b, s, h, hd = r.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, zp), jnp.pad(k, zp), jnp.pad(v, zp)
+        lw = jnp.pad(lw, zp)  # log w = 0 -> w = 1 for padding (no decay, k=0)
+
+    def resh(x):
+        return x.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(lw)
+
+    def chunk_step(S, inp):
+        rb, kb, vb, lwb = inp                      # (B,c,H,hd)
+        L = jnp.cumsum(lwb, axis=1)                # inclusive
+        Lx = L - lwb                               # exclusive
+        L_last = L[:, -1:]                         # (B,1,H,hd)
+        rr = rb * jnp.exp(Lx)                      # decay chunk-start..t-1 (<=1)
+        # intra-chunk scores with EXACT per-pair per-channel decay
+        # exp(Lx_t - L_s) = prod_{u in (s, t)} w_u  — the exponent is <= 0 for
+        # every causal pair, so this never overflows (a single-reference
+        # factorization rr*kk does overflow f32 under strong decay).
+        dec = jnp.exp(jnp.minimum(Lx[:, :, None] - L[:, None, :], 0.0))
+        scores = jnp.einsum("bthk,bshk,btshk->bhts", rb, kb, dec)
+        cmask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(cmask[None, None], scores, 0.0)
+        o = jnp.einsum("bhts,bshv->bthv", scores, vb)
+        # diagonal bonus term
+        diag = jnp.einsum("bthk,bthk->bth", rb, u[None, None] * kb)
+        o = o + diag[..., None] * vb
+        # contribution from carried state
+        o = o + jnp.einsum("bthk,bhkv->bthv", rr, S)
+        # state update
+        kk2 = kb * jnp.exp(L_last - L)             # decay s+1..chunk-end (<=1)
+        S_new = jnp.exp(L_last[:, 0])[..., None] * S + jnp.einsum(
+            "bshk,bshv->bhkv", kk2, vb
+        )
+        return S_new, o
+
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    S_fin, os = jax.lax.scan(chunk_step, S0, (rc, kc, vc, lwc))
+    o = os.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, hd)
+    return o[:, :s], S_fin
+
+
+def wkv_recurrent(r, k, v, lw, u, S0=None):
+    """Naive per-step recurrence (oracle for tests + decode path)."""
+    b, s, h, hd = r.shape
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32) if S0 is None else S0
+
+    def step(S, inp):
+        rt, kt, vt, lwt = [x.astype(jnp.float32) for x in inp]  # (B,H,hd)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S)
+        o = o + jnp.einsum("bhk,bhk->bh", rt, u[None] * kt)[..., None] * vt
+        S = jnp.exp(lwt)[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, o
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, lw))
+    S_fin, os = jax.lax.scan(step, S0, xs)
+    return os.transpose(1, 0, 2, 3), S_fin
+
+
+def _group_norm_heads(x, scale, bias, eps=1e-5):
+    """x (B,S,H,hd): normalize per head; scale/bias per channel (D)."""
+    b, s, h, hd = x.shape
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(b, s, h * hd)
+    return y * scale + bias
+
+
+def time_mix_apply(p, x, cfg: ModelConfig, *, x_prev=None, state=None, chunked=True):
+    """Full RWKV6 time-mix. Returns (out (B,S,D), new_state (B,H,K,V), last_x)."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    dt = x.dtype
+    xr, xk, xv, xw, xg = _time_mix_inputs(p, x, x_prev, cfg)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt)).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt)).reshape(b, s, h, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt)))
+    lw = _decay(p, xw).reshape(b, s, h, hd)
+    u = p["bonus"].astype(jnp.float32)
+    if chunked and s > 1:
+        o, S = wkv_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            lw, u, cfg.rwkv.chunk_size,
+        )
+        if state is not None:
+            # carried-in state support for chunked path: fold via recurrent identity
+            # (prefill from scratch uses state=None; streaming prefill uses recurrent)
+            raise NotImplementedError("chunked WKV with nonzero initial state")
+    else:
+        o, S = wkv_recurrent(
+            r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            lw, u, state,
+        )
+    o = _group_norm_heads(o, p["ln_x_scale"], p["ln_x_bias"]).astype(dt)
+    out = jnp.einsum("bse,ed->bsd", (o * g.astype(dt)), p["wo"].astype(dt))
+    return out.astype(dt), S, x[:, -1]
+
+
+def channel_mix_apply(p, x, *, x_prev=None):
+    """RWKV channel mix. Returns (out, last_x)."""
+    dt = x.dtype
+    sx = _shift(x, x_prev) - x
+    xk = x + sx * p["cm_mu_k"].astype(dt)
+    xr = x + sx * p["cm_mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["cm_wk"].astype(dt))))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cm_wv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_wr"].astype(dt)))
+    return rr * vv, x[:, -1]
+
+
+def rwkv_block_apply(p, x, cfg: ModelConfig, *, state=None, chunked=True):
+    """One RWKV6 block. state = None or dict(wkv (B,H,K,V), tm_x (B,D), cm_x (B,D)).
+    Returns (x_out, new_state)."""
+    st_wkv = None if state is None else state["wkv"]
+    tm_prev = None if state is None else state["tm_x"]
+    cm_prev = None if state is None else state["cm_x"]
+    h = layers.rms_norm(x, p["ln1"], 1e-5)
+    att, new_wkv, tm_x = time_mix_apply(
+        p, h, cfg, x_prev=tm_prev, state=st_wkv, chunked=chunked
+    )
+    x = x + att.astype(x.dtype)
+    h2 = layers.rms_norm(x, p["ln2"], 1e-5)
+    ff, cm_x = channel_mix_apply(p, h2, x_prev=cm_prev)
+    x = x + ff.astype(x.dtype)
+    return x, {"wkv": new_wkv, "tm_x": tm_x.astype(x.dtype),
+               "cm_x": cm_x.astype(x.dtype)}

@@ -1,0 +1,17 @@
+from repro.optim.adamw import (
+    OptState,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    init,
+    lr_schedule,
+)
+
+__all__ = [
+    "OptState",
+    "apply_updates",
+    "clip_by_global_norm",
+    "global_norm",
+    "init",
+    "lr_schedule",
+]

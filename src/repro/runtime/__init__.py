@@ -1,0 +1,19 @@
+from repro.runtime.train_loop import (
+    TrainState,
+    abstract_state,
+    init_state,
+    jit_train_step,
+    make_ctx,
+    make_train_step,
+    state_pspecs,
+)
+
+__all__ = [
+    "TrainState",
+    "abstract_state",
+    "init_state",
+    "jit_train_step",
+    "make_ctx",
+    "make_train_step",
+    "state_pspecs",
+]

@@ -1,0 +1,38 @@
+"""Elastic scaling: reshard train state between meshes of different size.
+
+The parameter sharding rules (sharding/specs.py) are pure functions of
+(leaf name, shape, mesh), so moving to a grown/shrunk mesh is: compute the
+target specs on the new mesh and device_put. Combined with the host-gathered
+checkpoint format this supports both in-memory resharding (same job, new
+topology after re-slicing) and restore-into-different-mesh (checkpoint
+written on 256 chips, restored on 512).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.runtime.train_loop import TrainState, state_pspecs
+
+
+def reshard_state(state: TrainState, run_new: RunConfig, mesh_new: Mesh) -> TrainState:
+    """Re-place every leaf with the sharding the new mesh prescribes."""
+    specs = state_pspecs(run_new, mesh_new)
+    sh = jax.tree.map(
+        lambda s: NamedSharding(mesh_new, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)
+
+
+def scale_plan(old_dp: int, new_dp: int, global_batch: int) -> dict:
+    """What changes when the dp extent changes: per-replica batch and the
+    grad-accumulation factor that keeps the global batch constant."""
+    assert global_batch % old_dp == 0
+    plan = {
+        "old_per_replica": global_batch // old_dp,
+        "new_per_replica": global_batch // new_dp if global_batch % new_dp == 0 else None,
+        "needs_accum": global_batch % new_dp != 0,
+    }
+    return plan

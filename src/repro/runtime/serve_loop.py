@@ -1,0 +1,133 @@
+"""Serving runtime: prefill + decode steps with sharded KV caches.
+
+decode_32k / long_500k lower ``serve_step`` — one new token against a
+seq_len-deep cache. Caches are sharded batch-over-dp and sequence-over-model
+(flash-decoding, models/attention.py); recurrent-state families (rwkv,
+hybrid) carry O(1)-per-token state instead.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.models import build_model
+from repro.runtime.train_loop import make_ctx
+from repro.sharding.ctx import use_ctx
+from repro.sharding.specs import batch_pspecs, cache_pspecs, dp_axes, param_pspecs
+
+
+class ServeState(NamedTuple):
+    cache: Any
+    pos: jax.Array     # (B,) next write position per sequence
+
+
+def make_prefill_step(run: RunConfig, mesh: Mesh | None):
+    api = build_model(run.model, remat="none")
+    ctx = make_ctx(run, mesh)
+
+    def prefill(params, batch):
+        with use_ctx(ctx):
+            logits, cache = api.prefill_fn(params, batch)
+        return logits, cache
+
+    return api, ctx, prefill
+
+
+def make_decode_step(run: RunConfig, mesh: Mesh | None):
+    """decode_step: (params, state, token) -> (next_token_logits, state)."""
+    api = build_model(run.model, remat="none")
+    ctx = make_ctx(run, mesh, for_decode=True)
+
+    def decode(params, state: ServeState, token):
+        with use_ctx(ctx):
+            logits, cache = api.decode_fn(params, state.cache, token, state.pos)
+        return logits, ServeState(cache, state.pos + 1)
+
+    return api, ctx, decode
+
+
+def abstract_cache(run: RunConfig):
+    api = build_model(run.model)
+    b, s = run.shape.global_batch, run.shape.seq_len
+    return jax.eval_shape(lambda: api.init_cache(b, s))
+
+
+def _strip_dp(spec: P, dp: tuple[str, ...]) -> P:
+    def strip(e):
+        if e is None:
+            return None
+        if isinstance(e, str):
+            return None if e in dp else e
+        rest = tuple(a for a in e if a not in dp)
+        return rest if len(rest) > 1 else (rest[0] if rest else None)
+
+    return P(*(strip(e) for e in spec))
+
+
+def serve_shardings(run: RunConfig, mesh: Mesh):
+    api = build_model(run.model)
+    params = jax.eval_shape(api.init_params, jax.random.PRNGKey(0))
+    cache = abstract_cache(run)
+    pspec = param_pspecs(params, mesh, run.mesh)
+    if run.collective.serve_params_replicated:
+        # decode is otherwise collective-bound on per-token FSDP gathers;
+        # replicate weights over dp (they are still TP-sharded) — §Perf knob
+        dp = dp_axes(run.mesh)
+        pspec = jax.tree.map(
+            lambda s: _strip_dp(s, dp), pspec, is_leaf=lambda x: isinstance(x, P)
+        )
+    cspec = cache_pspecs(run.model, cache, mesh, run.mesh, run.shape.seq_len)
+    ndp = 1
+    for a in dp_axes(run.mesh):
+        ndp *= mesh.shape[a]
+    bspec = P(dp_axes(run.mesh)) if run.shape.global_batch % ndp == 0 else P()
+    to_sh = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P)
+    )
+    return to_sh(pspec), to_sh(cspec), NamedSharding(mesh, bspec)
+
+
+def jit_decode_step(run: RunConfig, mesh: Mesh):
+    api, ctx, decode = make_decode_step(run, mesh)
+    psh, csh, bsh = serve_shardings(run, mesh)
+    state_sh = ServeState(csh, bsh)
+    return api, jax.jit(
+        decode,
+        in_shardings=(psh, state_sh, bsh),
+        out_shardings=(None, state_sh),
+        donate_argnums=(1,),
+    )
+
+
+def jit_prefill_step(run: RunConfig, mesh: Mesh):
+    api, ctx, prefill = make_prefill_step(run, mesh)
+    psh, csh, _ = serve_shardings(run, mesh)
+    bspecs = batch_pspecs(run.model, run.shape, mesh, run.mesh)
+    bsh = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+    return api, jax.jit(
+        prefill, in_shardings=(psh, bsh), out_shardings=(None, csh)
+    )
+
+
+def greedy_generate(api, params, prompt_tokens, max_new: int, cache_len: int):
+    """Simple single-host generation driver (examples/serve.py)."""
+    b, s = prompt_tokens.shape
+    cache = api.init_cache(b, cache_len)
+    state = ServeState(cache, jnp.zeros((b,), jnp.int32))
+    decode = jax.jit(
+        lambda p, st, t: (
+            lambda lg, c: (jnp.argmax(lg, -1).astype(jnp.int32), ServeState(c, st.pos + 1))
+        )(*api.decode_fn(p, st.cache, t, st.pos))
+    )
+    tok = prompt_tokens[:, 0]
+    out = [tok]
+    for t in range(1, s + max_new):
+        nxt, state = decode(params, state, tok)
+        tok = prompt_tokens[:, t] if t < s else nxt
+        out.append(tok)
+    return jnp.stack(out, axis=1)

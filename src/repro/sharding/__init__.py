@@ -1,0 +1,3 @@
+from repro.sharding.ctx import ShardCtx, get_ctx, mesh_axis_size, shard, spec, use_ctx
+
+__all__ = ["ShardCtx", "get_ctx", "mesh_axis_size", "shard", "spec", "use_ctx"]

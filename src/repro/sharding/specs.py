@@ -1,0 +1,162 @@
+"""Parameter / batch / cache PartitionSpec rules (DP-FSDP x TP x EP x SP).
+
+Rules are keyed by leaf name (the last path component) and apply to the
+trailing dims; leading stack dims (layers L, expert E handled explicitly) get
+None. Any dim that does not divide its mesh axes falls back to replicated on
+that dim — uneven GSPMD sharding is legal but pads, so we only take even
+shards (recorded: smollm 9-head / whisper 8-head attention is head-replicated).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
+
+Axes = Any  # str | tuple[str, ...] | None
+
+# trailing-dims sharding rule per leaf name: "dp" = FSDP axes, "tp" = model
+_IN_OUT = ("dp", "tp")     # (fan_in, fan_out) matrices
+_OUT_IN = ("tp", "dp")     # (fan_out-side, fan_in-side): wo / w_down style
+_RULES: dict[str, tuple] = {
+    "embed": ("tp", "dp"),           # vocab x d_model
+    "lm_head": ("dp", "tp"),
+    "patch_proj": (None, None),
+    # dense attention + mlp
+    "wq": _IN_OUT, "wk": _IN_OUT, "wv": _IN_OUT, "wo": _OUT_IN,
+    "w_gate": _IN_OUT, "w_up": _IN_OUT, "w_down": _OUT_IN,
+    "w_in": _IN_OUT, "w_out_mlp": _OUT_IN,
+    # rwkv
+    "wg": _IN_OUT, "wr": _IN_OUT,
+    "cm_wk": _IN_OUT, "cm_wv": _OUT_IN, "cm_wr": _IN_OUT,
+    "ts_w1": ("dp", None), "ts_w2": (None, None, "dp"),
+    "decay_w1": ("dp", None), "decay_w2": (None, "dp"),
+    # rg-lru
+    "w_gate_in": _IN_OUT, "w_rec_in": _IN_OUT,
+    "lru_a_gate": _IN_OUT, "lru_x_gate": _IN_OUT,
+    "conv_w": (None, "tp"),
+    "lru_a_bias": ("tp",), "lru_x_bias": ("tp",), "lru_lam": ("tp",),
+    "conv_b": ("tp",),
+}
+# MoE expert tensors carry a leading E dim sharded over tp (EP):
+_MOE_RULES = {
+    "w_gate": ("tp", "dp", None),
+    "w_up": ("tp", "dp", None),
+    "w_down": ("tp", None, "dp"),
+    "router": ("dp", None),
+}
+
+
+def dp_axes(mesh_cfg: MeshConfig) -> tuple[str, ...]:
+    return ("pod", "data") if mesh_cfg.multi_pod else ("data",)
+
+
+def _axes_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _resolve_dim(dim_size: int, tag, mesh: Mesh, dp: tuple[str, ...]):
+    if tag is None:
+        return None
+    axes = dp if tag == "dp" else "model"
+    return axes if dim_size % _axes_size(mesh, axes) == 0 else None
+
+
+def _leaf_spec(path: tuple, leaf, mesh: Mesh, dp: tuple[str, ...]) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1]
+    in_moe = "moe" in names and "shared" not in names
+    rules = _MOE_RULES if (in_moe and name in _MOE_RULES) else _RULES
+    # rwkv w_out is d_model->d_model ("wo"-like); rglru w_out is (W, D)
+    if name == "w_out":
+        rules = {"w_out": _OUT_IN}
+    if name not in rules:
+        return P()  # replicate (norms, biases, mu, bonus, small loras)
+    tags = rules[name]
+    nd = leaf.ndim
+    k = len(tags)
+    if nd < k:
+        return P()
+    lead = [None] * (nd - k)
+    dims = [
+        _resolve_dim(leaf.shape[nd - k + i], tags[i], mesh, dp) for i in range(k)
+    ]
+    return P(*lead, *dims)
+
+
+def param_pspecs(params, mesh: Mesh, mesh_cfg: MeshConfig):
+    """Pytree of PartitionSpec matching ``params`` (works on ShapeDtypeStructs)."""
+    dp = dp_axes(mesh_cfg)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _leaf_spec(p, l, mesh, dp), params
+    )
+
+
+def param_shardings(params, mesh: Mesh, mesh_cfg: MeshConfig):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_pspecs(params, mesh, mesh_cfg)
+    )
+
+
+# ------------------------------------------------------------- batch / cache
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 mesh_cfg: MeshConfig):
+    """Input batch specs: batch dim over dp (when divisible), rest replicated."""
+    from repro.models import batch_dims
+
+    dp = dp_axes(mesh_cfg)
+    bdims = batch_dims(cfg, shape)
+    ndp = _axes_size(mesh, dp)
+    out = {}
+    for name, shp in bdims.items():
+        bspec = dp if shp[0] % ndp == 0 else None
+        out[name] = P(bspec, *([None] * (len(shp) - 1)))
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, cache, mesh: Mesh, mesh_cfg: MeshConfig,
+                 seq_len: int):
+    """Decode caches: batch over dp; KV sequence dim over 'model'
+    (flash-decoding layout); recurrent state channels over 'model'."""
+    dp = dp_axes(mesh_cfg)
+    ndp = _axes_size(mesh, dp)
+    tp = mesh.shape["model"]
+
+    def spec_for(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        nd = leaf.ndim
+        b = leaf.shape[1] if nd >= 2 else 0
+        bspec = dp if (b and b % ndp == 0) else None
+        if name in ("k", "v", "xk", "xv", "ks", "vs"):  # (L, B, KV, S, hd|1)
+            sspec = "model" if leaf.shape[3] % tp == 0 else None
+            return P(None, bspec, None, sspec, None)
+        if name in ("attn_k", "attn_v"):    # (G, B, KV, W, hd) — window cache
+            return P(None, bspec, None, None, None)
+        if name == "wkv":                    # (L, B, H, K, V)
+            hspec = "model" if leaf.shape[2] % tp == 0 else None
+            return P(None, bspec, hspec, None, None)
+        if name in ("tm_x", "cm_x"):         # (L, B, D)
+            dspec = "model" if leaf.shape[2] % tp == 0 else None
+            return P(None, bspec, dspec)
+        if name == "h":                      # (G, B, W) rg-lru state
+            wspec = "model" if leaf.shape[2] % tp == 0 else None
+            return P(None, bspec, wspec)
+        if name == "conv":                   # (G, B, K-1, W)
+            wspec = "model" if leaf.shape[3] % tp == 0 else None
+            return P(None, bspec, None, wspec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

@@ -1,0 +1,34 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidev(code: str, n_devices: int = 8, timeout: int = 300):
+    """Run a python snippet in a subprocess with N fake CPU devices.
+
+    XLA_FLAGS must NOT be set globally (smoke tests see 1 device), so
+    multi-device tests run in their own process.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=timeout,
+    )
+    if res.returncode != 0:
+        raise AssertionError(
+            f"multidev subprocess failed:\nSTDOUT:\n{res.stdout[-4000:]}\n"
+            f"STDERR:\n{res.stderr[-4000:]}"
+        )
+    return res.stdout
+
+
+@pytest.fixture(scope="session")
+def multidev():
+    return run_multidev

@@ -1,0 +1,89 @@
+"""Cost-model + topology traffic properties (paper Fig 2 / 12, Appendix B)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import cost_model as cm
+from repro.core.topology import FatTree, Torus2D
+
+
+@given(st.integers(2, 4096))
+@settings(max_examples=50, deadline=None)
+def test_speedup_formula(p):
+    s = cm.concurrent_ag_rs_speedup(p)
+    assert s == pytest.approx(2 - 2 / p)
+    assert 1.0 <= s < 2.0
+    # derived from the bandwidth shares (Appendix B eq. 3)
+    t_rr = cm.concurrent_completion_time(1 << 20, p, 25e9, "ring_ring")
+    t_mi = cm.concurrent_completion_time(1 << 20, p, 25e9, "mc_inc")
+    assert t_rr / t_mi == pytest.approx(s)
+
+
+def test_nic_shares_no_shared_bottleneck():
+    sh = cm.mc_inc_share(16)
+    # AG_mc recv-bound, RS_inc send-bound: each direction sums to full B_nic
+    assert sh.ag_recv + sh.rs_recv == pytest.approx(1.0)
+    assert sh.ag_send + sh.rs_send == pytest.approx(1.0)
+    assert sh.ag_recv > sh.ag_send  # receive-bound
+    assert sh.rs_send > sh.rs_recv  # send-bound
+
+
+@pytest.mark.parametrize("p", [16, 64, 256])
+def test_fat_tree_traffic_reduction(p):
+    """Fig 2/12: multicast allgather moves 1.5-2x less traffic than P2P ring,
+    and >=P/2 x less than linear."""
+    tree = FatTree(k=16, n_hosts=p)
+    n = 1 << 20
+    ring = cm.p2p_ring_allgather_traffic(tree, p, n)
+    mc = cm.mcast_allgather_traffic(tree, p, n)
+    linear = cm.p2p_linear_allgather_traffic(tree, p, n)
+    assert mc < ring
+    assert 1.3 < ring / mc < 3.0       # paper: 1.5-2x
+    assert linear > ring                # direct P2P pays full path lengths
+
+
+def test_bandwidth_optimality_per_link():
+    """Insight 1: multicast broadcast puts each byte on each link at most once;
+    the max per-link bytes equals the buffer size."""
+    p, n = 64, 1 << 20
+    tree = FatTree(k=16, n_hosts=p)
+    cm.mcast_bcast_traffic(tree, p, n)
+    assert tree.counters.max_link() == n
+
+
+def test_bcast_traffic_vs_knomial():
+    p, n = 64, 1 << 20
+    tree = FatTree(k=16, n_hosts=p)
+    kno = cm.p2p_knomial_bcast_traffic(tree, p, n)
+    mc = cm.mcast_bcast_traffic(tree, p, n)
+    assert mc < kno
+
+
+def test_multicast_tree_is_connected_and_minimal():
+    tree = FatTree(k=8)
+    members = list(range(10))
+    edges = tree.multicast_tree(0, members)
+    nodes = set()
+    for a, b in edges:
+        nodes.add(a)
+        nodes.add(b)
+    for m in members:
+        assert tree.host(m) in nodes
+    # tree-ish: edges ~ nodes - 1 (spanning tree, no cycles by construction)
+    assert len(edges) <= len(nodes)
+
+
+def test_torus_ring_per_link_optimality():
+    """DESIGN.md torus criterion: bidi ring halves per-direction link bytes."""
+    uni = cm.torus_ring_per_link_bytes(16, 1 << 20, bidi=False)
+    bidi = cm.torus_ring_per_link_bytes(16, 1 << 20, bidi=True)
+    assert bidi == pytest.approx(uni / 2)
+
+
+def test_bcast_time_models_constant_vs_tree():
+    n, b = 64 << 20, 25e9
+    t64 = cm.bcast_time_multicast(n, b, 64)
+    t1024 = cm.bcast_time_multicast(n, b, 1024)
+    assert t1024 == pytest.approx(t64, rel=0.01)  # constant in P
+    assert cm.bcast_time_binary_tree(n, b, 1024) > 1.5 * t1024
+    assert cm.bcast_time_knomial(n, b, 1024, k=4) > t1024

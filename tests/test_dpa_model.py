@@ -1,0 +1,60 @@
+"""DPA offload model: reproduces the paper's measured anchors (Table I,
+Figs 5/13/14/15/16, §VII)."""
+import pytest
+
+from repro.core import dpa
+
+
+def test_table1_single_thread():
+    assert dpa.single_thread_tput("UD") == pytest.approx(5.2 * 2**30)
+    assert dpa.single_thread_tput("UC") == pytest.approx(11.9 * 2**30)
+    # IPC consistency: instr/cycle ~ 0.1 (low-IPC data movement)
+    for t in ("UD", "UC"):
+        row = dpa.TABLE1[t]
+        assert row["instr_per_cqe"] / row["cycles_per_cqe"] == pytest.approx(
+            row["ipc"], rel=0.1
+        )
+
+
+def test_fig13_14_saturation_thread_counts():
+    assert dpa.threads_to_saturate("UC") <= 4           # paper: ~4
+    assert 8 <= dpa.threads_to_saturate("UD") <= 16     # paper: 8-16
+
+
+def test_one_core_reaches_link_rate():
+    """§VI-d: 16 threads (1 core) reach practical link throughput for both."""
+    for t in ("UD", "UC"):
+        tput = dpa.sustained_tput(dpa.DpaConfig(t, 16))
+        assert tput >= 0.99 * dpa.LINK_200G_BYTES
+
+
+def test_dpa_core_beats_cpu_core():
+    """Fig 5/§VII-d: one DPA core outperforms a single CPU core by ~25%."""
+    dpa_core = dpa.sustained_tput(dpa.DpaConfig("UD", 16))
+    cpu = dpa.CPU_CORE_TPUT_GIB["RC_no_reliability"] * 2**30
+    assert dpa_core / cpu > 1.2
+    assert cpu < dpa.LINK_200G_BYTES  # CPU core can't sustain the link
+
+
+def test_fig15_larger_chunks_saturate_with_fewer_threads():
+    t_small = next(
+        t for t in range(1, 257)
+        if dpa.sustained_tput(dpa.DpaConfig("UC", t, 4096)) >= 0.99 * dpa.LINK_200G_BYTES
+    )
+    t_big = next(
+        t for t in range(1, 257)
+        if dpa.sustained_tput(dpa.DpaConfig("UC", t, 32768)) >= 0.99 * dpa.LINK_200G_BYTES
+    )
+    assert t_big <= t_small
+
+
+def test_fig16_tbit_feasible_with_half_dpa():
+    assert dpa.tbit_feasible("UD", 128)
+    assert dpa.tbit_feasible("UC", 128)
+    # but a handful of threads is NOT enough
+    assert not dpa.tbit_feasible("UD", 8)
+
+
+def test_economics():
+    eco = dpa.economics_summary()
+    assert eco["cpu_cores_needed_4x1600g"] >= 64  # §VII-d: "at least 64 cores"

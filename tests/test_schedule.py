@@ -1,0 +1,60 @@
+"""Property tests for the Appendix-A broadcast sequencer."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import schedule
+
+
+def pm_pairs():
+    return st.integers(1, 64).flatmap(
+        lambda m: st.integers(1, 8).map(lambda r: (m * r, m))
+    )
+
+
+@given(pm_pairs())
+@settings(max_examples=100, deadline=None)
+def test_schedule_invariants(pm):
+    p, m = pm
+    schedule.validate_schedule(p, m)
+
+
+@given(pm_pairs())
+@settings(max_examples=50, deadline=None)
+def test_appendix_a_formula(pm):
+    """G^i = {P_i, P_{R+i}, ..., P_{(M-1)R+i}} exactly."""
+    p, m = pm
+    r = p // m
+    for i in range(r):
+        g = schedule.active_group(i, p, m)
+        assert g == tuple(i + j * r for j in range(m))
+
+
+@given(pm_pairs())
+@settings(max_examples=50, deadline=None)
+def test_activation_chain(pm):
+    p, m = pm
+    edges = schedule.activation_edges(p, m)
+    # every non-initial rank is activated exactly once, within its chain
+    targets = [t for _, t in edges]
+    assert len(targets) == len(set(targets)) == p - m
+    for f, t in edges:
+        assert schedule.chain_of(f, p, m) == schedule.chain_of(t, p, m)
+        assert t == f + 1  # successor in chain
+
+
+@given(st.integers(1, 32), st.integers(0, 10_000_000))
+@settings(max_examples=50, deadline=None)
+def test_subgroups_partition(n, total):
+    segs = schedule.subgroup_assignment(n, total)
+    assert len(segs) == n
+    assert segs[0][0] == 0 and segs[-1][1] == total
+    for (a, b), (c, d) in zip(segs, segs[1:]):
+        assert b == c and b >= a and d >= c
+    sizes = [b - a for a, b in segs]
+    assert max(sizes) - min(sizes) <= 1  # even split
+
+
+def test_worker_split_paper_example():
+    """§IV-C: 16 procs, 4 subgroups -> 1 send worker, 4 receive workers."""
+    s, r = schedule.worker_split(4, 16)
+    assert (s, r) == (1, 4)

@@ -1,0 +1,80 @@
+"""Discrete-event simulator behaviour (paper §VI evaluation properties)."""
+import numpy as np
+
+from repro.core.simulator import (
+    FabricParams,
+    WorkerParams,
+    simulate_allgather,
+    simulate_broadcast,
+    sweep_phase_breakdown,
+)
+
+
+def _fab(**kw):
+    return FabricParams(**kw)
+
+
+def test_clean_fabric_fast_path_only():
+    r = simulate_broadcast(8, 1 << 20, _fab(), WorkerParams(n_recv_workers=8),
+                           np.random.default_rng(0))
+    assert r.recovered == 0 and r.rnr_drops == 0
+    assert r.bytes_recovery == 0
+    assert r.time > 0
+
+
+def test_drops_recovered_and_slower():
+    rng = np.random.default_rng(1)
+    clean = simulate_broadcast(8, 1 << 20, _fab(), WorkerParams(8), rng)
+    rng = np.random.default_rng(1)
+    lossy = simulate_broadcast(8, 1 << 20, _fab(p_drop=0.02), WorkerParams(8), rng)
+    assert lossy.recovered > 0
+    assert lossy.time > clean.time
+
+
+def test_broadcast_constant_time_in_p():
+    """The multicast broadcast time is ~constant in P for fixed N (§III):
+    doubling participants adds only log-P sync, not transmission time."""
+    n = 4 << 20
+    times = []
+    for p in (4, 16, 64, 188):
+        r = simulate_broadcast(p, n, _fab(), WorkerParams(8),
+                               np.random.default_rng(0))
+        times.append(r.time)
+    assert times[-1] < times[0] * 1.2
+
+
+def test_allgather_receive_bound_for_any_chains():
+    """Paper §VI-b: allgather time is bounded by the receive path regardless
+    of the chain split M — the leaf must ingest (P-1)N bytes either way.
+    Fewer chains only add per-round activation sync (more rounds)."""
+    n = 1 << 20
+    t_full = simulate_allgather(16, n, _fab(), WorkerParams(8),
+                                np.random.default_rng(0), n_chains=16).time
+    t_one = simulate_allgather(16, n, _fab(), WorkerParams(8),
+                               np.random.default_rng(0), n_chains=1).time
+    assert t_one > t_full                # R=16 rounds of sync vs 1
+    assert t_one < t_full * 1.25         # but both receive-bound
+
+
+def test_fig10_trend_multicast_dominates_at_scale():
+    """Paper Fig 10: as size and node count grow, the non-blocking multicast
+    datapath dominates the critical path (sync overheads become negligible)."""
+    rows = sweep_phase_breakdown(
+        sizes=[1 << 12, 4 << 20], nodes=[4, 64], seed=0
+    )
+    small = next(r for r in rows if r["nodes"] == 4 and r["bytes"] == 1 << 12)
+    large = next(r for r in rows if r["nodes"] == 64 and r["bytes"] == 4 << 20)
+    assert large["mcast_frac"] > 0.95  # 99% claim at scale
+    assert small["mcast_frac"] < large["mcast_frac"]
+    assert small["rnr_frac"] > large["rnr_frac"]
+
+
+def test_worker_scaling_helps_when_underprovisioned():
+    n = 8 << 20
+    slow = simulate_broadcast(4, n, _fab(), WorkerParams(n_recv_workers=1,
+                              thread_tput=2.0 * (1 << 30)),
+                              np.random.default_rng(0))
+    fast = simulate_broadcast(4, n, _fab(), WorkerParams(n_recv_workers=8,
+                              thread_tput=2.0 * (1 << 30)),
+                              np.random.default_rng(0))
+    assert fast.time < slow.time

@@ -1,0 +1,119 @@
+"""End-to-end training integration: descent, grad-accum equivalence, and the
+FSDP-mode equivalence on a multi-device mesh."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (CollectiveConfig, RunConfig, ShapeConfig, TrainConfig,
+                           get_model_config, reduced)
+from repro.data import SyntheticPipeline
+from repro.runtime import init_state, make_train_step
+
+
+def _run(grad_accum=1, steps=30):
+    cfg = reduced(get_model_config("smollm-135m"))
+    return RunConfig(
+        model=cfg, shape=ShapeConfig("t", "train", 64, 8),
+        train=TrainConfig(steps=steps, grad_accum=grad_accum,
+                          learning_rate=1e-2, warmup_steps=2),
+    )
+
+
+def test_loss_descends():
+    run = _run()
+    api, ctx, step = make_train_step(run, None)
+    state = init_state(run, None, jax.random.PRNGKey(0))
+    pipe = SyntheticPipeline(run.model, run.shape)
+    jstep = jax.jit(step)
+    losses = []
+    for i in range(30):
+        state, m = jstep(state, pipe.next_batch(i))
+        losses.append(float(m["loss"]))
+    assert min(losses[-5:]) < losses[0] - 0.3, losses[:3] + losses[-3:]
+
+
+def test_grad_accum_equivalence():
+    """accum=2 on the same global batch gives (nearly) the same first step."""
+    pipe = SyntheticPipeline(_run().model, _run().shape)
+    batch = pipe.next_batch(0)
+    results = {}
+    for a in (1, 2):
+        run = _run(grad_accum=a)
+        api, ctx, step = make_train_step(run, None)
+        state = init_state(run, None, jax.random.PRNGKey(0))
+        _, m = jax.jit(step)(state, batch)
+        results[a] = (float(m["loss"]), float(m["grad_norm"]))
+    assert results[1][0] == pytest.approx(results[2][0], rel=1e-5)
+    assert results[1][1] == pytest.approx(results[2][1], rel=1e-3)
+
+
+def test_fsdp_modes_bitwise_equal(multidev):
+    """xla vs mcast vs mcast_bcast: identical loss/grad-norm on a (2,4) mesh."""
+    multidev(
+        """
+import jax, dataclasses
+from repro.configs import (CollectiveConfig, MeshConfig, RunConfig, ShapeConfig,
+                           TrainConfig, get_model_config, reduced)
+from repro.runtime import init_state
+from repro.runtime.train_loop import jit_train_step
+from repro.data import SyntheticPipeline
+
+class SmallMesh(MeshConfig):
+    @property
+    def shape(self): return (2, 4)
+    @property
+    def axes(self): return ('data', 'model')
+
+cfg = reduced(get_model_config('smollm-135m'))
+out = {}
+for mode in ['xla', 'mcast', 'mcast_bcast']:
+    run = RunConfig(model=cfg, shape=ShapeConfig('t','train',64,4), mesh=SmallMesh(),
+                    train=TrainConfig(steps=5),
+                    collective=CollectiveConfig(fsdp_mode=mode, n_chains=2))
+    mesh = jax.make_mesh((2,4), ('data','model'))
+    api, jstep = jit_train_step(run, mesh)
+    state = init_state(run, mesh, jax.random.PRNGKey(0))
+    pipe = SyntheticPipeline(cfg, run.shape)
+    state, m = jstep(state, pipe.next_batch(0))
+    out[mode] = (float(m['loss']), float(m['grad_norm']))
+base = out['xla']
+for mode, val in out.items():
+    assert abs(val[0] - base[0]) < 1e-6, (mode, val, base)
+    assert abs(val[1] - base[1]) < 1e-5, (mode, val, base)
+print('ok', out)
+"""
+    )
+
+
+def test_moe_train_multidev(multidev):
+    """MoE arch trains on the mesh (EP dispatch lowers + finite loss)."""
+    multidev(
+        """
+import jax
+from repro.configs import (MeshConfig, RunConfig, ShapeConfig, TrainConfig,
+                           get_model_config, reduced)
+from repro.runtime import init_state
+from repro.runtime.train_loop import jit_train_step
+from repro.data import SyntheticPipeline
+
+class SmallMesh(MeshConfig):
+    @property
+    def shape(self): return (2, 4)
+    @property
+    def axes(self): return ('data', 'model')
+
+cfg = reduced(get_model_config('deepseek-moe-16b'))
+run = RunConfig(model=cfg, shape=ShapeConfig('t','train',64,4), mesh=SmallMesh(),
+                train=TrainConfig(steps=2))
+mesh = jax.make_mesh((2,4), ('data','model'))
+api, jstep = jit_train_step(run, mesh)
+state = init_state(run, mesh, jax.random.PRNGKey(0))
+pipe = SyntheticPipeline(cfg, run.shape)
+state, m = jstep(state, pipe.next_batch(0))
+import math
+assert math.isfinite(float(m['loss']))
+print('ok', float(m['loss']))
+"""
+    )
