@@ -4,6 +4,7 @@ Prints ``name,value,derived`` CSV. Paper-claim assertions fire inside each
 benchmark — a failing claim fails the run.
 
     PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+    PYTHONPATH=src python -m benchmarks.run --smoke   # seconds-scale CI sweep
 """
 from __future__ import annotations
 
@@ -22,11 +23,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--results", default="dryrun_results")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale FSDP-contention sweep only (CI)")
     args = ap.parse_args()
+
+    benches = paper_figs.SMOKE if args.smoke else paper_figs.ALL
+    if args.smoke:
+        args.skip_roofline = True
 
     print("name,value,derived")
     failures = 0
-    for fn in paper_figs.ALL:
+    for fn in benches:
         t0 = time.perf_counter()
         try:
             for name, value, derived in fn():

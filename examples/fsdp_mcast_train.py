@@ -33,6 +33,31 @@ class DemoMesh(MeshConfig):
         return ("data", "model")
 
 
+def contention_report(model_name: str = "yi-9b") -> None:
+    """The motivating scenario in numbers: simulate one FSDP step of the full
+    (non-reduced) model with interleaved AG/RS under the three link policies
+    (core/engine.py) and report the pipeline-bubble reduction the multicast
+    schedule and direction split buy."""
+    from repro.core.engine import FSDP_POLICIES, simulate_fsdp_step
+
+    model = get_model_config(model_name)
+    print(f"\nsimulated FSDP-step injection contention — {model_name}, "
+          f"P=16, 200 Gbit/s NIC:")
+    results = {
+        pol: simulate_fsdp_step(model, p=16, policy=pol)
+        for pol in FSDP_POLICIES
+    }
+    for pol, r in results.items():
+        print(f"  policy={pol:6s} step={r.step_time*1e3:8.2f} ms  "
+              f"bubble_fraction={r.bubble_fraction:.3f}  "
+              f"link_util={ {k: round(v, 2) for k, v in r.link_utilization.items()} }")
+    naive, split = results["naive"], results["split"]
+    print(f"  direction split removes "
+          f"{(1 - split.step_time / naive.step_time) * 100:.0f}% of step time "
+          f"vs the naive shared link")
+    assert split.bubble_fraction < naive.bubble_fraction
+
+
 def main():
     model = reduced(get_model_config("yi-9b"))
     results = {}
@@ -57,6 +82,7 @@ def main():
         assert abs(loss - base) < 1e-5, (mode, loss, base)
     print("all FSDP modes numerically identical — the paper's schedule is a "
           "drop-in replacement for the XLA collectives")
+    contention_report()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# CI entrypoint: tier-1 test suite + the seconds-scale FSDP-contention smoke
+# sweep. Runs fully offline (no hypothesis/zstandard required — see README).
+#
+#   scripts/check.sh             # everything
+#   scripts/check.sh -k engine   # extra args are forwarded to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+python -m benchmarks.run --smoke

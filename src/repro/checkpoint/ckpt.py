@@ -16,13 +16,49 @@ import os
 import shutil
 from typing import Any
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # offline / minimal image: stdlib fallback
+    zstandard = None
 
 _EXEC = cf.ThreadPoolExecutor(max_workers=2)
+
+# Manifest codec framing: one format byte ahead of the compressed blob so a
+# checkpoint written with either codec restores correctly on any machine.
+# Legacy (pre-framing) manifests are raw zstd, whose magic starts with 0x28.
+_CODEC_ZSTD = 0x01
+_CODEC_ZLIB = 0x02
+
+
+def _compress_manifest(payload: bytes) -> bytes:
+    if zstandard is not None:
+        return bytes([_CODEC_ZSTD]) + zstandard.ZstdCompressor().compress(payload)
+    return bytes([_CODEC_ZLIB]) + zlib.compress(payload, level=6)
+
+
+def _decompress_manifest(blob: bytes) -> bytes:
+    if not blob:
+        raise ValueError("empty checkpoint manifest")
+    codec, body = blob[0], blob[1:]
+    if codec == _CODEC_ZLIB:
+        return zlib.decompress(body)
+    if codec == _CODEC_ZSTD or codec == 0x28:   # 0x28: legacy raw zstd frame
+        if zstandard is None:
+            raise ImportError(
+                "checkpoint manifest is zstd-compressed but the 'zstandard' "
+                "module is not installed; reinstall it or re-save the "
+                "checkpoint on a machine with zstandard available"
+            )
+        body = blob if codec == 0x28 else body
+        return zstandard.ZstdDecompressor().decompress(body)
+    raise ValueError(f"unknown checkpoint manifest codec byte {codec:#x}")
 
 
 def _tree_paths(tree) -> list[tuple[str, Any]]:
@@ -60,7 +96,7 @@ def save(state, directory: str, step: int, *, blocking: bool = True,
             "dtypes": dtypes,
             "metadata": metadata or {},
         }
-        blob = zstandard.ZstdCompressor().compress(msgpack.packb(manifest))
+        blob = _compress_manifest(msgpack.packb(manifest))
         with open(os.path.join(tmp, "manifest.msgpack.zst"), "wb") as f:
             f.write(blob)
         if os.path.exists(final):
@@ -89,7 +125,7 @@ def restore(directory: str, step: int, like, *, shardings=None):
     target a different mesh than the saver's (elastic restore)."""
     final = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(final, "manifest.msgpack.zst"), "rb") as f:
-        manifest = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(f.read()))
+        manifest = msgpack.unpackb(_decompress_manifest(f.read()))
     npz = np.load(os.path.join(final, "arrays.npz"))
     arrays = {}
     for key, dtype in manifest["dtypes"].items():

@@ -1,0 +1,39 @@
+"""jax API compatibility shims — one place absorbing upstream renames.
+
+shard_map: promoted from jax.experimental.shard_map (<=0.4.x, flag name
+check_rep) to jax.shard_map (flag renamed check_vma). axis_size: added to
+jax.lax after 0.4.x; older jax exposes the concrete size via core.axis_frame.
+Every call site in the repo goes through these wrappers so either jax works.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+from jax import lax
+
+
+def axis_size(axis_name) -> int:
+    """Concrete size of a mapped axis inside shard_map/pmap."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)   # 0.4.x: int (or frame object)
+    return getattr(frame, "size", frame)
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the public promotion and the check_rep->check_vma rename shipped in
+# different releases — feature-detect the kwarg instead of inferring it
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else "check_rep"
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})

@@ -1,8 +1,9 @@
 """The paper's primary contribution: bandwidth-optimal Broadcast/Allgather
 collectives — the Appendix-A broadcast sequencer, jax shard_map collective
 kernels, fat-tree/torus traffic cost models, the reliable-broadcast protocol
-simulator, and the DPA SmartNIC offload model."""
+simulator, the shared discrete-event contention engine (engine.py), and the
+DPA SmartNIC offload model."""
 
-from repro.core import collectives, cost_model, schedule, topology
+from repro.core import collectives, cost_model, engine, schedule, topology
 
-__all__ = ["collectives", "cost_model", "schedule", "topology"]
+__all__ = ["collectives", "cost_model", "engine", "schedule", "topology"]

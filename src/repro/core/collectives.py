@@ -33,6 +33,8 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def _perm(p: int, direction: int):
     return [(i, (i + direction) % p) for i in range(p)]
@@ -48,7 +50,7 @@ def pipelined_broadcast_local(x: jax.Array, axis: str, *, root: int = 0,
 
     Per-link bytes: N * (1 + (P-2)/C); schedule time constant in P for C >> P.
     """
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     idx = lax.axis_index(axis)
     dist = (idx - root) % p
     n = x.shape[0]
@@ -77,7 +79,7 @@ def pipelined_broadcast_local(x: jax.Array, axis: str, *, root: int = 0,
 def ring_allgather_local(x: jax.Array, axis: str, *, direction: int = +1) -> jax.Array:
     """Unidirectional ring allgather: P-1 forwarding steps. x: (n,) shard.
     Returns (P*n,) in rank order."""
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     idx = lax.axis_index(axis)
     out = jnp.zeros((p,) + x.shape, x.dtype).at[idx].set(x)
 
@@ -96,7 +98,7 @@ def bidi_ring_allgather_local(x: jax.Array, axis: str) -> jax.Array:
     """Bidirectional ring allgather (Fig. 1's two trees): each half-shard
     travels one direction; both directions are concurrently active, so the
     completion time halves on full-duplex links. x: (n,), n even."""
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     idx = lax.axis_index(axis)
     n = x.shape[0]
     half = n // 2
@@ -125,7 +127,7 @@ def bcast_allgather_local(x: jax.Array, axis: str, *, n_chains: int) -> jax.Arra
 
     M = P is the fully-parallel degenerate case == ring allgather.
     """
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     assert p % n_chains == 0, (p, n_chains)
     rounds = p // n_chains
     idx = lax.axis_index(axis)
@@ -154,7 +156,7 @@ def bcast_allgather_local(x: jax.Array, axis: str, *, n_chains: int) -> jax.Arra
 def ring_reduce_scatter_local(x: jax.Array, axis: str, *, direction: int = +1) -> jax.Array:
     """Ring reduce-scatter. x: (P*n,) full per-device contribution; returns
     (n,) — the sum over devices of shard idx."""
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     idx = lax.axis_index(axis)
     n = x.shape[0] // p
     xv = x.reshape((p, n) + x.shape[1:])
@@ -171,7 +173,7 @@ def ring_reduce_scatter_local(x: jax.Array, axis: str, *, direction: int = +1) -
 
 def bidi_ring_reduce_scatter_local(x: jax.Array, axis: str) -> jax.Array:
     """Both directions carry half the shard each."""
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     n = x.shape[0] // p
     half = n // 2
     xv = x.reshape(p, n)
@@ -190,7 +192,7 @@ def concurrent_ag_rs_local(ag_shard: jax.Array, rs_full: jax.Array, axis: str):
     (counter-clockwise). The two ppermute streams use opposite ICI directions,
     so — like the paper's {AG_mc, RS_inc} pairing — they do not share a link
     bottleneck. Returns (ag_full (P*n,), rs_shard (m,))."""
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     idx = lax.axis_index(axis)
     n = ag_shard.shape[0]
     m = rs_full.shape[0] // p
@@ -236,7 +238,7 @@ def make_allgather(mesh: Mesh, axis: str, mode: str = "bidi", *, n_chains: int |
             n_chains=n_chains or mesh.shape[axis],
         ),
     }[mode]
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         local, mesh=mesh, in_specs=P(axis), out_specs=P(), check_vma=False
     )
     return jax.jit(sm)
@@ -248,7 +250,7 @@ def make_reduce_scatter(mesh: Mesh, axis: str, mode: str = "bidi"):
         "ring": functools.partial(ring_reduce_scatter_local, axis=axis),
         "bidi": functools.partial(bidi_ring_reduce_scatter_local, axis=axis),
     }[mode]
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         local, mesh=mesh, in_specs=P(), out_specs=P(axis), check_vma=False
     )
     return jax.jit(sm)
@@ -259,5 +261,5 @@ def make_broadcast(mesh: Mesh, axis: str, *, root: int = 0, n_chunks: int = 8):
     local = functools.partial(
         pipelined_broadcast_local, axis=axis, root=root, n_chunks=n_chunks
     )
-    sm = jax.shard_map(local, mesh=mesh, in_specs=P(axis), out_specs=P(), check_vma=False)
+    sm = compat.shard_map(local, mesh=mesh, in_specs=P(axis), out_specs=P(), check_vma=False)
     return jax.jit(sm)

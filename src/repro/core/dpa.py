@@ -82,14 +82,20 @@ def _pool_chunk_rate(transport: str, n_threads: int) -> float:
     return rate
 
 
+def pool_tput(cfg: DpaConfig) -> float:
+    """Uncapped processing capacity of the thread pool (bytes/s): the leaf
+    service rate the discrete-event engine consumes (core/engine.py). Link
+    capping belongs to the fabric model, not the worker pool."""
+    return _pool_chunk_rate(cfg.transport, cfg.n_threads) * cfg.chunk_bytes
+
+
 def sustained_tput(cfg: DpaConfig) -> float:
     """Bytes/s the receive datapath sustains (Fig 13/14/15 model).
 
     Processing is CQE-bound: rate = chunk_rate * chunk_bytes, capped by link.
     Larger UC chunks (multi-packet RDMA writes) raise bytes-per-CQE (Fig 15).
     """
-    rate = _pool_chunk_rate(cfg.transport, cfg.n_threads)
-    return min(rate * cfg.chunk_bytes, cfg.link_bytes_per_s)
+    return min(pool_tput(cfg), cfg.link_bytes_per_s)
 
 
 def sustained_chunk_rate(cfg: DpaConfig) -> float:

@@ -1,0 +1,520 @@
+"""Shared discrete-event engine for concurrent collective streams.
+
+The protocol simulators (simulator.py) and the FSDP contention model below all
+need the same primitive: several byte streams ("flows") contending for a
+node's injection/ejection bandwidth. This module provides it once:
+
+  Engine / Link / Flow   fluid-flow discrete-event core. A Link is a bandwidth
+                         server (one direction of a NIC or one ring direction);
+                         active flows share its capacity max-min fair (equal
+                         split with per-flow rate caps, water-filling). The
+                         event loop advances between flow starts/finishes, so
+                         every flow ends up with a piecewise-linear progress
+                         curve from which chunk-granularity timestamps are
+                         recovered exactly (Flow.chunk_times).
+
+  worker_pool_completion vectorized T-server/deterministic-service queue used
+                         for the leaf receive path (staging-ring RNR drops
+                         included). O(n_workers) numpy passes instead of the
+                         old O(n_chunks) Python loop; the reference loop is
+                         kept as worker_pool_completion_loop for regression
+                         tests.
+
+  workers_from_dpa       leaf service-rate provider backed by the calibrated
+                         DPA model (core/dpa.py): within-core sublinear thread
+                         scaling and the per-core NIC-interface cap set the
+                         pool's aggregate processing rate.
+
+  simulate_fsdp_step     the paper's motivating scenario: an interleaved
+                         forward-AG + backward-RS + compute FSDP timeline at
+                         layer granularity, under three link policies —
+                         "naive" (AG and RS serialize on one shared
+                         half-duplex medium), "mcast" (the paper's M-chain
+                         multicast schedule on a full-duplex NIC), and
+                         "split" (Insight 2: AG and RS on opposite ring
+                         directions, no shared bottleneck). Reports per-phase
+                         times, per-link utilization and bubble_fraction.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.core import dpa as dpa_model
+
+if TYPE_CHECKING:  # avoid importing jax-heavy config machinery at module load
+    from repro.configs.base import ModelConfig
+
+
+# ------------------------------------------------------------------ parameters
+
+
+@dataclass(frozen=True)
+class FabricParams:
+    b_link: float = 200e9 / 8       # bytes/s per direction
+    latency: float = 2e-6           # base one-way latency
+    jitter: float = 1e-6            # max extra delay (adaptive routing, OOO)
+    p_drop: float = 0.0             # per-datagram fabric drop probability
+    mtu: int = 4096
+    alpha: float = 50e-6            # cutoff-timer slack
+
+
+@dataclass(frozen=True)
+class WorkerParams:
+    n_recv_workers: int = 1
+    thread_tput: float = 5.2 * (1 << 30)   # bytes/s per worker (Table I UD)
+    staging_chunks: int = 8192
+    rnr_barrier_hop: float = 1.5e-6
+
+
+def workers_from_dpa(cfg: dpa_model.DpaConfig, *, staging_chunks: int = 8192,
+                     rnr_barrier_hop: float = 1.5e-6) -> WorkerParams:
+    """Derive the leaf worker pool from the calibrated DPA offload model.
+
+    The pool's aggregate service rate comes from dpa.pool_tput (within-core
+    T^e latency-hiding, per-core NIC-interface cap, linear across cores) and
+    is spread evenly over the pool so the queueing model sees the sublinear
+    scaling: 16 UD threads do NOT serve 16x a single thread.
+    """
+    tput = dpa_model.pool_tput(cfg)
+    return WorkerParams(
+        n_recv_workers=cfg.n_threads,
+        thread_tput=tput / cfg.n_threads,
+        staging_chunks=staging_chunks,
+        rnr_barrier_hop=rnr_barrier_hop,
+    )
+
+
+# ---------------------------------------------------------------- fluid engine
+
+
+class Flow:
+    """One byte stream on one link. Progress is recorded as piecewise-linear
+    segments (t0, t1, bytes_at_t0, rate) by the engine event loop."""
+
+    __slots__ = ("link", "n_bytes", "tag", "t_start", "rate_cap",
+                 "remaining", "t_end", "segments", "_eps")
+
+    def __init__(self, link: "Link", n_bytes: float, t_start: float,
+                 tag: str | None, rate_cap: float | None):
+        self.link = link
+        self.n_bytes = float(n_bytes)
+        self.tag = tag
+        self.t_start = t_start
+        self.rate_cap = rate_cap
+        self.remaining = float(n_bytes)
+        # finish threshold: fluid progress accumulates O(n_bytes * 1e-16) fp
+        # error; a sub-byte relative epsilon absorbs it without ever being
+        # physically observable (sub-nanosecond at any realistic rate)
+        self._eps = 1e-9 + self.n_bytes * 1e-12
+        self.t_end: float | None = None
+        self.segments: list[tuple[float, float, float, float]] = []
+
+    @property
+    def done(self) -> bool:
+        return self.t_end is not None
+
+    def time_at_bytes(self, marks: np.ndarray) -> np.ndarray:
+        """Times at which cumulative delivered bytes reach each mark (exact on
+        the piecewise-linear progress curve)."""
+        assert self.done, "flow not finished; Engine.wait/run first"
+        if not self.segments:            # zero-byte flow
+            return np.full(np.shape(marks), self.t_end)
+        ts = [self.segments[0][0]]
+        bs = [0.0]
+        for t0, t1, b0, rate in self.segments:
+            ts.append(t1)
+            bs.append(b0 + rate * (t1 - t0))
+        bs[-1] = self.n_bytes            # kill accumulated fp error at the end
+        return np.interp(np.asarray(marks, dtype=float), bs, ts)
+
+    def chunk_times(self, n_chunks: int, chunk_bytes: float) -> np.ndarray:
+        """Completion time of each chunk's last byte."""
+        marks = (np.arange(n_chunks) + 1.0) * chunk_bytes
+        return self.time_at_bytes(np.minimum(marks, self.n_bytes))
+
+
+class Link:
+    """Bandwidth server: capacity is max-min shared among active flows."""
+
+    __slots__ = ("name", "capacity", "active", "bytes_served")
+
+    def __init__(self, name: str, capacity: float):
+        assert capacity > 0, (name, capacity)
+        self.name = name
+        self.capacity = float(capacity)
+        self.active: list[Flow] = []
+        self.bytes_served = 0.0
+
+    def rates(self) -> dict[Flow, float]:
+        """Water-fill the capacity among active flows honoring rate caps."""
+        flows = self.active
+        if not flows:
+            return {}
+        out: dict[Flow, float] = {}
+        left = list(flows)
+        cap = self.capacity
+        while left:
+            share = cap / len(left)
+            capped = [f for f in left if f.rate_cap is not None and f.rate_cap < share]
+            if not capped:
+                for f in left:
+                    out[f] = share
+                break
+            for f in capped:
+                out[f] = f.rate_cap
+                cap -= f.rate_cap
+                left.remove(f)
+        return out
+
+
+class Engine:
+    """Event-driven fluid simulator. Flows may be submitted with future start
+    times; the loop advances between starts and finishes, recomputing each
+    link's max-min rate allocation at every event."""
+
+    def __init__(self, t0: float = 0.0):
+        self.now = t0
+        self._links: dict[str, Link] = {}
+        self._pending: list[tuple[float, int, Flow]] = []   # start events
+        self._active: list[Flow] = []
+        self._seq = itertools.count()
+
+    # -- construction
+    def add_link(self, name: str, capacity: float) -> Link:
+        if name not in self._links:
+            self._links[name] = Link(name, capacity)
+        return self._links[name]
+
+    def submit(self, link: str, n_bytes: float, *, t_start: float | None = None,
+               tag: str | None = None, rate_cap: float | None = None) -> Flow:
+        t = self.now if t_start is None else float(t_start)
+        assert t >= self.now - 1e-12, (t, self.now, "cannot submit in the past")
+        flow = Flow(self._links[link], n_bytes, t, tag, rate_cap)
+        heapq.heappush(self._pending, (t, next(self._seq), flow))
+        return flow
+
+    # -- event loop
+    def _progress(self, dt: float, rates: dict[Flow, float]) -> None:
+        if dt <= 0:
+            return
+        for f in self._active:
+            r = rates.get(f, 0.0)
+            f.segments.append((self.now, self.now + dt, f.n_bytes - f.remaining, r))
+            moved = min(r * dt, f.remaining)
+            f.remaining -= moved
+            f.link.bytes_served += moved
+
+    def _step(self, t_limit: float) -> bool:
+        """Advance to the next event (or t_limit). Returns False when idle."""
+        rates: dict[Flow, float] = {}
+        for link in self._links.values():
+            rates.update(link.rates())
+        t_next = t_limit
+        if self._pending:
+            t_next = min(t_next, self._pending[0][0])
+        for f in self._active:
+            r = rates.get(f, 0.0)
+            if r > 0:
+                t_next = min(t_next, self.now + f.remaining / r)
+        if t_next == math.inf:
+            return False
+        self._progress(t_next - self.now, rates)
+        self.now = t_next
+        # finishes (also flows whose residual would not advance the clock —
+        # their finish time is indistinguishable from `now` in float64)
+        still = []
+        for f in self._active:
+            r = rates.get(f, 0.0)
+            stalled = r > 0 and self.now + f.remaining / r <= self.now
+            if f.remaining <= f._eps or stalled:
+                f.remaining = 0.0
+                f.t_end = self.now
+                f.link.active.remove(f)
+            else:
+                still.append(f)
+        self._active = still
+        # starts
+        while self._pending and self._pending[0][0] <= self.now + 1e-15:
+            _, _, f = heapq.heappop(self._pending)
+            if f.n_bytes <= 0:
+                f.t_end = max(self.now, f.t_start)
+            else:
+                f.link.active.append(f)
+                self._active.append(f)
+        return bool(self._active or self._pending)
+
+    def advance_to(self, t: float) -> None:
+        while self.now < t and self._step(t):
+            pass
+        self.now = max(self.now, t)
+
+    def wait(self, *flows: Flow) -> float:
+        """Advance until all given flows complete; returns the completion time
+        of the latest one."""
+        while any(not f.done for f in flows):
+            if not self._step(math.inf):
+                break
+        assert all(f.done for f in flows), "deadlock: flows never started"
+        return max(f.t_end for f in flows)
+
+    def run(self) -> float:
+        """Drain every submitted flow; returns the final time."""
+        while self._step(math.inf):
+            pass
+        return self.now
+
+    def utilization(self, horizon: float | None = None) -> dict[str, float]:
+        """Per-link bytes_served / (capacity * horizon)."""
+        h = horizon if horizon is not None else self.now
+        if h <= 0:
+            return {n: 0.0 for n in self._links}
+        return {n: l.bytes_served / (l.capacity * h) for n, l in self._links.items()}
+
+
+# ------------------------------------------------- leaf worker pool (receive)
+
+
+def worker_pool_completion_loop(arrivals: np.ndarray, n_workers: int,
+                                service: float, staging: int) -> tuple[np.ndarray, int]:
+    """Reference O(n) implementation of the T-server deterministic-service
+    queue with staging-ring (RNR) overflow counting. arrivals must be sorted.
+    Kept verbatim from the pre-engine simulator as the regression oracle."""
+    n = arrivals.shape[0]
+    done = np.empty(n)
+    rnr = 0
+    for k in range(n):
+        start = arrivals[k] if k < n_workers else max(arrivals[k], done[k - n_workers])
+        if k >= staging and done[k - staging] > arrivals[k]:
+            rnr += 1
+        done[k] = start + service
+    return done, rnr
+
+
+def worker_pool_completion(arrivals: np.ndarray, n_workers: int,
+                           service: float, staging: int) -> tuple[np.ndarray, int]:
+    """Vectorized equivalent of worker_pool_completion_loop.
+
+    With deterministic service s and round-robin dispatch, chunks k, k+W,
+    k+2W, ... form independent single-server chains:
+        done_i = max(a_i, done_{i-1}) + s = (i+1)s + max_{j<=i}(a_j - j*s)
+    — a running max per residue class, so the whole pool is n_workers numpy
+    maximum.accumulate passes.
+    """
+    n = arrivals.shape[0]
+    if n == 0:
+        return np.empty(0), 0
+    done = np.empty(n)
+    w = max(int(n_workers), 1)
+    for r in range(min(w, n)):
+        idx = np.arange(r, n, w)
+        i = np.arange(idx.size, dtype=float)
+        shifted = arrivals[idx] - i * service
+        done[idx] = np.maximum.accumulate(shifted) + (i + 1.0) * service
+    if n > staging:
+        rnr = int(np.count_nonzero(done[: n - staging] > arrivals[staging:]))
+    else:
+        rnr = 0
+    return done, rnr
+
+
+# ----------------------------------------------------- FSDP contention model
+
+
+FSDP_POLICIES = ("naive", "mcast", "split")
+
+
+@dataclass
+class FsdpStepResult:
+    policy: str
+    step_time: float                  # wall time of fwd + bwd (+ RS drain)
+    compute_time: float               # sum of useful layer compute
+    bubble_fraction: float            # 1 - compute_time / step_time
+    phase_times: dict[str, float]     # forward / backward / rs_drain
+    link_utilization: dict[str, float]
+    ag_bytes: float                   # per-node AG bytes moved (dominant dir)
+    rs_bytes: float
+    n_layers: int
+    p: int
+
+
+def _layer_bytes_from_model(model: "ModelConfig", dtype_bytes: int) -> tuple[int, float]:
+    """(n_layers, bytes of parameters per layer) from a registered config.
+    Imported lazily: configs pull in the jax model builders."""
+    from repro.models.model_builder import count_params_analytic
+
+    n_layers = model.num_layers
+    return n_layers, count_params_analytic(model) / n_layers * dtype_bytes
+
+
+def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
+                       n_layers: int = 32, layer_bytes: float = 256e6,
+                       p: int = 16,
+                       fabric: FabricParams | None = None,
+                       policy: str = "naive",
+                       n_chains: int = 2,
+                       tokens_per_device: int = 4096,
+                       hw_flops: float = 200e12,
+                       dtype_bytes: int = 2) -> FsdpStepResult:
+    """Interleaved forward-AG + backward-RS + compute FSDP timeline.
+
+    Per layer the parameters live sharded 1/p per node; the forward pass
+    allgathers layer i+1 during layer i's compute (prefetch), the backward
+    pass re-gathers parameters in reverse order while asynchronously
+    reduce-scattering each layer's gradients — the AG and RS streams overlap
+    and contend for the node's injection/ejection bandwidth. Policies:
+
+      naive   AG and RS are P2P rings on one shared half-duplex medium of
+              capacity B: every flow carries send+recv bytes and serializes.
+      mcast   the paper's M-chain multicast Allgather on a full-duplex NIC:
+              AG injects only the node's own shard (the switch replicates),
+              its receive stream shares the ejection link with the ring RS
+              receive stream; chain activation adds R = P/M latency hops.
+      split   Insight 2 direction split: the {AG_mc, RS_inc} pairing of
+              cost_model.mc_inc_share — AG_mc is receive-bound (injects only
+              1/P), RS_inc is send-bound (in-network reduction: the node
+              receives only its reduced shard), so neither direction is a
+              shared bottleneck (the torus analogue is concurrent_ag_rs in
+              core/collectives.py: AG clockwise, RS counter-clockwise).
+
+    bubble_fraction = 1 - compute_time / step_time: the fraction of the step
+    the compute units sit idle waiting on exposed communication.
+    """
+    assert policy in FSDP_POLICIES, policy
+    fabric = fabric or FabricParams()
+    if model is not None:
+        n_layers, layer_bytes = _layer_bytes_from_model(model, dtype_bytes)
+    assert p >= 2 and n_layers >= 1
+
+    b = fabric.b_link
+    gather_bytes = (p - 1) / p * layer_bytes     # bytes a node must receive
+    shard_bytes = layer_bytes / p
+    fwd_t = 2.0 * (layer_bytes / dtype_bytes) * tokens_per_device / hw_flops
+    bwd_t = 2.0 * fwd_t
+
+    eng = Engine()
+    if policy == "naive":
+        eng.add_link("shared", b)
+
+        def submit_ag(t):
+            # ring AG: (p-1)/p*L sent + received, all through the shared medium
+            return [eng.submit("shared", 2 * gather_bytes, t_start=t, tag="ag")]
+
+        def submit_rs(t):
+            return [eng.submit("shared", 2 * gather_bytes, t_start=t, tag="rs")]
+
+        ag_sync = (p - 1) * fabric.latency
+    else:  # mcast / split share the multicast AG; they differ in the RS side
+        eng.add_link("send", b)
+        eng.add_link("recv", b)
+
+        def submit_ag(t):
+            # AG_mc: receive-bound (send share 1/p — cost_model.mc_inc_share)
+            return [eng.submit("send", shard_bytes, t_start=t, tag="ag"),
+                    eng.submit("recv", gather_bytes, t_start=t, tag="ag")]
+
+        if policy == "mcast":
+            def submit_rs(t):
+                # ring RS: full gather bytes in both directions, so its
+                # receive stream contends with AG_mc on the ejection link
+                return [eng.submit("send", gather_bytes, t_start=t, tag="rs"),
+                        eng.submit("recv", gather_bytes, t_start=t, tag="rs")]
+        else:
+            def submit_rs(t):
+                # RS_inc: send-bound — the switch reduces in-network, the
+                # node receives only its own reduced shard
+                return [eng.submit("send", gather_bytes, t_start=t, tag="rs"),
+                        eng.submit("recv", shard_bytes, t_start=t, tag="rs")]
+
+        rounds = max(p // max(n_chains, 1), 1)
+        ag_sync = rounds * fabric.latency
+
+    compute_total = 0.0
+
+    # ---- forward: AG(i+1) prefetched at compute-start of layer i
+    ag = [None] * n_layers
+    ag[0] = submit_ag(0.0)
+    t = 0.0
+    for i in range(n_layers):
+        t_ready = eng.wait(*ag[i]) + ag_sync
+        start = max(t, t_ready)
+        if i + 1 < n_layers:
+            ag[i + 1] = submit_ag(start)
+        t = start + fwd_t
+        compute_total += fwd_t
+    t_fwd_end = t
+
+    # ---- backward: re-gather params in reverse order, RS grads async
+    ag_b = [None] * n_layers
+    ag_b[n_layers - 1] = submit_ag(t_fwd_end)
+    rs_flows: list[Flow] = []
+    for i in range(n_layers - 1, -1, -1):
+        t_ready = eng.wait(*ag_b[i]) + ag_sync
+        start = max(t, t_ready)
+        if i - 1 >= 0:
+            ag_b[i - 1] = submit_ag(start)
+        t = start + bwd_t
+        compute_total += bwd_t
+        rs_flows += submit_rs(t)
+    t_bwd_end = t
+
+    t_rs_done = eng.wait(*rs_flows) if rs_flows else t_bwd_end
+    step_time = max(t_bwd_end, t_rs_done)
+    eng.advance_to(step_time)
+
+    return FsdpStepResult(
+        policy=policy,
+        step_time=step_time,
+        compute_time=compute_total,
+        bubble_fraction=1.0 - compute_total / step_time,
+        phase_times={
+            "forward": t_fwd_end,
+            "backward": t_bwd_end - t_fwd_end,
+            "rs_drain": max(t_rs_done - t_bwd_end, 0.0),
+        },
+        link_utilization=eng.utilization(step_time),
+        ag_bytes=gather_bytes * 2 * n_layers,   # forward prefetch + bwd re-gather
+        rs_bytes=gather_bytes * n_layers,       # one RS per layer, backward only
+        n_layers=n_layers,
+        p=p,
+    )
+
+
+def sweep_fsdp_contention(*, ps=(8, 16, 64), layer_bytes=(64e6, 256e6),
+                          n_layers: int = 8,
+                          fabric: FabricParams | None = None,
+                          policies=FSDP_POLICIES,
+                          hw_flops: float = 200e12,
+                          tokens_per_device: int = 4096) -> list[dict]:
+    """Grid of simulate_fsdp_step calls — the benchmarks/run.py --smoke sweep
+    and the paper_figs FSDP-contention table both render these rows."""
+    fabric = fabric or FabricParams()
+    rows = []
+    for p in ps:
+        for lb in layer_bytes:
+            per_policy = {}
+            for pol in policies:
+                r = simulate_fsdp_step(
+                    n_layers=n_layers, layer_bytes=lb, p=p, fabric=fabric,
+                    policy=pol, hw_flops=hw_flops,
+                    tokens_per_device=tokens_per_device,
+                )
+                per_policy[pol] = r
+                rows.append({
+                    "p": p, "layer_bytes": lb, "policy": pol,
+                    "step_time": r.step_time,
+                    "bubble_fraction": r.bubble_fraction,
+                    "link_utilization": r.link_utilization,
+                })
+            if "naive" in per_policy and "split" in per_policy:
+                assert (per_policy["split"].bubble_fraction
+                        <= per_policy["naive"].bubble_fraction + 1e-12), (
+                    p, lb, per_policy["split"].bubble_fraction,
+                    per_policy["naive"].bubble_fraction,
+                )
+    return rows

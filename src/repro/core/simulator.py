@@ -7,32 +7,25 @@ worker pool (CPU or DPA threads; service = chunk/thread_tput), staging-ring
 occupancy (RNR drops), cutoff timer, fetch-ring recovery, RNR barrier and the
 final ring handshake. Produces the phase breakdown of Fig. 10, the throughput
 curves of Fig. 11 and the drop-recovery behaviour the property tests verify.
+
+The bandwidth timing (root injection, per-round leaf ingest under M concurrent
+chains) runs on the shared fluid engine (core/engine.py); the leaf receive
+queue uses its vectorized worker pool. FabricParams / WorkerParams live in
+engine.py and are re-exported here for backwards compatibility.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import schedule as sched
-
-
-@dataclass(frozen=True)
-class FabricParams:
-    b_link: float = 200e9 / 8       # bytes/s per direction
-    latency: float = 2e-6           # base one-way latency
-    jitter: float = 1e-6            # max extra delay (adaptive routing, OOO)
-    p_drop: float = 0.0             # per-datagram fabric drop probability
-    mtu: int = 4096
-    alpha: float = 50e-6            # cutoff-timer slack
-
-
-@dataclass(frozen=True)
-class WorkerParams:
-    n_recv_workers: int = 1
-    thread_tput: float = 5.2 * (1 << 30)   # bytes/s per worker (Table I UD)
-    staging_chunks: int = 8192
-    rnr_barrier_hop: float = 1.5e-6
+from repro.core.engine import (  # noqa: F401  (re-exported public API)
+    Engine,
+    FabricParams,
+    WorkerParams,
+    worker_pool_completion,
+    workers_from_dpa,
+)
 
 
 @dataclass
@@ -55,39 +48,37 @@ class BcastResult:
     rnr_drops: int
     bytes_fast: int
     bytes_recovery: int
+    bytes_total: int                  # conservation: fast + recovery == total
 
     @property
     def time(self) -> float:
         return float(self.completion.max(initial=0.0))
 
 
-def _worker_pool_completion(arrivals: np.ndarray, n_workers: int, service: float,
-                            staging: int) -> tuple[np.ndarray, int]:
-    """Completion times of a T-server queue with deterministic service; also
-    counts staging-overflow (RNR) drops. arrivals must be sorted."""
-    n = arrivals.shape[0]
-    done = np.empty(n)
-    rnr = 0
-    for k in range(n):
-        start = arrivals[k] if k < n_workers else max(arrivals[k], done[k - n_workers])
-        # staging occupancy at this arrival: arrived-but-not-processed
-        if k >= staging and done[k - staging] > arrivals[k]:
-            rnr += 1
-        done[k] = start + service
-    return done, rnr
+def _chunking(n_bytes: int, mtu: int) -> tuple[int, int]:
+    n_chunks = max(-(-n_bytes // mtu), 1)
+    chunk = min(mtu, n_bytes) if n_bytes else mtu
+    return n_chunks, chunk
+
+
+def _rnr_barrier(p: int, fabric: FabricParams, workers: WorkerParams) -> float:
+    # RNR barrier: recursive doubling (§V-A)
+    rounds = int(np.ceil(np.log2(max(p, 2))))
+    return rounds * (fabric.latency + workers.rnr_barrier_hop)
 
 
 def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
                        workers: WorkerParams, rng: np.random.Generator,
                        root: int = 0) -> BcastResult:
-    n_chunks = max(-(-n_bytes // fabric.mtu), 1)
-    chunk = min(fabric.mtu, n_bytes) if n_bytes else fabric.mtu
+    n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
+    t_rnr = _rnr_barrier(p, fabric, workers)
 
-    # RNR barrier: recursive doubling (§V-A)
-    rnr_rounds = int(np.ceil(np.log2(max(p, 2))))
-    t_rnr = rnr_rounds * (fabric.latency + workers.rnr_barrier_hop)
-
-    inject = t_rnr + (np.arange(n_chunks) + 1) * (chunk / fabric.b_link)
+    # root injection: a single flow on the root's send link
+    eng = Engine()
+    eng.add_link("root.send", fabric.b_link)
+    flow = eng.submit("root.send", n_chunks * chunk, t_start=t_rnr)
+    eng.run()
+    inject = flow.chunk_times(n_chunks, chunk)
     service = chunk / workers.thread_tput
 
     completion = np.zeros(p)
@@ -96,7 +87,6 @@ def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
     fast_total = 0
     t_mcast_end = t_rnr
     t_rel_end = 0.0
-    leaf_missing: dict[int, np.ndarray] = {}
 
     cutoff = t_rnr + n_bytes / fabric.b_link + fabric.alpha
 
@@ -107,7 +97,7 @@ def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
         delay = fabric.latency + rng.uniform(0.0, fabric.jitter, size=n_chunks)
         dropped = rng.random(n_chunks) < fabric.p_drop
         arrivals = np.sort((inject + delay)[~dropped])
-        done, rnr = _worker_pool_completion(
+        done, rnr = worker_pool_completion(
             arrivals, workers.n_recv_workers, service, workers.staging_chunks
         )
         rnr_total += rnr
@@ -145,6 +135,7 @@ def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
         rnr_drops=rnr_total,
         bytes_fast=fast_total * chunk,
         bytes_recovery=recovered_total * chunk,
+        bytes_total=(p - 1) * n_chunks * chunk,
     )
 
 
@@ -155,6 +146,7 @@ class AllgatherResult:
     recovered: int
     bytes_fast: int
     bytes_recovery: int
+    bytes_total: int
     per_rank_recv_tput: float         # (P-1)*N / time  (Fig. 11 metric)
 
 
@@ -163,16 +155,18 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
                        n_chains: int = 1) -> AllgatherResult:
     """Allgather = R sequential rounds of M concurrent Broadcasts (§IV-A).
     Within a round the M chain roots multicast concurrently; the leaf receive
-    path (link + worker pool) is the shared bottleneck; rounds are chained by
-    the activation signal."""
+    path (link + worker pool) is the shared bottleneck — modeled as M flows
+    contending for the leaf's ejection link in the fluid engine; rounds are
+    chained by the activation signal."""
     assert p % n_chains == 0
     rounds = p // n_chains
-    n_chunks = max(-(-n_bytes // fabric.mtu), 1)
-    chunk = min(fabric.mtu, n_bytes) if n_bytes else fabric.mtu
+    n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
     service = chunk / workers.thread_tput
 
-    rnr_rounds = int(np.ceil(np.log2(max(p, 2))))
-    t_rnr = rnr_rounds * (fabric.latency + workers.rnr_barrier_hop)
+    t_rnr = _rnr_barrier(p, fabric, workers)
+
+    eng = Engine()
+    eng.add_link("leaf.recv", fabric.b_link)
 
     t = t_rnr
     recovered_total = 0
@@ -180,20 +174,23 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
     rec_bytes = 0
     mcast_time = 0.0
     rel_time = 0.0
-    for r in range(rounds):
+    for _ in range(rounds):
         m = n_chains
         total_chunks = m * n_chunks
-        # merged arrival stream at the leaf: m roots inject concurrently;
-        # leaf ingest capped by the receive link
-        rate = min(fabric.b_link, m * fabric.b_link) / chunk  # chunks/s in
-        inject = t + (np.arange(total_chunks) + 1) / (m * fabric.b_link / chunk)
-        arrive_spacing = np.maximum.accumulate(
-            np.maximum(inject, t + (np.arange(total_chunks) + 1) / rate)
+        # m chain roots inject concurrently; the leaf's ejection link is the
+        # shared resource — m equal flows, each chain rate b_link/m
+        flows = [
+            eng.submit("leaf.recv", n_chunks * chunk, t_start=t, tag=f"chain{c}")
+            for c in range(m)
+        ]
+        eng.run()
+        arrive_spacing = np.sort(
+            np.concatenate([f.chunk_times(n_chunks, chunk) for f in flows])
         )
         delay = fabric.latency + rng.uniform(0.0, fabric.jitter, size=total_chunks)
         dropped = rng.random(total_chunks) < fabric.p_drop
         arrivals = np.sort((arrive_spacing + delay)[~dropped])
-        done, rnr = _worker_pool_completion(
+        done, rnr = worker_pool_completion(
             arrivals, workers.n_recv_workers, service, workers.staging_chunks
         )
         t_fast = done[-1] if done.size else t
@@ -208,8 +205,9 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
         mcast_time += max(t_fast - t, 0.0)
         fast_bytes += (total_chunks - missing) * chunk
         rec_bytes += missing * chunk
-        # activation signal to the next root in every chain
-        t = t_round_end + fabric.latency
+        # activation signal to the next root in every chain; the engine clock
+        # can only run ahead of t_round_end if every chunk was dropped
+        t = max(t_round_end + fabric.latency, eng.now)
 
     t_done = t + fabric.latency  # final handshake
     phases = PhaseBreakdown(
@@ -223,6 +221,7 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
         recovered=recovered_total,
         bytes_fast=fast_bytes,
         bytes_recovery=rec_bytes,
+        bytes_total=p * n_chunks * chunk,
         per_rank_recv_tput=total / t_done,
     )
 

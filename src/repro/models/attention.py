@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -280,7 +282,7 @@ def flash_decode_attention(
         return out.reshape(bl, h, hd).astype(q_l.dtype)
 
     dp = P(batch_axes)
-    return jax.shard_map(
+    return compat.shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(

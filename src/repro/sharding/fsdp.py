@@ -27,6 +27,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import CollectiveConfig, MeshConfig
+from repro import compat
 from repro.core import collectives as C
 from repro.sharding.specs import _leaf_spec, dp_axes
 
@@ -63,7 +64,7 @@ def gather_dim(x: jax.Array, spec: P, axis: str, dim: int, mesh: Mesh,
         out = full.reshape((p * moved.shape[0],) + moved.shape[1:])
         return jnp.moveaxis(out, 0, dim)
 
-    y = jax.shard_map(
+    y = compat.shard_map(
         local, mesh=mesh, in_specs=spec, out_specs=out_spec, check_vma=False
     )(x)
     return y, out_spec

@@ -1,0 +1,123 @@
+"""Minimal offline stand-in for `hypothesis` so the property suites collect
+and run with zero network access (the real package is preferred when present).
+
+Exposes the subset the repo's tests use:
+
+    from _hypothesis_shim import given, settings, strategies as st
+
+Strategies are seeded-random samplers (numpy Generator); `given` derives a
+deterministic per-test seed from the test name, so runs are reproducible and
+failures repeatable. This shim does NOT shrink counterexamples or track a
+database — it is a sampler, not a replacement for real hypothesis.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    """A sampler: example(rng) -> value. map/flatmap/filter compose lazily."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+    def map(self, fn) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+    def flatmap(self, fn) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._sample(rng)).example(rng))
+
+    def filter(self, pred) -> "_Strategy":
+        def sample(rng):
+            for _ in range(1000):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too strict (1000 rejections)")
+        return _Strategy(sample)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[int(rng.integers(0, len(items)))])
+
+
+def lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(sample)
+
+
+def composite(fn):
+    """@st.composite: fn(draw, *args) -> value. draw(strategy) samples it."""
+    def builder(*args, **kw):
+        def sample(rng):
+            return fn(lambda strategy: strategy.example(rng), *args, **kw)
+        return _Strategy(sample)
+    return builder
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kw):
+            # looked up lazily so @settings works as inner OR outer decorator
+            # (outer @settings annotates `run`, inner annotates `fn`)
+            cfg = getattr(run, "_shim_settings", None) or getattr(
+                fn, "_shim_settings", {}
+            )
+            max_examples = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(max_examples):
+                drawn = [s.example(rng) for s in strategies]
+                try:
+                    fn(*args, *drawn, **kw)
+                except Exception as e:  # noqa: BLE001 — annotate and re-raise
+                    raise AssertionError(
+                        f"property failed on example {i}: {drawn!r}"
+                    ) from e
+        # pytest must not see the property's drawn parameters as fixtures
+        del run.__wrapped__
+        return run
+    return deco
+
+
+class _StrategiesNamespace:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    composite = staticmethod(composite)
+
+
+strategies = _StrategiesNamespace()
+st = strategies

@@ -28,6 +28,7 @@ def test_reduce_scatter_and_concurrent(multidev):
         """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro import compat
 from repro.core import collectives as C
 mesh = jax.make_mesh((8,), ('x',))
 n = 64
@@ -35,14 +36,14 @@ full = jnp.arange(8 * n, dtype=jnp.float32)
 per_dev = jnp.stack([full * (i + 1) for i in range(8)])
 for mode, local in [('ring', C.ring_reduce_scatter_local),
                     ('bidi', C.bidi_ring_reduce_scatter_local)]:
-    sm = jax.shard_map(lambda x: local(x[0], 'x'), mesh=mesh,
+    sm = compat.shard_map(lambda x: local(x[0], 'x'), mesh=mesh,
                        in_specs=P('x'), out_specs=P('x'), check_vma=False)
     out = sm(per_dev)
     expect = np.asarray(full).reshape(8, n) * 36
     assert np.allclose(np.asarray(out), expect.reshape(-1)), mode
 # concurrent AG+RS (direction split)
 sharded = jax.device_put(full, NamedSharding(mesh, P('x')))
-agf, rss = jax.jit(lambda a, r: jax.shard_map(
+agf, rss = jax.jit(lambda a, r: compat.shard_map(
     lambda aa, rr: C.concurrent_ag_rs_local(aa, rr[0], 'x'),
     mesh=mesh, in_specs=(P('x'), P('x')), out_specs=(P(), P('x')),
     check_vma=False)(a, r))(sharded, per_dev.reshape(8, 8 * n))

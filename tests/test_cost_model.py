@@ -1,7 +1,10 @@
 """Cost-model + topology traffic properties (paper Fig 2 / 12, Appendix B)."""
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
+    from _hypothesis_shim import given, settings, strategies as st
 import pytest
-from hypothesis import given, settings
 
 from repro.core import cost_model as cm
 from repro.core.topology import FatTree, Torus2D

@@ -1,0 +1,145 @@
+"""Discrete-event engine invariants: byte conservation, monotonicity in drop
+rate and message size, determinism, and fluid-engine bookkeeping."""
+import numpy as np
+import pytest
+
+from repro.core.dpa import DpaConfig, pool_tput
+from repro.core.engine import Engine, FabricParams, WorkerParams, workers_from_dpa
+from repro.core.simulator import simulate_allgather, simulate_broadcast
+
+
+# ------------------------------------------------------------- fluid core
+
+
+def test_single_flow_runs_at_capacity():
+    eng = Engine()
+    eng.add_link("l", 100.0)
+    f = eng.submit("l", 1000.0)
+    eng.run()
+    assert f.t_end == pytest.approx(10.0)
+    np.testing.assert_allclose(f.chunk_times(4, 250.0), [2.5, 5.0, 7.5, 10.0])
+
+
+def test_two_flows_share_capacity_max_min():
+    eng = Engine()
+    eng.add_link("l", 100.0)
+    a = eng.submit("l", 500.0)
+    b = eng.submit("l", 1500.0)
+    eng.run()
+    # equal split while both active: a done at 10s; b then runs alone
+    assert a.t_end == pytest.approx(10.0)
+    assert b.t_end == pytest.approx(20.0)
+    assert eng.utilization()["l"] == pytest.approx(1.0)
+
+
+def test_rate_cap_water_filling():
+    eng = Engine()
+    eng.add_link("l", 100.0)
+    capped = eng.submit("l", 100.0, rate_cap=10.0)
+    free = eng.submit("l", 900.0)
+    eng.run()
+    # capped flow runs at 10; the other water-fills to 90
+    assert capped.t_end == pytest.approx(10.0)
+    assert free.t_end == pytest.approx(10.0)
+
+
+def test_future_start_and_zero_byte_flow():
+    eng = Engine()
+    eng.add_link("l", 10.0)
+    z = eng.submit("l", 0.0, t_start=3.0)
+    f = eng.submit("l", 10.0, t_start=5.0)
+    eng.run()
+    assert z.t_end == pytest.approx(3.0)
+    assert f.t_end == pytest.approx(6.0)
+
+
+def test_large_flow_terminates_without_fp_spin():
+    # regression: residual fp bytes must not stall the event loop
+    eng = Engine()
+    eng.add_link("l", 200e9 / 8)
+    flows = [eng.submit("l", 256e6 * (1 + 0.1 * i)) for i in range(5)]
+    eng.run()
+    assert all(f.done for f in flows)
+
+
+# ------------------------------------------------------- protocol invariants
+
+
+def _run_bcast(p=8, n=1 << 20, seed=0, **fab):
+    return simulate_broadcast(p, n, FabricParams(**fab), WorkerParams(8),
+                              np.random.default_rng(seed))
+
+
+def _run_ag(p=8, n=1 << 18, seed=0, n_chains=1, **fab):
+    return simulate_allgather(p, n, FabricParams(**fab), WorkerParams(8),
+                              np.random.default_rng(seed), n_chains=n_chains)
+
+
+@pytest.mark.parametrize("p_drop", [0.0, 0.01, 0.2])
+def test_broadcast_byte_conservation(p_drop):
+    r = _run_bcast(p_drop=p_drop)
+    assert r.bytes_fast + r.bytes_recovery == r.bytes_total
+    assert r.delivered_fast + r.recovered == r.bytes_total // 4096
+
+
+@pytest.mark.parametrize("n_chains", [1, 2, 8])
+@pytest.mark.parametrize("p_drop", [0.0, 0.05])
+def test_allgather_byte_conservation(n_chains, p_drop):
+    r = _run_ag(n_chains=n_chains, p_drop=p_drop)
+    assert r.bytes_fast + r.bytes_recovery == r.bytes_total
+
+
+def test_completion_monotone_in_p_drop():
+    times = [_run_bcast(seed=7, p_drop=d).time
+             for d in (0.0, 0.01, 0.05, 0.1, 0.3)]
+    assert all(b >= a for a, b in zip(times, times[1:])), times
+
+
+def test_allgather_monotone_in_p_drop():
+    times = [_run_ag(seed=7, p_drop=d).time for d in (0.0, 0.02, 0.1, 0.3)]
+    assert all(b >= a for a, b in zip(times, times[1:])), times
+
+
+def test_completion_monotone_in_n_bytes():
+    # jitter off: adjacent sizes differ by less than one jitter draw otherwise
+    times = [_run_bcast(n=n, jitter=0.0).time
+             for n in (1 << 16, 1 << 18, 1 << 20, 1 << 22)]
+    assert all(b >= a for a, b in zip(times, times[1:])), times
+    times = [_run_ag(n=n, jitter=0.0).time
+             for n in (1 << 14, 1 << 16, 1 << 18, 1 << 20)]
+    assert all(b >= a for a, b in zip(times, times[1:])), times
+
+
+def test_bit_identical_across_seeded_runs():
+    a = _run_bcast(seed=123, p_drop=0.02)
+    b = _run_bcast(seed=123, p_drop=0.02)
+    np.testing.assert_array_equal(a.completion, b.completion)
+    assert (a.time, a.recovered, a.bytes_fast) == (b.time, b.recovered, b.bytes_fast)
+    x = _run_ag(seed=42, p_drop=0.02, n_chains=2)
+    y = _run_ag(seed=42, p_drop=0.02, n_chains=2)
+    assert (x.time, x.recovered, x.bytes_fast) == (y.time, y.recovered, y.bytes_fast)
+
+
+# ------------------------------------------------------------- DPA wiring
+
+
+def test_workers_from_dpa_respects_sublinear_scaling():
+    one = workers_from_dpa(DpaConfig("UD", 1))
+    sixteen = workers_from_dpa(DpaConfig("UD", 16))
+    assert sixteen.n_recv_workers == 16
+    # pool throughput grows, but NOT 16x (within-core latency hiding)
+    total_1 = one.n_recv_workers * one.thread_tput
+    total_16 = sixteen.n_recv_workers * sixteen.thread_tput
+    assert total_1 < total_16 < 16 * total_1
+    assert total_16 == pytest.approx(pool_tput(DpaConfig("UD", 16)))
+
+
+def test_dpa_backed_broadcast_faster_with_more_threads():
+    fab = FabricParams()
+    rng = np.random.default_rng(0)
+    slow = simulate_broadcast(4, 8 << 20, fab,
+                              workers_from_dpa(DpaConfig("UD", 1)), rng)
+    rng = np.random.default_rng(0)
+    fast = simulate_broadcast(4, 8 << 20, fab,
+                              workers_from_dpa(DpaConfig("UD", 16)), rng)
+    assert fast.time < slow.time

@@ -1,0 +1,135 @@
+"""FSDP AG/RS injection-contention model: policy ordering, bubble accounting,
+and the vectorized worker-pool regression against the reference loop."""
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    FSDP_POLICIES,
+    FabricParams,
+    simulate_fsdp_step,
+    sweep_fsdp_contention,
+    worker_pool_completion,
+    worker_pool_completion_loop,
+)
+
+
+def test_direction_split_beats_naive_default_config():
+    """Acceptance: strictly lower bubble_fraction for the Insight-2 direction
+    split than the naive shared link on the default 200 Gbit/s fabric."""
+    naive = simulate_fsdp_step(policy="naive")
+    split = simulate_fsdp_step(policy="split")
+    assert split.bubble_fraction < naive.bubble_fraction
+    assert split.step_time < naive.step_time
+
+
+@pytest.mark.parametrize("p", [4, 16, 64])
+@pytest.mark.parametrize("layer_bytes", [16e6, 256e6])
+@pytest.mark.parametrize("n_layers", [2, 12])
+def test_split_never_worse_than_naive_grid(p, layer_bytes, n_layers):
+    res = {
+        pol: simulate_fsdp_step(n_layers=n_layers, layer_bytes=layer_bytes,
+                                p=p, policy=pol)
+        for pol in FSDP_POLICIES
+    }
+    assert res["split"].bubble_fraction <= res["naive"].bubble_fraction + 1e-12
+    # the paper's multicast schedule also never loses to the naive baseline
+    assert res["mcast"].bubble_fraction <= res["naive"].bubble_fraction + 1e-12
+
+
+def test_bubble_accounting_consistent():
+    r = simulate_fsdp_step(n_layers=6, layer_bytes=64e6, p=8, policy="mcast")
+    assert 0.0 <= r.bubble_fraction < 1.0
+    assert r.step_time >= r.compute_time
+    assert r.bubble_fraction == pytest.approx(1 - r.compute_time / r.step_time)
+    phases = r.phase_times
+    assert phases["forward"] + phases["backward"] + phases["rs_drain"] == (
+        pytest.approx(r.step_time)
+    )
+    for util in r.link_utilization.values():
+        assert 0.0 <= util <= 1.0 + 1e-9
+
+
+def test_compute_bound_regime_has_small_bubbles():
+    """With enormous compute per byte, every policy hides nearly all comms."""
+    for pol in FSDP_POLICIES:
+        r = simulate_fsdp_step(n_layers=8, layer_bytes=8e6, p=8, policy=pol,
+                               hw_flops=1e12)  # slow chip -> long compute
+        assert r.bubble_fraction < 0.1, (pol, r.bubble_fraction)
+
+
+def test_comm_bound_regime_orders_policies():
+    """Fast chip -> comms exposed: naive > mcast > split bubble fractions."""
+    res = {
+        pol: simulate_fsdp_step(n_layers=8, layer_bytes=256e6, p=16,
+                                policy=pol, hw_flops=2e15)
+        for pol in FSDP_POLICIES
+    }
+    assert res["naive"].bubble_fraction > res["mcast"].bubble_fraction
+    assert res["mcast"].bubble_fraction > res["split"].bubble_fraction
+
+
+def test_sweep_rows_and_internal_assertion():
+    rows = sweep_fsdp_contention(ps=(4, 8), layer_bytes=(32e6,), n_layers=4)
+    assert len(rows) == 2 * 1 * len(FSDP_POLICIES)
+    for row in rows:
+        assert set(row) >= {"p", "layer_bytes", "policy", "step_time",
+                            "bubble_fraction"}
+
+
+def test_model_config_parameterization():
+    """layer bytes derived from a registered model config (configs/)."""
+    from repro.configs import get_model_config
+
+    cfg = get_model_config("smollm-135m")
+    r = simulate_fsdp_step(cfg, p=8, policy="split")
+    assert r.n_layers == cfg.num_layers
+    assert r.step_time > 0
+
+
+# ------------------------------------------ vectorized worker pool regression
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_worker_pool_vectorized_matches_loop(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 2000))
+    arrivals = np.sort(rng.uniform(0, 1e-3, size=n))
+    n_workers = int(rng.integers(1, 17))
+    service = float(rng.uniform(1e-8, 1e-5))
+    staging = int(rng.integers(1, 256))
+    d_vec, rnr_vec = worker_pool_completion(arrivals, n_workers, service, staging)
+    d_loop, rnr_loop = worker_pool_completion_loop(arrivals, n_workers, service, staging)
+    np.testing.assert_allclose(d_vec, d_loop, rtol=1e-12, atol=1e-15)
+    assert rnr_vec == rnr_loop
+
+
+def test_worker_pool_edge_cases():
+    empty = np.empty(0)
+    d, rnr = worker_pool_completion(empty, 4, 1e-6, 8)
+    assert d.size == 0 and rnr == 0
+    one = np.array([1.0])
+    d, rnr = worker_pool_completion(one, 4, 1e-6, 8)
+    np.testing.assert_allclose(d, [1.0 + 1e-6])
+    assert rnr == 0
+    # more workers than chunks
+    few = np.array([0.0, 1e-7, 2e-7])
+    d_vec, r_vec = worker_pool_completion(few, 16, 1e-6, 2)
+    d_loop, r_loop = worker_pool_completion_loop(few, 16, 1e-6, 2)
+    np.testing.assert_allclose(d_vec, d_loop)
+    assert r_vec == r_loop
+
+
+def test_worker_pool_vectorized_is_fast():
+    """The vectorized path must beat the reference loop by a wide margin on
+    large-message sweeps; a relative bound stays robust on slow CI runners."""
+    import time
+
+    arrivals = np.sort(np.random.default_rng(0).uniform(0, 1.0, size=200_000))
+    t0 = time.perf_counter()
+    done, _ = worker_pool_completion(arrivals, 8, 1e-6, 8192)
+    dt_vec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    worker_pool_completion_loop(arrivals, 8, 1e-6, 8192)
+    dt_loop = time.perf_counter() - t0
+    assert done.shape == arrivals.shape
+    assert dt_vec < dt_loop / 10, (dt_vec, dt_loop)

@@ -1,8 +1,11 @@
 """Property tests: the reliable-broadcast protocol recovers from ANY drop and
 reorder pattern (paper §III) — hypothesis drives adversarial fabrics."""
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
+    from _hypothesis_shim import given, settings, strategies as st
 import numpy as np
-from hypothesis import given, settings
 
 from repro.core import protocol
 

@@ -10,6 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
+
 from repro.kernels.ring_allgather import (local_double_buffer_drain,
                                           ring_allgather_tpu, ring_schedule)
 
@@ -69,7 +71,7 @@ def test_tpu_kernel_requires_tpu():
     mesh = jax.make_mesh((jax.device_count(),), ("ring",))
     n = jax.device_count()
     x = jnp.arange(n * 8 * 128, dtype=jnp.float32).reshape(n * 8, 128)
-    f = jax.shard_map(
+    f = compat.shard_map(
         lambda xs: ring_allgather_tpu(xs, n_devices=n),
         mesh=mesh, in_specs=P("ring", None), out_specs=P(None, None),
         check_vma=False,

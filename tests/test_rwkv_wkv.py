@@ -1,10 +1,13 @@
 """Chunked (block-parallel) WKV vs the naive recurrence oracle."""
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
+    from _hypothesis_shim import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.models.rwkv import wkv_chunked, wkv_recurrent
 

@@ -1,6 +1,9 @@
 """Property tests for the Appendix-A broadcast sequencer."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import schedule
 
