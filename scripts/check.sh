@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
-# CI entrypoint: tier-1 test suite + the seconds-scale FSDP-contention smoke
-# sweep. Runs fully offline (no hypothesis/zstandard required — see README).
+# CI entrypoint: tier-1 test suite + the seconds-scale smoke sweep
+# (FSDP-contention grid, the routed fabric sweep with its
+# traffic-conservation / Insight-1 asserts capped at 512 hosts, and the
+# multi-job contention scenario — the smoke subset stays well under 60 s).
+# Runs fully offline (no hypothesis/zstandard required — see README).
 #
 #   scripts/check.sh             # everything
 #   scripts/check.sh -k engine   # extra args are forwarded to pytest

@@ -3,6 +3,9 @@
   - Traffic of P2P vs multicast Broadcast/Allgather on a fat-tree (Fig. 2),
     computed exactly by routing over ``core.topology.FatTree`` and counting
     per-link bytes (the software analogue of Fig. 12's switch counters).
+  - routed_ring_allgather: the same P2P ring schedule pushed through the
+    fluid engine as routed flows — time AND per-link bytes from one run,
+    the baseline the fabric_sweep benchmark compares multicast against.
   - The concurrent-{AG,RS} speedup S = 2 - 2/P (Appendix B).
   - Constant-time Broadcast schedule times (Fig. 10/11 throughput models):
     pipelined multicast vs k-nomial / binary trees / ring.
@@ -11,6 +14,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from repro.core.engine import Engine, FabricParams
 from repro.core.topology import FatTree
 
 
@@ -80,6 +84,36 @@ def mcast_allgather_traffic(tree: FatTree, p: int, nbytes: int) -> int:
     for root in range(p):
         tree.multicast(root, members, shard)
     return tree.counters.total()
+
+
+# ------------------------------------- routed-engine baselines (fabric sweep)
+
+
+def routed_ring_allgather(topology, p: int, nbytes: int,
+                          fabric: FabricParams | None = None,
+                          hosts=None) -> tuple[float, dict[str, float]]:
+    """The P2P ring allgather as ROUTED fluid flows: one flow per ring
+    neighbor pair carrying the whole collective's forwarding traffic
+    (P-1 rounds x N/P bytes), traversing the real up-down ECMP path. Returns
+    (completion_time, per-link bytes) from the same engine run — per-link
+    bytes are identical to the static p2p_ring_allgather_traffic pass for the
+    same schedule, but here ECMP collisions between neighbor routes actually
+    cost time. Completion adds the P-1 per-round activation latencies the
+    ring serializes on (multicast pays only its constant sync — Fig. 11)."""
+    fabric = fabric or FabricParams()
+    hosts = list(hosts) if hosts is not None else list(range(p))
+    assert len(hosts) == p, (len(hosts), p)
+    topology.reset()
+    eng = Engine()
+    shard = nbytes // p
+    flows = [
+        eng.submit_route(topology.route(hosts[i], hosts[(i + 1) % p]),
+                         (p - 1) * shard, tag="ring")
+        for i in range(p)
+    ]
+    t = eng.run()
+    assert all(f.done for f in flows)
+    return t + (p - 1) * fabric.latency, eng.link_bytes()
 
 
 # ------------------------------------------------- Appendix B: speedup S(P)

@@ -1,17 +1,31 @@
 """Shared discrete-event engine for concurrent collective streams.
 
 The protocol simulators (simulator.py) and the FSDP contention model below all
-need the same primitive: several byte streams ("flows") contending for a
-node's injection/ejection bandwidth. This module provides it once:
+need the same primitive: several byte streams ("flows") contending for
+bandwidth. This module provides it once:
 
-  Engine / Link / Flow   fluid-flow discrete-event core. A Link is a bandwidth
-                         server (one direction of a NIC or one ring direction);
-                         active flows share its capacity max-min fair (equal
-                         split with per-flow rate caps, water-filling). The
-                         event loop advances between flow starts/finishes, so
-                         every flow ends up with a piecewise-linear progress
-                         curve from which chunk-granularity timestamps are
-                         recovered exactly (Flow.chunk_times).
+  Engine / Link / Flow   fluid-flow discrete-event core. A Link is a directed
+                         bandwidth server (one direction of a NIC, one fabric
+                         cable direction, one ring direction). A Flow traverses
+                         a *route* — an ordered set of Links — and its rate is
+                         set by global max-min water-filling across every link
+                         it crosses (progressive filling: repeatedly saturate
+                         the most-constrained link, freeze its flows' rates,
+                         subtract, repeat; per-flow rate caps honored). A
+                         multicast *tree flow* (Engine.submit_tree) is the
+                         switch-replication model: its rate is the min share
+                         over every tree edge and it charges bytes_served to
+                         each edge, because the switches replicate the stream
+                         down every branch concurrently. The event loop
+                         advances between flow starts/finishes, so every flow
+                         ends up with a piecewise-linear progress curve from
+                         which chunk-granularity timestamps are recovered
+                         exactly (Flow.chunk_times). Routes come from a
+                         core/topology.py Topology (FatTree / Torus2D), whose
+                         per-link byte counters are these same Link objects —
+                         one engine run yields both the timing and the
+                         switch-port traffic (Fig. 12), with no separate
+                         static counting pass.
 
   worker_pool_completion vectorized T-server/deterministic-service queue used
                          for the leaf receive path (staging-ring RNR drops
@@ -94,15 +108,18 @@ def workers_from_dpa(cfg: dpa_model.DpaConfig, *, staging_chunks: int = 8192,
 
 
 class Flow:
-    """One byte stream on one link. Progress is recorded as piecewise-linear
-    segments (t0, t1, bytes_at_t0, rate) by the engine event loop."""
+    """One byte stream crossing an ordered set of links (a route, or the edge
+    set of a multicast tree). Its fluid rate is identical on every link it
+    crosses (cut-through, flow conservation) and is set by the engine's global
+    max-min allocation. Progress is recorded as piecewise-linear segments
+    (t0, t1, bytes_at_t0, rate) by the engine event loop."""
 
-    __slots__ = ("link", "n_bytes", "tag", "t_start", "rate_cap",
+    __slots__ = ("links", "n_bytes", "tag", "t_start", "rate_cap",
                  "remaining", "t_end", "segments", "_eps")
 
-    def __init__(self, link: "Link", n_bytes: float, t_start: float,
-                 tag: str | None, rate_cap: float | None):
-        self.link = link
+    def __init__(self, links: tuple["Link", ...], n_bytes: float,
+                 t_start: float, tag: str | None, rate_cap: float | None):
+        self.links = links
         self.n_bytes = float(n_bytes)
         self.tag = tag
         self.t_start = t_start
@@ -114,6 +131,11 @@ class Flow:
         self._eps = 1e-9 + self.n_bytes * 1e-12
         self.t_end: float | None = None
         self.segments: list[tuple[float, float, float, float]] = []
+
+    @property
+    def link(self) -> "Link | None":
+        """First (injection-side) link — the whole link for single-hop flows."""
+        return self.links[0] if self.links else None
 
     @property
     def done(self) -> bool:
@@ -140,43 +162,140 @@ class Flow:
 
 
 class Link:
-    """Bandwidth server: capacity is max-min shared among active flows."""
+    """Directed bandwidth server: capacity is max-min shared among the active
+    flows that cross it. ``src``/``dst`` carry the topology endpoints when the
+    link belongs to a core/topology.py fabric; bytes_served is the live
+    switch-port counter (Fig. 12)."""
 
-    __slots__ = ("name", "capacity", "active", "bytes_served")
+    __slots__ = ("name", "capacity", "active", "bytes_served", "src", "dst")
 
-    def __init__(self, name: str, capacity: float):
+    def __init__(self, name: str, capacity: float,
+                 src: str | None = None, dst: str | None = None):
         assert capacity > 0, (name, capacity)
         self.name = name
         self.capacity = float(capacity)
         self.active: list[Flow] = []
         self.bytes_served = 0.0
+        self.src = src
+        self.dst = dst
 
-    def rates(self) -> dict[Flow, float]:
-        """Water-fill the capacity among active flows honoring rate caps."""
-        flows = self.active
-        if not flows:
-            return {}
-        out: dict[Flow, float] = {}
-        left = list(flows)
-        cap = self.capacity
-        while left:
-            share = cap / len(left)
-            capped = [f for f in left if f.rate_cap is not None and f.rate_cap < share]
-            if not capped:
-                for f in left:
-                    out[f] = share
-                break
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Link({self.name}, cap={self.capacity:g}, bytes={self.bytes_served:g})"
+
+
+# Membership count at which the numpy progressive-filling path wins over the
+# dict-based one (crossover measured on routed fat-tree sweeps).
+_NUMPY_RATES_MIN_MEMBERS = 512
+
+
+def _max_min_rates_py(active: list[Flow]) -> dict[Flow, float]:
+    """Global max-min fair allocation by progressive filling (dict path).
+
+    Repeatedly find the most-constrained link (smallest equal share among its
+    unfrozen flows), freeze every unfrozen flow crossing any such link at that
+    share, subtract the frozen rates from every link they cross, repeat.
+    Per-flow rate caps freeze a flow early at its cap."""
+    rem: dict[Link, float] = {}
+    members: dict[Link, list[Flow]] = {}
+    for f in active:
+        for link in f.links:
+            if link not in rem:
+                rem[link] = link.capacity
+                members[link] = []
+            members[link].append(f)
+    out: dict[Flow, float] = {}
+    unfrozen: dict[Flow, None] = dict.fromkeys(active)   # insertion-ordered set
+    while unfrozen:
+        best = math.inf
+        for link, fl in members.items():
+            n = sum(1 for f in fl if f in unfrozen)
+            if n:
+                best = min(best, rem[link] / n)
+        if best is math.inf:       # every remaining flow crosses no link
+            for f in unfrozen:
+                out[f] = f.rate_cap if f.rate_cap is not None else math.inf
+            break
+        capped = [f for f in unfrozen
+                  if f.rate_cap is not None and f.rate_cap < best]
+        if capped:
             for f in capped:
                 out[f] = f.rate_cap
-                cap -= f.rate_cap
-                left.remove(f)
-        return out
+                del unfrozen[f]
+                for link in f.links:
+                    rem[link] = max(rem[link] - f.rate_cap, 0.0)
+            continue
+        newly: dict[Flow, None] = {}
+        for link, fl in members.items():
+            n = sum(1 for f in fl if f in unfrozen)
+            if n and rem[link] <= best * n * (1.0 + 1e-12):
+                for f in fl:
+                    if f in unfrozen:
+                        newly[f] = None
+        for f in newly:
+            out[f] = best
+            del unfrozen[f]
+        for f in newly:
+            for link in f.links:
+                rem[link] = max(rem[link] - best, 0.0)
+    return out
+
+
+def _max_min_rates_np(active: list[Flow]) -> dict[Flow, float]:
+    """Vectorized progressive filling over the flow-link incidence (COO):
+    identical allocation to _max_min_rates_py, used when thousands of tree
+    flows cross thousands of fabric links (1024-host fat-tree sweeps)."""
+    link_ix: dict[Link, int] = {}
+    mf: list[int] = []
+    ml: list[int] = []
+    for i, f in enumerate(active):
+        for link in f.links:
+            j = link_ix.setdefault(link, len(link_ix))
+            mf.append(i)
+            ml.append(j)
+    n_flows, n_links = len(active), len(link_ix)
+    mfa = np.asarray(mf, dtype=np.intp)
+    mla = np.asarray(ml, dtype=np.intp)
+    caps = np.empty(n_links)
+    for link, j in link_ix.items():
+        caps[j] = link.capacity
+    fcap = np.array([math.inf if f.rate_cap is None else f.rate_cap
+                     for f in active])
+    rate = np.zeros(n_flows)
+    frozen = np.zeros(n_flows, dtype=bool)
+    rem = caps.copy()
+    while not frozen.all():
+        live = ~frozen[mfa]
+        cnt = np.bincount(mla[live], minlength=n_links).astype(float)
+        has = cnt > 0
+        if not has.any():
+            rate[~frozen] = fcap[~frozen]
+            break
+        share = np.full(n_links, np.inf)
+        share[has] = rem[has] / cnt[has]
+        best = share.min()
+        cap_hit = ~frozen & (fcap < best)
+        if cap_hit.any():
+            rate[cap_hit] = fcap[cap_hit]
+            frozen |= cap_hit
+            hit_m = cap_hit[mfa]
+            rem -= np.bincount(mla[hit_m], weights=rate[mfa[hit_m]],
+                               minlength=n_links)
+            np.maximum(rem, 0.0, out=rem)
+            continue
+        tight = has & (share <= best * (1.0 + 1e-12))
+        newly = np.zeros(n_flows, dtype=bool)
+        newly[mfa[tight[mla] & live]] = True
+        rate[newly] = best
+        frozen |= newly
+        rem -= best * np.bincount(mla[newly[mfa]], minlength=n_links)
+        np.maximum(rem, 0.0, out=rem)
+    return dict(zip(active, rate.tolist()))
 
 
 class Engine:
     """Event-driven fluid simulator. Flows may be submitted with future start
-    times; the loop advances between starts and finishes, recomputing each
-    link's max-min rate allocation at every event."""
+    times; the loop advances between starts and finishes, recomputing the
+    global max-min rate allocation at every event."""
 
     def __init__(self, t0: float = 0.0):
         self.now = t0
@@ -191,15 +310,59 @@ class Engine:
             self._links[name] = Link(name, capacity)
         return self._links[name]
 
-    def submit(self, link: str, n_bytes: float, *, t_start: float | None = None,
+    def _resolve_links(self, route) -> tuple[Link, ...]:
+        """Accepts a link name, a Link, or a sequence of either. Foreign Link
+        objects (a topology's) are registered so utilization()/link_bytes()
+        see them; name collisions with distinct objects are rejected."""
+        if isinstance(route, (str, Link)):
+            route = (route,)
+        out: list[Link] = []
+        seen: set[int] = set()
+        for item in route:
+            link = self._links[item] if isinstance(item, str) else item
+            assert isinstance(link, Link), item
+            registered = self._links.setdefault(link.name, link)
+            assert registered is link, f"link name collision: {link.name}"
+            assert id(link) not in seen, f"duplicate link in route: {link.name}"
+            seen.add(id(link))
+            out.append(link)
+        return tuple(out)
+
+    def submit(self, route, n_bytes: float, *, t_start: float | None = None,
                tag: str | None = None, rate_cap: float | None = None) -> Flow:
+        """Submit a flow across ``route``: a registered link name, a Link, or
+        an ordered sequence of links (the output of Topology.route /
+        Topology.multicast_tree). The flow's rate is the global max-min share,
+        never more than the smallest share over the links it crosses; its
+        bytes are charged to every link. An empty route completes instantly
+        at t_start (src == dst)."""
         t = self.now if t_start is None else float(t_start)
         assert t >= self.now - 1e-12, (t, self.now, "cannot submit in the past")
-        flow = Flow(self._links[link], n_bytes, t, tag, rate_cap)
+        flow = Flow(self._resolve_links(route), n_bytes, t, tag, rate_cap)
         heapq.heappush(self._pending, (t, next(self._seq), flow))
         return flow
 
+    def submit_route(self, route, n_bytes: float, **kw) -> Flow:
+        """Unicast flow along an ordered Link path (alias of submit)."""
+        return self.submit(route, n_bytes, **kw)
+
+    def submit_tree(self, edges, n_bytes: float, **kw) -> Flow:
+        """Multicast tree flow: the switch-replication model. The stream is
+        replicated down every branch concurrently, so the rate is the min
+        share over every tree edge and every edge serves the full n_bytes
+        (alias of submit — the fluid mechanics are identical to a route)."""
+        return self.submit(edges, n_bytes, **kw)
+
     # -- event loop
+    def _rates(self) -> dict[Flow, float]:
+        active = self._active
+        if not active:
+            return {}
+        n_members = sum(len(f.links) for f in active)
+        if n_members >= _NUMPY_RATES_MIN_MEMBERS:
+            return _max_min_rates_np(active)
+        return _max_min_rates_py(active)
+
     def _progress(self, dt: float, rates: dict[Flow, float]) -> None:
         if dt <= 0:
             return
@@ -208,13 +371,12 @@ class Engine:
             f.segments.append((self.now, self.now + dt, f.n_bytes - f.remaining, r))
             moved = min(r * dt, f.remaining)
             f.remaining -= moved
-            f.link.bytes_served += moved
+            for link in f.links:
+                link.bytes_served += moved
 
     def _step(self, t_limit: float) -> bool:
         """Advance to the next event (or t_limit). Returns False when idle."""
-        rates: dict[Flow, float] = {}
-        for link in self._links.values():
-            rates.update(link.rates())
+        rates = self._rates()
         t_next = t_limit
         if self._pending:
             t_next = min(t_next, self._pending[0][0])
@@ -229,23 +391,29 @@ class Engine:
         # finishes (also flows whose residual would not advance the clock —
         # their finish time is indistinguishable from `now` in float64)
         still = []
+        touched: set[Link] = set()
         for f in self._active:
             r = rates.get(f, 0.0)
             stalled = r > 0 and self.now + f.remaining / r <= self.now
             if f.remaining <= f._eps or stalled:
                 f.remaining = 0.0
                 f.t_end = self.now
-                f.link.active.remove(f)
+                touched.update(f.links)
             else:
                 still.append(f)
         self._active = still
+        # batch-remove finished flows per link (a tree finish can retire one
+        # flow from thousands of links; per-flow list.remove would be O(n^2))
+        for link in touched:
+            link.active = [fl for fl in link.active if fl.t_end is None]
         # starts
         while self._pending and self._pending[0][0] <= self.now + 1e-15:
             _, _, f = heapq.heappop(self._pending)
-            if f.n_bytes <= 0:
+            if f.n_bytes <= 0 or not f.links:
                 f.t_end = max(self.now, f.t_start)
             else:
-                f.link.active.append(f)
+                for link in f.links:
+                    link.active.append(f)
                 self._active.append(f)
         return bool(self._active or self._pending)
 
@@ -275,6 +443,10 @@ class Engine:
         if h <= 0:
             return {n: 0.0 for n in self._links}
         return {n: l.bytes_served / (l.capacity * h) for n, l in self._links.items()}
+
+    def link_bytes(self) -> dict[str, float]:
+        """Live per-link byte counters — the switch-port view of Fig. 12."""
+        return {n: l.bytes_served for n, l in self._links.items()}
 
 
 # ------------------------------------------------- leaf worker pool (receive)
@@ -352,6 +524,49 @@ def _layer_bytes_from_model(model: "ModelConfig", dtype_bytes: int) -> tuple[int
     return n_layers, count_params_analytic(model) / n_layers * dtype_bytes
 
 
+def _routed_fsdp_submitters(eng: Engine, topology, hosts, p: int, policy: str,
+                            gather_bytes: float, shard_bytes: float,
+                            fabric: FabricParams, n_chains: int):
+    """Build the per-layer AG/RS flow submitters for topology mode: routed
+    ring unicasts and multicast/aggregation tree flows on the real fabric.
+    Routes and trees are built once and reused every layer. The caller is
+    responsible for topology.reset() (multi-job runs share one fabric)."""
+    hosts = list(hosts)
+    assert len(hosts) == p, (len(hosts), p)
+    ring_routes = [topology.route(hosts[i], hosts[(i + 1) % p])
+                   for i in range(p)]
+
+    def submit_ring(tag, nbytes, t):
+        return [eng.submit_route(r, nbytes, t_start=t, tag=tag)
+                for r in ring_routes]
+
+    if policy == "naive":
+        # both collectives as P2P rings in the same direction: their flows
+        # share every host up/down link and the ECMP paths between them
+        submit_ag = lambda t: submit_ring("ag", gather_bytes, t)  # noqa: E731
+        submit_rs = lambda t: submit_ring("rs", gather_bytes, t)  # noqa: E731
+        return submit_ag, submit_rs, (p - 1) * fabric.latency
+
+    mcast_trees = [topology.multicast_tree(h, hosts) for h in hosts]
+
+    def submit_ag(t):
+        # every host multicasts its 1/P shard; switches replicate down-tree
+        return [eng.submit_tree(tree, shard_bytes, t_start=t, tag="ag")
+                for tree in mcast_trees]
+
+    if policy == "mcast":
+        submit_rs = lambda t: submit_ring("rs", gather_bytes, t)  # noqa: E731
+    else:  # split: RS_inc — aggregation trees run opposite the AG trees
+        agg_trees = [topology.aggregation_tree(h, hosts) for h in hosts]
+
+        def submit_rs(t):
+            return [eng.submit_tree(tree, shard_bytes, t_start=t, tag="rs")
+                    for tree in agg_trees]
+
+    rounds = max(p // max(n_chains, 1), 1)
+    return submit_ag, submit_rs, rounds * fabric.latency
+
+
 def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
                        n_layers: int = 32, layer_bytes: float = 256e6,
                        p: int = 16,
@@ -360,7 +575,8 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
                        n_chains: int = 2,
                        tokens_per_device: int = 4096,
                        hw_flops: float = 200e12,
-                       dtype_bytes: int = 2) -> FsdpStepResult:
+                       dtype_bytes: int = 2,
+                       topology=None, hosts=None) -> FsdpStepResult:
     """Interleaved forward-AG + backward-RS + compute FSDP timeline.
 
     Per layer the parameters live sharded 1/p per node; the forward pass
@@ -382,6 +598,20 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
               shared bottleneck (the torus analogue is concurrent_ag_rs in
               core/collectives.py: AG clockwise, RS counter-clockwise).
 
+    With ``topology=`` (core/topology.py) the hand-built two-link NIC models
+    are replaced by ROUTED traffic on a real fabric, hosts placed at
+    ``hosts`` (default 0..p-1); the policies then differ by what they put on
+    the wire rather than by link wiring:
+
+      naive   AG and RS are both P2P rings of routed unicast flows (same
+              direction), colliding on every shared fabric link.
+      mcast   AG is P multicast tree flows (each host injects 1/P, switches
+              replicate); RS stays a routed P2P ring, so RS down-traffic
+              contends with the AG trees at every ejection port.
+      split   AG multicast trees down + RS in-network-reduction aggregation
+              trees up (topology.aggregation_tree) — opposite link
+              directions, no shared bottleneck (Insight 2 on the fabric).
+
     bubble_fraction = 1 - compute_time / step_time: the fraction of the step
     the compute units sit idle waiting on exposed communication.
     """
@@ -398,7 +628,12 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
     bwd_t = 2.0 * fwd_t
 
     eng = Engine()
-    if policy == "naive":
+    if topology is not None:
+        topology.reset()
+        submit_ag, submit_rs, ag_sync = _routed_fsdp_submitters(
+            eng, topology, hosts if hosts is not None else range(p), p, policy,
+            gather_bytes, shard_bytes, fabric, n_chains)
+    elif policy == "naive":
         eng.add_link("shared", b)
 
         def submit_ag(t):
@@ -518,3 +753,108 @@ def sweep_fsdp_contention(*, ps=(8, 16, 64), layer_bytes=(64e6, 256e6),
                     per_policy["naive"].bubble_fraction,
                 )
     return rows
+
+
+# ------------------------------------------------ multi-job fabric contention
+
+
+@dataclass
+class MultiJobResult:
+    policy: str
+    n_layers: int
+    solo_time: dict[str, float]        # each job alone on the fabric
+    contended_time: dict[str, float]   # all jobs co-scheduled
+    slowdown: dict[str, float]         # contended / solo, per job
+    core_bytes: float                  # contended-run bytes on agg<->core tier
+    link_utilization: dict[str, float]  # contended run, per fabric link
+
+
+def simulate_multi_job(topology, jobs: dict[str, "list[int]"], *,
+                       layer_bytes: float = 256e6, n_layers: int = 4,
+                       policy: str = "mcast",
+                       fabric: FabricParams | None = None,
+                       hw_flops: float = 200e12,
+                       tokens_per_device: int = 4096,
+                       dtype_bytes: int = 2) -> MultiJobResult:
+    """Co-simulate several FSDP jobs on DISJOINT host sets of one fabric.
+
+    Each job runs n_layers sequential layer steps: allgather the layer's
+    parameters (per ``policy``, routed exactly as simulate_fsdp_step's
+    topology mode), then compute, then the next layer's AG. The jobs share no
+    hosts, but their routed flows meet on shared edge/agg/core links — the
+    contention an abstract per-NIC model cannot see (and the reason Fig. 12
+    is measured at switch port counters). Each job is also run alone on the
+    same fabric; slowdown = contended / solo isolates the interference.
+
+    The co-simulation interleaves the jobs' timelines on ONE engine: after
+    every engine event, any job whose outstanding AG completed submits its
+    next layer at now + sync + compute.
+    """
+    fabric = fabric or FabricParams()
+    names = list(jobs)
+    all_hosts = [h for hs in jobs.values() for h in hs]
+    assert len(set(all_hosts)) == len(all_hosts), "jobs must use disjoint hosts"
+    assert all(len(hs) >= 2 for hs in jobs.values())
+
+    def run(subset: list[str]) -> tuple[dict[str, float], Engine]:
+        topology.reset()
+        eng = Engine()
+        state: dict[str, dict] = {}
+        for name in subset:
+            hs = list(jobs[name])
+            p = len(hs)
+            gather = (p - 1) / p * layer_bytes
+            shard = layer_bytes / p
+            submit_ag, _, ag_sync = _routed_fsdp_submitters(
+                eng, topology, hs, p, policy, gather, shard, fabric,
+                n_chains=p)
+            state[name] = {
+                "submit": submit_ag, "sync": ag_sync,
+                "fwd": 2.0 * (layer_bytes / dtype_bytes) * tokens_per_device
+                       / hw_flops,
+                "layer": 0, "flows": None, "end": None,
+            }
+        for st in state.values():
+            st["flows"] = st["submit"](0.0)
+        idle_seen = False
+        while True:
+            progressed = True
+            while progressed:      # a finish may unblock several jobs at once
+                progressed = False
+                for st in state.values():
+                    if st["end"] is None and all(f.done for f in st["flows"]):
+                        st["layer"] += 1
+                        t_next = eng.now + st["sync"] + st["fwd"]
+                        if st["layer"] >= n_layers:
+                            st["end"] = t_next
+                        else:
+                            st["flows"] = st["submit"](t_next)
+                            progressed = True
+            if all(st["end"] is not None for st in state.values()):
+                break
+            # _step returns False on the same call that retires the last
+            # flows; give the completion pass above one more look before
+            # calling an idle engine with unfinished jobs a deadlock
+            if not eng._step(math.inf):
+                assert idle_seen is False, "multi-job co-simulation deadlocked"
+                idle_seen = True
+            else:
+                idle_seen = False
+        return {name: state[name]["end"] for name in subset}, eng
+
+    solo: dict[str, float] = {}
+    for name in names:
+        solo.update(run([name])[0])
+    contended, eng = run(names)
+    horizon = max(contended.values())
+    core = getattr(topology, "core_links", None)
+    core_bytes = sum(l.bytes_served for l in core()) if core else 0.0
+    return MultiJobResult(
+        policy=policy,
+        n_layers=n_layers,
+        solo_time=solo,
+        contended_time=contended,
+        slowdown={n: contended[n] / solo[n] for n in names},
+        core_bytes=core_bytes,
+        link_utilization=eng.utilization(horizon),
+    )

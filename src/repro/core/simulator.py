@@ -12,10 +12,21 @@ The bandwidth timing (root injection, per-round leaf ingest under M concurrent
 chains) runs on the shared fluid engine (core/engine.py); the leaf receive
 queue uses its vectorized worker pool. FabricParams / WorkerParams live in
 engine.py and are re-exported here for backwards compatibility.
+
+Both simulators take an optional ``topology=`` (core/topology.py FatTree /
+Torus2D): ranks are then placed on real hosts (``hosts=`` ids, default
+0..P-1) and every transfer becomes a routed flow — the Broadcast is one
+multicast tree flow per chain root, rate-limited by the most-contended fabric
+link it crosses, M concurrent chains genuinely collide in the core, and the
+per-leaf fabric latency scales with hop count. The same Engine run then
+yields both the timing AND the per-link switch-port bytes
+(result.link_bytes, Fig. 12) — there is no separate static counting pass.
+Build the topology with b_host=fabric.b_link so the NIC and its fabric port
+agree on line rate.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -49,6 +60,8 @@ class BcastResult:
     bytes_fast: int
     bytes_recovery: int
     bytes_total: int                  # conservation: fast + recovery == total
+    link_bytes: dict[str, float] = field(default_factory=dict)
+    # ^ routed mode only: live per-fabric-link bytes from the same engine run
 
     @property
     def time(self) -> float:
@@ -69,14 +82,30 @@ def _rnr_barrier(p: int, fabric: FabricParams, workers: WorkerParams) -> float:
 
 def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
                        workers: WorkerParams, rng: np.random.Generator,
-                       root: int = 0) -> BcastResult:
+                       root: int = 0, *, topology=None, hosts=None) -> BcastResult:
+    """Reliable multicast Broadcast. Without ``topology`` the datapath is the
+    abstract root-injection link of the original model; with a
+    core/topology.py Topology the root's stream is ONE multicast tree flow
+    whose rate is set by the most-contended fabric link (switch replication),
+    per-leaf latency scales with routed hop count, and result.link_bytes
+    carries the per-link switch-port traffic of the same engine run."""
     n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
     t_rnr = _rnr_barrier(p, fabric, workers)
 
-    # root injection: a single flow on the root's send link
     eng = Engine()
-    eng.add_link("root.send", fabric.b_link)
-    flow = eng.submit("root.send", n_chunks * chunk, t_start=t_rnr)
+    if topology is not None:
+        hosts = list(hosts) if hosts is not None else list(range(p))
+        assert len(hosts) == p, (len(hosts), p)
+        topology.reset()
+        tree = topology.multicast_tree(hosts[root], hosts)
+        flow = eng.submit_tree(tree, n_chunks * chunk, t_start=t_rnr, tag="mcast")
+        hop_lat = [len(topology.route(hosts[root], hosts[leaf])) * fabric.latency
+                   for leaf in range(p)]
+    else:
+        # abstract mode: a single flow on the root's send link, one hop
+        eng.add_link("root.send", fabric.b_link)
+        flow = eng.submit("root.send", n_chunks * chunk, t_start=t_rnr)
+        hop_lat = [fabric.latency] * p
     eng.run()
     inject = flow.chunk_times(n_chunks, chunk)
     service = chunk / workers.thread_tput
@@ -94,7 +123,7 @@ def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
         if leaf == root:
             completion[leaf] = inject[-1]
             continue
-        delay = fabric.latency + rng.uniform(0.0, fabric.jitter, size=n_chunks)
+        delay = hop_lat[leaf] + rng.uniform(0.0, fabric.jitter, size=n_chunks)
         dropped = rng.random(n_chunks) < fabric.p_drop
         arrivals = np.sort((inject + delay)[~dropped])
         done, rnr = worker_pool_completion(
@@ -136,6 +165,7 @@ def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
         bytes_fast=fast_total * chunk,
         bytes_recovery=recovered_total * chunk,
         bytes_total=(p - 1) * n_chunks * chunk,
+        link_bytes=eng.link_bytes() if topology is not None else {},
     )
 
 
@@ -148,16 +178,25 @@ class AllgatherResult:
     bytes_recovery: int
     bytes_total: int
     per_rank_recv_tput: float         # (P-1)*N / time  (Fig. 11 metric)
+    link_bytes: dict[str, float] = field(default_factory=dict)
+    # ^ routed mode only: live per-fabric-link bytes from the same engine run
 
 
 def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
                        workers: WorkerParams, rng: np.random.Generator,
-                       n_chains: int = 1) -> AllgatherResult:
+                       n_chains: int = 1, *, topology=None,
+                       hosts=None) -> AllgatherResult:
     """Allgather = R sequential rounds of M concurrent Broadcasts (§IV-A).
     Within a round the M chain roots multicast concurrently; the leaf receive
     path (link + worker pool) is the shared bottleneck — modeled as M flows
     contending for the leaf's ejection link in the fluid engine; rounds are
-    chained by the activation signal."""
+    chained by the activation signal.
+
+    With ``topology=`` the M chains are real multicast tree flows rooted at
+    the Appendix-A round roots G^r = {r, R+r, 2R+r, ...} placed on fabric
+    hosts: they collide on shared edge/agg/core links and on every leaf's
+    ejection link, and result.link_bytes returns the same run's switch-port
+    byte counters (the Fig. 12 measurement, no static pass)."""
     assert p % n_chains == 0
     rounds = p // n_chains
     n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
@@ -166,7 +205,12 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
     t_rnr = _rnr_barrier(p, fabric, workers)
 
     eng = Engine()
-    eng.add_link("leaf.recv", fabric.b_link)
+    if topology is not None:
+        hosts = list(hosts) if hosts is not None else list(range(p))
+        assert len(hosts) == p, (len(hosts), p)
+        topology.reset()
+    else:
+        eng.add_link("leaf.recv", fabric.b_link)
 
     t = t_rnr
     recovered_total = 0
@@ -174,15 +218,26 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
     rec_bytes = 0
     mcast_time = 0.0
     rel_time = 0.0
-    for _ in range(rounds):
+    for r in range(rounds):
         m = n_chains
         total_chunks = m * n_chunks
-        # m chain roots inject concurrently; the leaf's ejection link is the
-        # shared resource — m equal flows, each chain rate b_link/m
-        flows = [
-            eng.submit("leaf.recv", n_chunks * chunk, t_start=t, tag=f"chain{c}")
-            for c in range(m)
-        ]
+        if topology is not None:
+            # Appendix A: round roots G^r multicast concurrently through the
+            # fabric; each tree flow's rate is min-share over its edges, so
+            # chains genuinely collide in the core and at every ejection port
+            roots = [hosts[i] for i in range(p) if i % rounds == r]
+            flows = [
+                eng.submit_tree(topology.multicast_tree(root, hosts),
+                                n_chunks * chunk, t_start=t, tag=f"chain{root}")
+                for root in roots
+            ]
+        else:
+            # m chain roots inject concurrently; the leaf's ejection link is
+            # the shared resource — m equal flows, each chain rate b_link/m
+            flows = [
+                eng.submit("leaf.recv", n_chunks * chunk, t_start=t, tag=f"chain{c}")
+                for c in range(m)
+            ]
         eng.run()
         arrive_spacing = np.sort(
             np.concatenate([f.chunk_times(n_chunks, chunk) for f in flows])
@@ -223,6 +278,7 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
         bytes_recovery=rec_bytes,
         bytes_total=p * n_chunks * chunk,
         per_rank_recv_tput=total / t_done,
+        link_bytes=eng.link_bytes() if topology is not None else {},
     )
 
 

@@ -1,53 +1,182 @@
-"""Network topologies with per-link byte counters.
+"""Route-providing network topologies backed by live engine Links.
 
-Used to *measure* (by counting, the software analogue of the paper's switch
-port counters, Fig. 12) the traffic of P2P vs multicast collective schedules:
+The paper's headline claims are *fabric-level*: Fig. 12 measures the 2x
+traffic reduction at switch port counters on a 188-node fat-tree, and the
+M-chain Allgather schedule exists to control in-fabric incast. This module is
+therefore the route provider for the fluid engine (core/engine.py): a
+``Topology`` owns one ``engine.Link`` per directed physical cable, and
 
-  - FatTree: 3-level full fat-tree of radix-k switches (paper's testbed shape;
-    Fig. 2 models 1024 nodes / radix 32). Unicast routes are deterministic
-    up-down ECMP; multicast routes are spanning trees rooted at the core.
-  - Torus2D: the TPU ICI analogue; ring/bidirectional neighbor links.
+  route(src, dst)              returns the ordered Link path (deterministic
+                               up-down ECMP on the fat-tree, dimension-ordered
+                               shortest ring paths on the torus);
+  multicast_tree(root, members) returns the Link edge set of the switch
+                               multicast distribution tree;
+  aggregation_tree(root, members) the reversed tree — in-network reduction
+                               (RS_inc): members send up, switches reduce;
+  links()                      every physical directed link, with per-tier
+                               capacities and an oversubscription factor.
 
-All counting is exact integer bytes; "bandwidth-optimal" on the fat-tree means
-every byte of every send buffer crosses any link at most once (Insight 1).
+Byte counters are the Links' own live ``bytes_served``: an Engine run over
+routed flows *is* the traffic measurement (the software analogue of the
+paper's switch port counters) — ``counters`` is only a read-only view of
+them, and the static ``unicast``/``multicast`` helpers (the analytic Fig. 2
+path, no timing) charge the same Link objects.
+
+Topologies:
+  - FatTree: 3-level full fat-tree of radix-k switches (paper's testbed
+    shape; Fig. 2 models 1024 nodes / radix 32).
+  - Torus2D: the TPU ICI analogue; bidirectional neighbor ring links.
+
+"Bandwidth-optimal" on the fat-tree means every byte of every send buffer
+crosses any link at most once (Insight 1); see DESIGN.md §6 for the fabric
+engine architecture.
 """
 from __future__ import annotations
 
+import math
 from collections import defaultdict
 from dataclasses import dataclass, field
+from typing import Protocol, Sequence, runtime_checkable
+
+from repro.core.engine import Link
+
+#: default per-direction host link rate (200 Gbit/s, the paper's NIC)
+DEFAULT_LINK_BYTES = 200e9 / 8
 
 
 @dataclass
 class LinkCounters:
-    bytes_by_link: dict[tuple[str, str], int] = field(default_factory=lambda: defaultdict(int))
+    """Read-only per-link byte view keyed by (src, dst) node names. Built on
+    demand from the Links' live bytes_served (Topology.counters) — mutate the
+    Links (or use unicast/multicast), never this snapshot."""
 
-    def add(self, a: str, b: str, n: int) -> None:
-        self.bytes_by_link[(a, b)] += n
+    bytes_by_link: dict[tuple[str, str], float] = field(
+        default_factory=lambda: defaultdict(float))
 
-    def total(self) -> int:
+    def total(self) -> float:
         return sum(self.bytes_by_link.values())
 
-    def max_link(self) -> int:
+    def max_link(self) -> float:
         return max(self.bytes_by_link.values(), default=0)
 
-    def switch_port_total(self) -> int:
+    def switch_port_total(self) -> float:
         """Sum over all switch ports (paper Fig. 12 counts switch port counters:
         every directed link endpoint at a switch counts its traffic)."""
         return self.total()
 
 
-class FatTree:
+@runtime_checkable
+class Topology(Protocol):
+    """Route provider for the fluid engine. Implementations own one
+    engine.Link per directed physical cable; route/multicast_tree return
+    those same objects, so engine runs charge the topology's counters."""
+
+    def links(self) -> dict[tuple[str, str], Link]: ...
+
+    def route(self, src: int, dst: int) -> list[Link]: ...
+
+    def multicast_tree(self, root: int, members: Sequence[int]) -> list[Link]: ...
+
+    def aggregation_tree(self, root: int, members: Sequence[int]) -> list[Link]: ...
+
+    def reset(self) -> None: ...
+
+
+class _LinkRegistry:
+    """Shared plumbing: the directed-link table plus the validity assertion
+    used by every route/tree builder (a hop not in the table is a physically
+    nonexistent cable — the old ECMP bug class)."""
+
+    def __init__(self):
+        self._links: dict[tuple[str, str], Link] = {}
+
+    def _add(self, a: str, b: str, capacity: float) -> None:
+        if (a, b) not in self._links:
+            self._links[(a, b)] = Link(f"{a}->{b}", capacity, a, b)
+
+    def link(self, a: str, b: str) -> Link:
+        """The directed Link a->b; asserts the cable physically exists."""
+        link = self._links.get((a, b))
+        assert link is not None, f"nonexistent fabric link {a}->{b}"
+        return link
+
+    def _resolve(self, hops: Sequence[tuple[str, str]]) -> list[Link]:
+        return [self.link(a, b) for a, b in hops]
+
+    def links(self) -> dict[tuple[str, str], Link]:
+        return self._links
+
+    @property
+    def counters(self) -> LinkCounters:
+        """Live per-link bytes as a LinkCounters view (Fig. 12 switch-port
+        counters). Derived from Link.bytes_served — there is no separate
+        static counter store."""
+        c = LinkCounters()
+        for (a, b), link in self._links.items():
+            if link.bytes_served:
+                c.bytes_by_link[(a, b)] = link.bytes_served
+        return c
+
+    def reset(self) -> None:
+        for link in self._links.values():
+            link.bytes_served = 0.0
+            link.active = []
+
+    # --- static counting (analytic Fig. 2 path: traffic without timing) ----
+    def unicast(self, src: int, dst: int, nbytes: float) -> None:
+        for link in self.route(src, dst):
+            link.bytes_served += nbytes
+
+    def multicast(self, root: int, members: Sequence[int], nbytes: float) -> None:
+        for link in self.multicast_tree(root, members):
+            link.bytes_served += nbytes
+
+    def aggregation_tree(self, root: int, members: Sequence[int]) -> list[Link]:
+        """Reversed multicast tree: in-network reduction (RS_inc). Every
+        member streams its contribution up the tree; switches reduce, so each
+        reversed edge carries the payload exactly once and the root receives
+        a single aggregate."""
+        return [self.link(l.dst, l.src) for l in self.multicast_tree(root, members)]
+
+
+class FatTree(_LinkRegistry):
     """Full 3-level fat-tree, radix ``k``: k pods, k/2 edge + k/2 agg switches
     per pod, (k/2)^2 cores, (k/2)^2 hosts per pod. Host ids are 0..n_hosts-1.
+
+    Core c attaches to agg index c // (k/2) in every pod. Links exist for the
+    pods that actually hold hosts. ``oversubscription`` divides the capacity
+    of every switch-to-switch tier (edge-agg and agg-core), modeling the
+    usual uplink thinning; host links stay at ``b_host``.
     """
 
-    def __init__(self, k: int, n_hosts: int | None = None):
+    def __init__(self, k: int, n_hosts: int | None = None, *,
+                 b_host: float = DEFAULT_LINK_BYTES,
+                 oversubscription: float = 1.0):
+        super().__init__()
         assert k % 2 == 0
         self.k = k
-        self.max_hosts = k * (k // 2) ** 2
+        h2 = k // 2
+        self.max_hosts = k * h2 * h2
         self.n_hosts = n_hosts or self.max_hosts
         assert self.n_hosts <= self.max_hosts
-        self.counters = LinkCounters()
+        assert oversubscription >= 1.0
+        self.b_host = float(b_host)
+        self.oversubscription = float(oversubscription)
+        b_up = self.b_host / self.oversubscription
+        for h in range(self.n_hosts):
+            self._add(self.host(h), self.edge_of(h), self.b_host)
+            self._add(self.edge_of(h), self.host(h), self.b_host)
+        n_pods = math.ceil(self.n_hosts / (h2 * h2))
+        for pod in range(n_pods):
+            for e in range(h2):
+                for a in range(h2):
+                    self._add(f"e{pod}.{e}", self.agg(pod, a), b_up)
+                    self._add(self.agg(pod, a), f"e{pod}.{e}", b_up)
+            for a in range(h2):
+                for j in range(h2):
+                    c = a * h2 + j          # core c // h2 == a by construction
+                    self._add(self.agg(pod, a), self.core(c), b_up)
+                    self._add(self.core(c), self.agg(pod, a), b_up)
 
     # --- naming -----------------------------------------------------------
     def host(self, h: int) -> str:
@@ -69,95 +198,142 @@ class FatTree:
     def core(self, c: int) -> str:
         return f"c{c}"
 
+    def core_links(self) -> list[Link]:
+        """Agg<->core links in both directions — the tier multiple jobs
+        share (simulate_multi_job reports their contention)."""
+        return [l for (a, b), l in self._links.items()
+                if a.startswith("c") or b.startswith("c")]
+
     # --- deterministic ECMP up-down route ----------------------------------
-    def route(self, src: int, dst: int) -> list[tuple[str, str]]:
+    def route(self, src: int, dst: int) -> list[Link]:
+        """Ordered Link path. ECMP choices are deterministic hashes of
+        (src, dst); the inter-pod up aggregation switch is DERIVED from the
+        chosen core (a = c // h2) so the agg->core hop is always a physical
+        link — choosing them independently was the seed's route bug."""
         if src == dst:
             return []
         sp, se = self._loc(src)
         dp, de = self._loc(dst)
         h2 = self.k // 2
-        path = [(self.host(src), self.edge_of(src))]
-        if sp == dp and se == de:
-            path.append((self.edge_of(src), self.host(dst)))
-            return path
-        # hash-based ECMP choice, deterministic on (src, dst)
-        a = (src + dst) % h2
-        if sp == dp:
-            path.append((self.edge_of(src), self.agg(sp, a)))
-            path.append((self.agg(sp, a), f"e{dp}.{de}"))
+        hops = [(self.host(src), self.edge_of(src))]
+        if (sp, se) == (dp, de):
+            pass
+        elif sp == dp:
+            a = (src + dst) % h2
+            hops += [(self.edge_of(src), self.agg(sp, a)),
+                     (self.agg(sp, a), self.edge_of(dst))]
         else:
             c = (src * 31 + dst) % (h2 * h2)
-            path.append((self.edge_of(src), self.agg(sp, a)))
-            path.append((self.agg(sp, a), self.core(c)))
-            path.append((self.core(c), self.agg(dp, c // h2)))
-            path.append((self.agg(dp, c // h2), f"e{dp}.{de}"))
-        path.append((f"e{dp}.{de}", self.host(dst)))
-        return path
-
-    def unicast(self, src: int, dst: int, nbytes: int) -> None:
-        for a, b in self.route(src, dst):
-            self.counters.add(a, b, nbytes)
+            a = c // h2
+            hops += [(self.edge_of(src), self.agg(sp, a)),
+                     (self.agg(sp, a), self.core(c)),
+                     (self.core(c), self.agg(dp, a)),
+                     (self.agg(dp, a), self.edge_of(dst))]
+        hops.append((self.edge_of(dst), self.host(dst)))
+        return self._resolve(hops)
 
     # --- multicast spanning tree -------------------------------------------
-    def multicast_tree(self, root: int, members: list[int]) -> set[tuple[str, str]]:
-        """Edges of the multicast distribution tree: root -> its edge switch ->
-        (agg -> core as needed) -> down to every member's edge switch -> hosts.
-        Each fabric link appears once — this is the hardware multicast
-        replication the switches perform."""
-        edges: set[tuple[str, str]] = set()
-        rp, _ = self._loc(root)
+    def multicast_tree(self, root: int, members: Sequence[int]) -> list[Link]:
+        """Link edges of the multicast distribution tree: root -> its edge
+        switch -> (agg -> core as needed) -> down to every member's edge
+        switch -> hosts. Each fabric link appears once — this is the hardware
+        multicast replication the switches perform. The up and down
+        aggregation switches both derive from the root's hashed core
+        (a = c // h2), so every edge is a physical link."""
         h2 = self.k // 2
-        up_agg = self.agg(rp, root % h2)
-        core = self.core((root * 31) % (h2 * h2))
-        pods = {self._loc(m)[0] for m in members if m != root}
-        edges.add((self.host(root), self.edge_of(root)))
-        cross_pod = any(p != rp for p in pods)
-        same_pod_other_edge = any(
-            self._loc(m)[0] == rp and self.edge_of(m) != self.edge_of(root)
-            for m in members if m != root
-        )
-        if cross_pod or same_pod_other_edge:
-            edges.add((self.edge_of(root), up_agg))
-        if cross_pod:
-            edges.add((up_agg, core))
+        c = (root * 31) % (h2 * h2)
+        a = c // h2
+        rp, _ = self._loc(root)
+        root_edge = self.edge_of(root)
+        hops: dict[tuple[str, str], None] = {}   # ordered, deduplicated
+        hops[(self.host(root), root_edge)] = None
         for m in members:
             if m == root:
                 continue
             mp, me = self._loc(m)
-            if mp == rp:
-                if self.edge_of(m) != self.edge_of(root):
-                    edges.add((up_agg, f"e{mp}.{me}"))
-            else:
-                down_agg = self.agg(mp, (root * 31) % (h2 * h2) // h2)
-                edges.add((core, down_agg))
-                edges.add((down_agg, f"e{mp}.{me}"))
-            edges.add((f"e{mp}.{me}", self.host(m)))
-        return edges
-
-    def multicast(self, root: int, members: list[int], nbytes: int) -> None:
-        for a, b in self.multicast_tree(root, members):
-            self.counters.add(a, b, nbytes)
-
-    def reset(self) -> None:
-        self.counters = LinkCounters()
+            m_edge = self.edge_of(m)
+            if m_edge != root_edge:
+                hops[(root_edge, self.agg(rp, a))] = None
+                if mp == rp:
+                    hops[(self.agg(rp, a), m_edge)] = None
+                else:
+                    hops[(self.agg(rp, a), self.core(c))] = None
+                    hops[(self.core(c), self.agg(mp, a))] = None
+                    hops[(self.agg(mp, a), m_edge)] = None
+            hops[(m_edge, self.host(m))] = None
+        return self._resolve(list(hops))
 
 
-class Torus2D:
-    """2-D torus with bidirectional neighbor links (TPU ICI analogue)."""
+class Torus2D(_LinkRegistry):
+    """2-D torus with bidirectional neighbor links (TPU ICI analogue).
+    Node ids are 0..nx*ny-1 with id = x * ny + y. Routes are dimension-ordered
+    (x then y) shortest ring paths, ties broken toward +1; multicast trees are
+    the confluent union of those routes (row trunk, column branches)."""
 
-    def __init__(self, nx: int, ny: int):
+    def __init__(self, nx: int, ny: int, *, b_link: float = DEFAULT_LINK_BYTES):
+        super().__init__()
         self.nx, self.ny = nx, ny
-        self.counters = LinkCounters()
+        self.b_link = float(b_link)
+        for x in range(nx):
+            for y in range(ny):
+                for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                    a, b = self.node(x, y), self.node(x + dx, y + dy)
+                    if a != b:
+                        self._add(a, b, self.b_link)
 
     def node(self, x: int, y: int) -> str:
         return f"t{x % self.nx}.{y % self.ny}"
 
+    def coord(self, i: int) -> tuple[int, int]:
+        return i // self.ny, i % self.ny
+
+    @staticmethod
+    def _dir(a: int, b: int, n: int) -> int:
+        """Shortest ring direction a -> b on a ring of size n (ties -> +1)."""
+        fwd = (b - a) % n
+        return +1 if fwd <= n - fwd else -1
+
+    def _hops(self, src: int, dst: int) -> list[tuple[str, str]]:
+        sx, sy = self.coord(src)
+        dx, dy = self.coord(dst)
+        hops = []
+        x, y = sx, sy
+        step = self._dir(sx, dx, self.nx)
+        while x != dx:
+            nxt = (x + step) % self.nx
+            hops.append((self.node(x, y), self.node(nxt, y)))
+            x = nxt
+        step = self._dir(sy, dy, self.ny)
+        while y != dy:
+            nxt = (y + step) % self.ny
+            hops.append((self.node(x, y), self.node(x, nxt)))
+            y = nxt
+        return hops
+
+    def route(self, src: int, dst: int) -> list[Link]:
+        return self._resolve(self._hops(src, dst))
+
+    def multicast_tree(self, root: int, members: Sequence[int]) -> list[Link]:
+        """Union of the dimension-ordered routes root -> member. The routes
+        are confluent (same row trunk per target column, disjoint shortest
+        column arcs), so the union is a tree spanning root and members —
+        the software stand-in for switch replication on a fabric that has
+        none (chunks are forwarded along the tree edges)."""
+        hops: dict[tuple[str, str], None] = {}
+        for m in members:
+            if m == root:
+                continue
+            for hop in self._hops(root, m):
+                hops[hop] = None
+        return self._resolve(list(hops))
+
+    # --- ring counting helpers (torus analytic path) -----------------------
     def ring_x_link(self, x: int, y: int, direction: int = +1) -> tuple[str, str]:
         return (self.node(x, y), self.node(x + direction, y))
 
-    def send_ring_x(self, x: int, y: int, nbytes: int, direction: int = +1) -> None:
+    def send_ring_x(self, x: int, y: int, nbytes: float, direction: int = +1) -> None:
         a, b = self.ring_x_link(x, y, direction)
-        self.counters.add(a, b, nbytes)
+        self.link(a, b).bytes_served += nbytes
 
     def ring_allgather_traffic(self, axis_len: int, shard_bytes: int, *, bidi: bool) -> None:
         """Count per-link bytes for a ring allgather over the x axis rings."""
@@ -168,6 +344,3 @@ class Torus2D:
                     self.send_ring_x(x, y, per_dir, +1)
                     if bidi:
                         self.send_ring_x(x, y, per_dir, -1)
-
-    def reset(self) -> None:
-        self.counters = LinkCounters()

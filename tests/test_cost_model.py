@@ -67,13 +67,13 @@ def test_multicast_tree_is_connected_and_minimal():
     members = list(range(10))
     edges = tree.multicast_tree(0, members)
     nodes = set()
-    for a, b in edges:
-        nodes.add(a)
-        nodes.add(b)
+    for link in edges:
+        nodes.add(link.src)
+        nodes.add(link.dst)
     for m in members:
         assert tree.host(m) in nodes
-    # tree-ish: edges ~ nodes - 1 (spanning tree, no cycles by construction)
-    assert len(edges) <= len(nodes)
+    # spanning tree: every node except the root has exactly one in-edge
+    assert len(edges) == len(nodes) - 1
 
 
 def test_torus_ring_per_link_optimality():

@@ -62,6 +62,81 @@ def test_large_flow_terminates_without_fp_spin():
     assert all(f.done for f in flows)
 
 
+# ------------------------------------------------------ multi-link route flows
+
+
+def test_route_flow_progressive_filling():
+    """Textbook global max-min: A on L1, B on L1+L2, C on L2. L1 is the
+    bottleneck (A, B at 50 each); B's frozen rate leaves C water-filled to
+    250 on L2."""
+    eng = Engine()
+    eng.add_link("L1", 100.0)
+    eng.add_link("L2", 300.0)
+    a = eng.submit("L1", 500.0)
+    b = eng.submit_route(["L1", "L2"], 500.0)
+    c = eng.submit("L2", 2500.0)
+    eng.run()
+    assert a.t_end == pytest.approx(10.0)
+    assert b.t_end == pytest.approx(10.0)
+    assert c.t_end == pytest.approx(10.0)           # 250 B/s * 10 s
+    # a route flow charges every link it crosses
+    assert eng.link_bytes()["L1"] == pytest.approx(1000.0)
+    assert eng.link_bytes()["L2"] == pytest.approx(3000.0)
+
+
+def test_tree_flow_min_share_and_per_edge_bytes():
+    """A tree flow runs at the min share over every edge and serves its full
+    byte count on each edge (switch replication)."""
+    from repro.core.engine import Link
+
+    e1, e2, e3 = Link("e1", 100.0), Link("e2", 100.0), Link("e3", 10.0)
+    eng = Engine()
+    t = eng.submit_tree([e1, e2, e3], 100.0)
+    u = eng.submit(e1, 900.0)
+    eng.run()
+    assert t.t_end == pytest.approx(10.0)           # e3 caps the tree at 10
+    assert u.t_end == pytest.approx(10.0)           # water-fills e1 to 90
+    assert e1.bytes_served == pytest.approx(1000.0)
+    assert e2.bytes_served == pytest.approx(100.0)
+    assert e3.bytes_served == pytest.approx(100.0)
+
+
+def test_numpy_and_python_fillings_agree():
+    """The vectorized progressive filling must allocate identically to the
+    dict-based one on a contended multi-link flow set."""
+    from repro.core.engine import Link, _max_min_rates_np, _max_min_rates_py
+
+    rng = np.random.default_rng(0)
+    links = [Link(f"l{i}", float(rng.integers(10, 200))) for i in range(12)]
+    flows = []
+    eng = Engine()
+    for i in range(30):
+        sel = rng.choice(12, size=int(rng.integers(1, 5)), replace=False)
+        cap = float(rng.uniform(1.0, 50.0)) if rng.random() < 0.3 else None
+        flows.append(eng.submit([links[j] for j in sel], 1e6, rate_cap=cap))
+    # force the flows active
+    eng.advance_to(1e-9)
+    py = _max_min_rates_py(eng._active)
+    vec = _max_min_rates_np(eng._active)
+    assert set(py) == set(vec)
+    for f, r in py.items():
+        assert vec[f] == pytest.approx(r, rel=1e-9, abs=1e-12)
+
+
+def test_empty_route_completes_instantly():
+    eng = Engine()
+    f = eng.submit_route([], 1000.0, t_start=2.0)
+    eng.run()
+    assert f.t_end == pytest.approx(2.0)
+
+
+def test_duplicate_link_in_route_rejected():
+    eng = Engine()
+    eng.add_link("l", 10.0)
+    with pytest.raises(AssertionError, match="duplicate link"):
+        eng.submit_route(["l", "l"], 10.0)
+
+
 # ------------------------------------------------------- protocol invariants
 
 

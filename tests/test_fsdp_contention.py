@@ -1,5 +1,6 @@
 """FSDP AG/RS injection-contention model: policy ordering, bubble accounting,
-and the vectorized worker-pool regression against the reference loop."""
+the routed topology mode, multi-job fabric contention, and the vectorized
+worker-pool regression against the reference loop."""
 import numpy as np
 import pytest
 
@@ -7,10 +8,12 @@ from repro.core.engine import (
     FSDP_POLICIES,
     FabricParams,
     simulate_fsdp_step,
+    simulate_multi_job,
     sweep_fsdp_contention,
     worker_pool_completion,
     worker_pool_completion_loop,
 )
+from repro.core.topology import FatTree
 
 
 def test_direction_split_beats_naive_default_config():
@@ -86,6 +89,70 @@ def test_model_config_parameterization():
     assert r.step_time > 0
 
 
+# --------------------------------------------------- routed topology mode
+
+
+def test_topology_mode_policies_ordered_comm_bound():
+    """On a real fat-tree the policies differ by routed traffic: P2P rings
+    colliding everywhere (naive) >= multicast AG + ring RS (mcast) >=
+    multicast down + aggregation trees up (split)."""
+    topo = FatTree(k=8, n_hosts=16)
+    res = {
+        pol: simulate_fsdp_step(n_layers=4, layer_bytes=256e6, p=16,
+                                policy=pol, hw_flops=2e15, topology=topo)
+        for pol in FSDP_POLICIES
+    }
+    assert res["split"].step_time <= res["mcast"].step_time + 1e-12
+    assert res["mcast"].step_time <= res["naive"].step_time + 1e-12
+    assert res["split"].bubble_fraction < res["naive"].bubble_fraction
+    for r in res.values():
+        assert r.step_time >= r.compute_time
+        for util in r.link_utilization.values():
+            assert 0.0 <= util <= 1.0 + 1e-9
+
+
+def test_topology_mode_custom_host_placement():
+    """Ranks may be placed on arbitrary fabric hosts; a spread placement
+    pushes ring traffic through agg/core links and cannot be faster than the
+    packed one under naive P2P."""
+    topo = FatTree(k=8, n_hosts=64)
+    packed = simulate_fsdp_step(n_layers=2, layer_bytes=128e6, p=8,
+                                policy="naive", hw_flops=2e15,
+                                topology=topo, hosts=list(range(8)))
+    spread = simulate_fsdp_step(n_layers=2, layer_bytes=128e6, p=8,
+                                policy="naive", hw_flops=2e15,
+                                topology=topo, hosts=list(range(0, 64, 8)))
+    assert spread.step_time >= packed.step_time - 1e-12
+
+
+def test_multi_job_isolated_at_full_bisection():
+    topo = FatTree(k=8, n_hosts=32)
+    jobs = {"A": list(range(0, 32, 2)), "B": list(range(1, 32, 2))}
+    r = simulate_multi_job(topo, jobs, layer_bytes=64e6, n_layers=2,
+                           policy="mcast")
+    for name in jobs:
+        assert r.slowdown[name] == pytest.approx(1.0, abs=1e-2)
+    assert r.core_bytes > 0          # the jobs do traverse the core
+
+
+def test_multi_job_contends_when_oversubscribed():
+    jobs = {"A": list(range(0, 32, 2)), "B": list(range(1, 32, 2))}
+    thin = FatTree(k=8, n_hosts=32, oversubscription=4.0)
+    r = simulate_multi_job(thin, jobs, layer_bytes=64e6, n_layers=2,
+                           policy="mcast")
+    for name in jobs:
+        assert r.contended_time[name] >= r.solo_time[name] - 1e-12
+        assert r.slowdown[name] > 1.3
+    assert max(r.link_utilization.values()) <= 1.0 + 1e-9
+
+
+def test_multi_job_rejects_overlapping_hosts():
+    topo = FatTree(k=8, n_hosts=32)
+    with pytest.raises(AssertionError, match="disjoint"):
+        simulate_multi_job(topo, {"A": [0, 1, 2, 3], "B": [3, 4, 5, 6]},
+                           n_layers=1)
+
+
 # ------------------------------------------ vectorized worker pool regression
 
 
@@ -121,15 +188,23 @@ def test_worker_pool_edge_cases():
 
 def test_worker_pool_vectorized_is_fast():
     """The vectorized path must beat the reference loop by a wide margin on
-    large-message sweeps; a relative bound stays robust on slow CI runners."""
+    large-message sweeps; best-of-3 timings keep the relative bound robust
+    against scheduler noise on loaded CI runners."""
     import time
 
     arrivals = np.sort(np.random.default_rng(0).uniform(0, 1.0, size=200_000))
-    t0 = time.perf_counter()
+
+    def best_of_3(fn):
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
     done, _ = worker_pool_completion(arrivals, 8, 1e-6, 8192)
-    dt_vec = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    worker_pool_completion_loop(arrivals, 8, 1e-6, 8192)
-    dt_loop = time.perf_counter() - t0
+    dt_vec = best_of_3(lambda: worker_pool_completion(arrivals, 8, 1e-6, 8192))
+    dt_loop = best_of_3(
+        lambda: worker_pool_completion_loop(arrivals, 8, 1e-6, 8192))
     assert done.shape == arrivals.shape
     assert dt_vec < dt_loop / 10, (dt_vec, dt_loop)

@@ -1,5 +1,7 @@
-"""Discrete-event simulator behaviour (paper §VI evaluation properties)."""
+"""Discrete-event simulator behaviour (paper §VI evaluation properties),
+including the routed topology mode (ranks placed on a real fat-tree)."""
 import numpy as np
+import pytest
 
 from repro.core.simulator import (
     FabricParams,
@@ -8,6 +10,7 @@ from repro.core.simulator import (
     simulate_broadcast,
     sweep_phase_breakdown,
 )
+from repro.core.topology import FatTree
 
 
 def _fab(**kw):
@@ -67,6 +70,71 @@ def test_fig10_trend_multicast_dominates_at_scale():
     assert large["mcast_frac"] > 0.95  # 99% claim at scale
     assert small["mcast_frac"] < large["mcast_frac"]
     assert small["rnr_frac"] > large["rnr_frac"]
+
+
+def test_routed_broadcast_counts_tree_bytes():
+    """Topology mode: one engine run yields timing AND per-link bytes; the
+    tree serves the full buffer on every edge (max = buffer size, Insight 1)."""
+    p, n = 16, 1 << 20
+    fab = _fab(jitter=0.0)
+    topo = FatTree(k=8, n_hosts=p, b_host=fab.b_link)
+    r = simulate_broadcast(p, n, fab, WorkerParams(8),
+                           np.random.default_rng(0), topology=topo)
+    assert r.recovered == 0
+    served = {k: v for k, v in r.link_bytes.items() if v}
+    tree_edges = topo.multicast_tree(0, list(range(p)))
+    assert len(served) == len(tree_edges)
+    assert max(served.values()) == pytest.approx(n, rel=1e-6)
+    # counters view is derived from the same live links
+    assert topo.counters.total() == pytest.approx(sum(served.values()))
+    assert r.time > 0
+
+
+def test_routed_broadcast_slower_through_oversubscribed_fabric():
+    p, n = 16, 4 << 20
+    fab = _fab(jitter=0.0)
+    flat = FatTree(k=8, n_hosts=p, b_host=fab.b_link)
+    thin = FatTree(k=8, n_hosts=p, b_host=fab.b_link, oversubscription=4.0)
+    t_flat = simulate_broadcast(p, n, fab, WorkerParams(8),
+                                np.random.default_rng(0), topology=flat).time
+    t_thin = simulate_broadcast(p, n, fab, WorkerParams(8),
+                                np.random.default_rng(0), topology=thin).time
+    assert t_thin > t_flat * 1.5      # tree rate = min share over edges
+
+
+def test_routed_allgather_chains_collide_and_conserve():
+    """M concurrent chains on a real fat-tree: per-link bytes equal the
+    broadcast-composition totals, every leaf ejection link carries the whole
+    gathered buffer minus its own shard, and the time stays receive-bound."""
+    p, n = 16, 1 << 18
+    fab = _fab(jitter=0.0)
+    topo = FatTree(k=8, n_hosts=p, b_host=fab.b_link)
+    r = simulate_allgather(p, n, fab, WorkerParams(8),
+                           np.random.default_rng(0), n_chains=p, topology=topo)
+    served = {k: v for k, v in r.link_bytes.items() if v}
+    hosts = list(range(p))
+    expect = n * sum(len(topo.multicast_tree(h, hosts)) for h in hosts)
+    assert sum(served.values()) == pytest.approx(expect, rel=1e-6)
+    for h in hosts:   # ejection link of every host: (P-1) shards
+        eject = served[f"e{topo._loc(h)[0]}.{topo._loc(h)[1]}->h{h}"]
+        assert eject == pytest.approx((p - 1) * n, rel=1e-6)
+    assert r.time >= (p - 1) * n / fab.b_link
+
+
+def test_routed_allgather_fewer_chains_same_bytes_more_sync():
+    p, n = 16, 1 << 18
+    fab = _fab(jitter=0.0)
+    topo = FatTree(k=8, n_hosts=p, b_host=fab.b_link)
+    full = simulate_allgather(p, n, fab, WorkerParams(8),
+                              np.random.default_rng(0), n_chains=p,
+                              topology=topo)
+    chained = simulate_allgather(p, n, fab, WorkerParams(8),
+                                 np.random.default_rng(0), n_chains=2,
+                                 topology=topo)
+    assert sum(chained.link_bytes.values()) == pytest.approx(
+        sum(full.link_bytes.values()), rel=1e-6)
+    assert chained.time > full.time            # R=8 rounds of activation sync
+    assert chained.time < full.time * 1.5      # but still receive-bound
 
 
 def test_worker_scaling_helps_when_underprovisioned():
