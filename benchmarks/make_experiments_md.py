@@ -47,7 +47,8 @@ def dryrun_section(recs):
         "collective instructions found in the partitioned HLO, and the",
         "loop-scaled per-device collective traffic parsed from it.",
         "",
-        "| arch | shape | mesh | compile s | args GiB/dev | HLO collective ops | coll GB/dev (HLO) |",
+        "| arch | shape | mesh | compile s | args GiB/dev "
+        "| HLO collective ops | coll GB/dev (HLO) |",
         "|---|---|---|---|---|---|---|",
     ]
     for r in sorted(base, key=lambda x: (x["arch"], x["shape"], x["multi_pod"])):
@@ -95,7 +96,8 @@ def roofline_section(recs):
         "`frac` = MODEL_FLOPS-based compute time / dominant term — the",
         "roofline fraction; `useful` = MODEL_FLOPS / impl_FLOPs.",
         "",
-        "| arch | shape | Tc (s) | Tm (s) | Tx (s) | dominant | frac | useful | params B | next lever |",
+        "| arch | shape | Tc (s) | Tm (s) | Tx (s) | dominant "
+        "| frac | useful | params B | next lever |",
         "|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:

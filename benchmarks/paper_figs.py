@@ -6,6 +6,8 @@ import time
 
 import numpy as np
 
+import math
+
 from repro.core import cost_model as cm
 from repro.core import dpa, protocol
 from repro.core.engine import simulate_multi_job, sweep_fsdp_contention
@@ -260,6 +262,119 @@ def multi_job_contention():
     return rows
 
 
+def protocol_loss_sweep(p_list=(16, 64, 256, 512), *, n_bytes=1 << 20,
+                        link_loss=1e-3, seeds=(0, 1, 2), crossover_p=64,
+                        loss_grid=(1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2,
+                                   1e-1, 2e-1, 3e-1)):
+    """Packet-level reliability headline (§III): at a fixed 0.1% per-link
+    loss, NACK-aggregation + multicast-retransmission recovery time grows
+    no faster than O(log p) — the fat-tree depth is constant, the root
+    serves ONE aggregated NACK per round, and the retransmit union
+    saturates. Also locates the loss rate at which reliable-unicast ring
+    broadcast overtakes multicast+recovery (it must sit well above the
+    paper's operating point), and reports the Gilbert-Elliott bursty-loss
+    contrast at equal mean rate."""
+    from repro.core.packet import GilbertElliottLoss
+
+    fab = FabricParams(jitter=0.0)
+    wk = WorkerParams(n_recv_workers=16)
+    rows = []
+
+    # -- part A: recovery-time growth in p at fixed per-link loss
+    rec = {}
+    for p in p_list:
+        k = 32 if p > 128 else 16
+        per = []
+        for s in seeds:
+            topo = FatTree(k=k, n_hosts=p, b_host=fab.b_link)
+            r = simulate_broadcast(p, n_bytes, fab, wk,
+                                   np.random.default_rng(s), topology=topo,
+                                   fidelity="packet", loss=link_loss)
+            assert r.completed, (p, s)
+            assert r.bytes_fast + r.bytes_recovery == r.bytes_total
+            per.append(r.phases.reliability)
+        rec[p] = sum(per) / len(per)
+        rows.append((f"proto.P{p}.recovery_us", round(rec[p] * 1e6, 1),
+                     f"{link_loss:g} per-link loss, mean of {len(seeds)} seeds"))
+    p0, p1 = min(p_list), max(p_list)
+    growth = rec[p1] / rec[p0]
+    log_bound = math.log2(p1) / math.log2(p0)
+    rows.append(("proto.recovery_growth_x", round(growth, 3),
+                 f"P{p0}->P{p1}; O(log p) bound {log_bound:.2f}"))
+    # constant-time claim: growth bounded by the log-p envelope (slack for
+    # sampling noise); a linear-in-p protocol would show ~p1/p0 = 32x here
+    assert growth <= log_bound * 1.5, (growth, log_bound)
+
+    # NACK-aggregation ablation (same seed, same loss draws): without
+    # in-tree ORs the root pool serves one NACK per nacker instead of one
+    # aggregate, so recovery can only get slower
+    k1 = 32 if p1 > 128 else 16
+    runs = {}
+    for agg in (True, False):
+        topo = FatTree(k=k1, n_hosts=p1, b_host=fab.b_link)
+        runs[agg] = simulate_broadcast(
+            p1, n_bytes, fab, wk, np.random.default_rng(seeds[0]),
+            topology=topo, fidelity="packet", loss=link_loss,
+            aggregate_nacks=agg)
+    rows.append((f"proto.P{p1}.noagg_recovery_us",
+                 round(runs[False].phases.reliability * 1e6, 1),
+                 f"vs {runs[True].phases.reliability*1e6:.1f}us aggregated"))
+    assert (runs[False].phases.reliability
+            >= runs[True].phases.reliability - 1e-12)
+    # DPA NACK budget context: even WITHOUT aggregation a 16-thread pool
+    # could absorb every leaf's NACK each round at the largest scale here
+    nack_budget = dpa.nack_rate(dpa.DpaConfig("UD", 16))
+    rows.append(("proto.dpa_nack_rate_msgs_per_s", int(nack_budget),
+                 f"16 UD threads; P{p1} worst case needs {p1 - 1}/round"))
+    assert nack_budget > p1 - 1
+
+    # -- part B: multicast-vs-unicast crossover loss rate
+    p = crossover_p
+    t_mc, t_ring = [], []
+    for q in loss_grid:
+        per = [simulate_broadcast(p, n_bytes, fab, wk,
+                                  np.random.default_rng(s),
+                                  fidelity="packet", loss=q).time
+               for s in seeds]
+        t_mc.append(sum(per) / len(per))
+        t_ring.append(protocol.analytic_ring_pipeline_bcast_time(
+            p, n_bytes, fab.b_link, fab.latency, loss_rate=q))
+    crossover = None
+    for i, q in enumerate(loss_grid):
+        rows.append((f"proto.loss{q:g}.mcast_vs_ring_x",
+                     round(t_mc[i] / t_ring[i], 3),
+                     f"mcast={t_mc[i]*1e6:.0f}us ring={t_ring[i]*1e6:.0f}us"))
+        if crossover is None and t_mc[i] > t_ring[i]:
+            crossover = (math.sqrt(loss_grid[i - 1] * q) if i else q)
+    rows.append(("proto.crossover_loss",
+                 crossover if crossover is not None else float("inf"),
+                 f"P={p}, {n_bytes>>10} KiB: unicast ring wins above this"))
+    # multicast+recovery must still win at the paper's 0.1% operating point
+    assert crossover is None or crossover > 1e-3, crossover
+
+    # -- part C: bursty (Gilbert-Elliott) vs i.i.d. loss at equal mean rate
+    rate, burst = 1e-2, 16.0
+    ge = GilbertElliottLoss.from_rate(rate, mean_burst=burst)
+    r_ge = simulate_broadcast(p, n_bytes, fab, wk, np.random.default_rng(0),
+                              fidelity="packet", loss=ge)
+    r_iid = simulate_broadcast(p, n_bytes, fab, wk, np.random.default_rng(0),
+                               fidelity="packet", loss=rate)
+    assert r_ge.completed and r_iid.completed
+    rows.append(("proto.ge_vs_iid_recovery_x",
+                 round(r_ge.phases.reliability
+                       / max(r_iid.phases.reliability, 1e-12), 3),
+                 f"burst={burst:g} pkts at rate {rate:g}"))
+    return rows
+
+
+def protocol_loss_sweep_smoke():
+    """CI-sized protocol_loss_sweep (seconds): same asserts, capped at 128
+    hosts / 256 KiB and a coarser crossover grid."""
+    return protocol_loss_sweep(
+        p_list=(16, 64, 128), n_bytes=1 << 18, seeds=(0, 1),
+        loss_grid=(1e-3, 1e-2, 3e-2, 1e-1, 3e-1))
+
+
 def fsdp_contention_sweep():
     """Abstract's opening claim: interleaved AG/RS contend for injection
     bandwidth; the multicast schedule and the Insight-2 direction split cut
@@ -358,10 +473,14 @@ ALL = [
     fig11_throughput_188, fig12_traffic_savings, table1_datapath,
     fig13_14_thread_scaling, fig15_chunk_sizes, fig16_tbit,
     appendix_b_speedup, fsdp_contention_sweep, fabric_sweep,
-    multi_job_contention, measured_protocol_micro, measured_jax_collectives,
+    protocol_loss_sweep, multi_job_contention, measured_protocol_micro,
+    measured_jax_collectives,
 ]
 
 # seconds-scale subset for benchmarks/run.py --smoke / CI: the FSDP
-# contention grid plus the routed fabric sweep (capped at 512 hosts so its
-# traffic-conservation and Insight-1 asserts run on every check in < ~60 s)
-SMOKE = [fsdp_contention_sweep, fabric_sweep_smoke, multi_job_contention]
+# contention grid, the routed fabric sweep (capped at 512 hosts so its
+# traffic-conservation and Insight-1 asserts run on every check in < ~60 s),
+# the packet-protocol loss sweep (constant-time recovery + unicast
+# crossover) and the multi-job contention scenario
+SMOKE = [fsdp_contention_sweep, fabric_sweep_smoke, protocol_loss_sweep_smoke,
+         multi_job_contention]

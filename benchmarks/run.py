@@ -5,10 +5,18 @@ benchmark — a failing claim fails the run.
 
     PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
     PYTHONPATH=src python -m benchmarks.run --smoke   # seconds-scale CI sweep
+
+``--smoke`` also emits ``BENCH_smoke.json``: per-scenario wall times plus
+every derived RATIO metric (bubble fractions, slowdown/reduction factors,
+the protocol loss-crossover). Ratios are deterministic model outputs —
+machine-independent — so scripts/bench_gate.py diffs them against the
+committed ``benchmarks/baseline_smoke.json`` and fails CI on regression.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import os
 import sys
 import time
@@ -18,13 +26,27 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import paper_figs, roofline  # noqa: E402
 
+#: benchmark rows gated by scripts/bench_gate.py: dimensionless derived
+#: ratios (and the crossover loss rate), never wall-clock measurements
+RATIO_SUFFIXES = ("_x", ".bubble_frac", ".crossover_loss")
+
+
+def is_ratio_row(name: str) -> bool:
+    return name.endswith(RATIO_SUFFIXES)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--results", default="dryrun_results")
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale FSDP-contention sweep only (CI)")
+                    help="seconds-scale CI sweep; also writes --json")
+    ap.add_argument("--json",
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         "BENCH_smoke.json"),
+                    help="smoke-report path (written only with --smoke; "
+                         "defaults to the repo root, where "
+                         "scripts/bench_gate.py looks for it)")
     args = ap.parse_args()
 
     benches = paper_figs.SMOKE if args.smoke else paper_figs.ALL
@@ -33,19 +55,38 @@ def main() -> None:
 
     print("name,value,derived")
     failures = 0
+    report = {"scenarios": {}, "ratios": {}}
     for fn in benches:
         t0 = time.perf_counter()
+        n_rows = 0
         try:
             for name, value, derived in fn():
                 print(f"{name},{value},{derived}")
+                n_rows += 1
+                if is_ratio_row(name):
+                    v = float(value)
+                    # null sentinel: inf/nan are not valid strict JSON and
+                    # must never reach the committed baseline as `Infinity`
+                    report["ratios"][name] = v if math.isfinite(v) else None
         except AssertionError as e:
             failures += 1
             print(f"{fn.__name__},FAILED,{e}")
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
-        dt = (time.perf_counter() - t0) * 1e6
-        print(f"bench.{fn.__name__}.us_per_call,{dt:.0f},wall")
+        dt = time.perf_counter() - t0
+        print(f"bench.{fn.__name__}.us_per_call,{dt*1e6:.0f},wall")
+        report["scenarios"][fn.__name__] = {
+            "wall_s": round(dt, 4), "rows": n_rows,
+        }
+
+    if args.smoke:
+        report["failures"] = failures
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True, allow_nan=False)
+            f.write("\n")
+        print(f"bench.smoke_report,{args.json},"
+              f"{len(report['ratios'])} gated ratios", file=sys.stderr)
 
     if not args.skip_roofline and os.path.isdir(args.results):
         try:

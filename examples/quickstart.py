@@ -25,8 +25,9 @@ def main():
         shape=ShapeConfig("t", "train", 128, 8),
         train=TrainConfig(steps=args.steps, learning_rate=1e-2, warmup_steps=2),
     )
-    print(f"model: {model.name} ({model.family}), "
-          f"{sum(l.size for l in jax.tree.leaves(init_state(run, None, jax.random.PRNGKey(0)).params)):,} params")
+    n_params = sum(l.size for l in jax.tree.leaves(
+        init_state(run, None, jax.random.PRNGKey(0)).params))
+    print(f"model: {model.name} ({model.family}), {n_params:,} params")
 
     api, ctx, step = make_train_step(run, None)
     state = init_state(run, None, jax.random.PRNGKey(0))

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: diff the smoke report's derived ratios against
+the committed baseline and fail CI when any drifts past tolerance.
+
+The gated metrics (benchmarks/run.py RATIO_SUFFIXES) are deterministic model
+outputs — bubble fractions, traffic-reduction and slowdown factors, the
+protocol loss-crossover — not wall-clock, so they are machine-independent
+and the tolerance only absorbs intentional-model-change review, never timer
+noise. Wall times are carried in the report for humans but never gated.
+
+    python scripts/bench_gate.py                       # gate current vs baseline
+    python scripts/bench_gate.py --update              # bless current as baseline
+    python scripts/bench_gate.py --tolerance 0.05      # tighter band
+
+Exit codes: 0 ok, 1 regression (or missing/new ratio), 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(REPO, "benchmarks", "baseline_smoke.json")
+DEFAULT_CURRENT = os.path.join(REPO, "BENCH_smoke.json")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
+    """Regression messages (empty = gate passes). A ratio regresses when it
+    deviates from baseline by more than ``tolerance`` relative (with a small
+    absolute floor for near-zero ratios); added or removed ratios must be
+    blessed explicitly with --update."""
+    base = baseline.get("ratios", {})
+    cur = current.get("ratios", {})
+    problems = []
+    for name in sorted(set(base) | set(cur)):
+        if name not in cur:
+            problems.append(f"MISSING  {name}: in baseline but not in report")
+            continue
+        if name not in base:
+            problems.append(f"NEW      {name}={cur[name]:g}: not in baseline "
+                            f"(bless with --update)")
+            continue
+        if base[name] is None or cur[name] is None:
+            # null = run.py's non-finite sentinel (e.g. crossover never
+            # reached in the loss grid); only consistent nulls pass
+            if base[name] != cur[name]:
+                problems.append(f"DRIFT    {name}: {base[name]} -> "
+                                f"{cur[name]} (non-finite sentinel)")
+            continue
+        b, c = float(base[name]), float(cur[name])
+        if math.isnan(b) or math.isnan(c):
+            # NaN compares False against everything — catch it explicitly or
+            # a corrupted metric sails through the gate
+            problems.append(f"INVALID  {name}: {b:g} -> {c:g} (NaN)")
+            continue
+        if math.isinf(b) or math.isinf(c):
+            if b != c:
+                problems.append(f"DRIFT    {name}: {b:g} -> {c:g}")
+            continue
+        denom = max(abs(b), 1e-9)
+        rel = abs(c - b) / denom
+        if rel > tolerance and abs(c - b) > 1e-6:
+            problems.append(
+                f"DRIFT    {name}: {b:g} -> {c:g} ({rel*100:.1f}% > "
+                f"{tolerance*100:.0f}% tolerance)")
+    if current.get("failures"):
+        problems.append(f"FAILURES {current['failures']} benchmark(s) failed")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--current", default=DEFAULT_CURRENT)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative drift allowed per ratio (default 10%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="bless the current report as the new baseline")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.current):
+        print(f"bench_gate: no report at {args.current}; run "
+              f"`python -m benchmarks.run --smoke` first", file=sys.stderr)
+        return 2
+    if args.update:
+        # bless ONLY the gated ratios: wall_s etc. are machine-dependent and
+        # would churn the committed baseline with timing noise
+        ratios = load(args.current).get("ratios", {})
+        with open(args.baseline, "w") as f:
+            json.dump({"ratios": ratios}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"bench_gate: blessed {args.current} -> {args.baseline} "
+              f"({len(ratios)} ratios)")
+        return 0
+    if not os.path.exists(args.baseline):
+        print(f"bench_gate: no baseline at {args.baseline}; bless one with "
+              f"--update", file=sys.stderr)
+        return 2
+
+    baseline, current = load(args.baseline), load(args.current)
+    problems = compare(baseline, current, args.tolerance)
+    n = len(current.get("ratios", {}))
+    if problems:
+        print(f"bench_gate: FAIL ({len(problems)} problem(s), {n} ratios "
+              f"checked at {args.tolerance*100:.0f}% tolerance)")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"bench_gate: OK ({n} ratios within {args.tolerance*100:.0f}% of "
+          f"baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

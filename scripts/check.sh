@@ -1,15 +1,41 @@
 #!/usr/bin/env bash
-# CI entrypoint: tier-1 test suite + the seconds-scale smoke sweep
-# (FSDP-contention grid, the routed fabric sweep with its
-# traffic-conservation / Insight-1 asserts capped at 512 hosts, and the
-# multi-job contention scenario — the smoke subset stays well under 60 s).
-# Runs fully offline (no hypothesis/zstandard required — see README).
+# CI entrypoint — fully offline (no package index, no hypothesis/zstandard
+# required; see README):
 #
-#   scripts/check.sh             # everything
-#   scripts/check.sh -k engine   # extra args are forwarded to pytest
+#   1. lint        ruff when installed, else the same ruleset via the
+#                  offline fallback scripts/lint.py (kept in sync with
+#                  pyproject.toml [tool.ruff.lint])
+#   2. fast tests  pytest -m "not slow": the simulator/protocol/fabric core
+#                  (< 1 min — the `slow` marker holds the jax model tier)
+#   3. smoke bench seconds-scale paper-claim sweep; writes BENCH_smoke.json
+#   4. bench gate  scripts/bench_gate.py diffs the smoke report's derived
+#                  ratios against benchmarks/baseline_smoke.json
+#
+#   scripts/check.sh             # lint + fast tier + smoke + gate
+#   scripts/check.sh -k engine   # extra args forwarded to pytest
+#   RUN_SLOW=1 scripts/check.sh  # additionally run the slow (jax model) tier
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q "$@"
+if command -v ruff >/dev/null 2>&1; then
+    echo "== lint (ruff)"
+    ruff check src tests benchmarks scripts examples
+else
+    echo "== lint (offline fallback: scripts/lint.py)"
+    python scripts/lint.py
+fi
+
+echo "== tests (fast tier)"
+python -m pytest -x -q -m "not slow" "$@"
+
+if [[ "${RUN_SLOW:-0}" != "0" ]]; then
+    echo "== tests (slow tier: jax model/integration)"
+    python -m pytest -x -q -m slow
+fi
+
+echo "== smoke benchmarks"
 python -m benchmarks.run --smoke
+
+echo "== benchmark regression gate"
+python scripts/bench_gate.py

@@ -1,9 +1,20 @@
 """The paper's primary contribution: bandwidth-optimal Broadcast/Allgather
 collectives — the Appendix-A broadcast sequencer, jax shard_map collective
 kernels, fat-tree/torus traffic cost models, the reliable-broadcast protocol
-simulator, the shared discrete-event contention engine (engine.py), and the
-DPA SmartNIC offload model."""
+simulator, the packet-level reliability engine (packet.py), the shared
+discrete-event contention engine (engine.py), and the DPA SmartNIC offload
+model.
 
-from repro.core import collectives, cost_model, engine, schedule, topology
+Submodules load lazily (PEP 562): collectives pulls in jax, while the
+simulator/protocol/packet/engine path is numpy-only — importing the package
+for the discrete-event side must not pay (or require) the jax import."""
+import importlib
 
-__all__ = ["collectives", "cost_model", "engine", "schedule", "topology"]
+__all__ = ["collectives", "cost_model", "engine", "schedule", "topology",
+           "dpa", "packet", "protocol", "simulator"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -98,6 +98,15 @@ def sustained_tput(cfg: DpaConfig) -> float:
     return min(pool_tput(cfg), cfg.link_bytes_per_s)
 
 
+def nack_rate(cfg: DpaConfig) -> float:
+    """NACK messages/s the DPA progress engine sustains (core/packet.py
+    recovery rounds): NACK handling is CQE-bound exactly like the data
+    path (Table I), so the pool's chunk rate is its NACK rate — with
+    in-tree aggregation the root serves O(1) NACKs/round, which is why the
+    recovery engine stays flat as P grows."""
+    return _pool_chunk_rate(cfg.transport, cfg.n_threads)
+
+
 def sustained_chunk_rate(cfg: DpaConfig) -> float:
     """Chunks/s (Fig 16: compare against the arrival rate of a Tbit/s link)."""
     return min(

@@ -165,9 +165,12 @@ class Link:
     """Directed bandwidth server: capacity is max-min shared among the active
     flows that cross it. ``src``/``dst`` carry the topology endpoints when the
     link belongs to a core/topology.py fabric; bytes_served is the live
-    switch-port counter (Fig. 12)."""
+    switch-port counter (Fig. 12). ``loss`` optionally carries a
+    core/packet.py LossModel — the fluid engine itself ignores it; the
+    packet-fidelity overlay samples per-packet drops from it."""
 
-    __slots__ = ("name", "capacity", "active", "bytes_served", "src", "dst")
+    __slots__ = ("name", "capacity", "active", "bytes_served", "src", "dst",
+                 "loss")
 
     def __init__(self, name: str, capacity: float,
                  src: str | None = None, dst: str | None = None):
@@ -178,6 +181,7 @@ class Link:
         self.bytes_served = 0.0
         self.src = src
         self.dst = dst
+        self.loss = None
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"Link({self.name}, cap={self.capacity:g}, bytes={self.bytes_served:g})"
@@ -567,6 +571,82 @@ def _routed_fsdp_submitters(eng: Engine, topology, hosts, p: int, policy: str,
     return submit_ag, submit_rs, rounds * fabric.latency
 
 
+def _make_ag_loss_overlay(fidelity: str, loss, rng, policy: str, topology,
+                          hosts, p: int, gather_bytes: float,
+                          shard_bytes: float, fabric: FabricParams,
+                          workers: "WorkerParams | None"):
+    """Per-layer AG loss/recovery penalty sampler for fidelity="packet".
+
+    Multicast policies: sample per-Link drops on every AG tree and pay the
+    NACK + multicast-retransmission rounds of packet.recovery_overlay (max
+    over trees — the layer's AG is ready when ALL trees recovered). Unicast
+    "naive": deterministic RC goodput inflation 1/(1-q_path). Returns a
+    zero-cost callable for the fluid fidelity."""
+    if fidelity != "packet":
+        return lambda: 0.0
+    from repro.core import packet as packet_mod  # deferred: imports engine
+
+    rng = rng if rng is not None else np.random.default_rng(0)
+    template = packet_mod.resolve_loss(loss, fabric)
+    if template is None:
+        return lambda: 0.0
+    if workers is None:
+        # NACK-service default: a fully-threaded DPA core (workers_from_dpa
+        # lets callers derive this from a DpaConfig instead)
+        workers = WorkerParams(n_recv_workers=16)
+    hosts = list(hosts)
+
+    if policy == "naive":
+        if topology is not None:
+            hops = [len(topology.route(hosts[i], hosts[(i + 1) % p]))
+                    for i in range(p)]
+            path_len = max(sum(hops) / len(hops), 1.0)
+        else:
+            path_len = 1.0
+        q = 1.0 - (1.0 - template.mean_rate) ** path_len
+        extra = 2.0 * gather_bytes / fabric.b_link * (1.0 / (1.0 - q) - 1.0)
+        return lambda: extra
+
+    from repro.core.simulator import _chunking  # deferred, like packet_mod
+
+    n_chunks, chunk = _chunking(int(shard_bytes), fabric.mtu)
+    tree_infos = []
+    if topology is not None:
+        all_models: dict[int, object] = {}
+        for h in hosts:
+            tree = topology.multicast_tree(h, hosts)
+            paths = packet_mod.tree_paths(
+                tree, f"h{h}", [f"h{x}" for x in hosts if x != h])
+            for links in paths.values():
+                for link in links:
+                    if id(link) not in all_models:
+                        all_models[id(link)] = (link.loss
+                                                or template.fork(rng))
+            models = {id(link): all_models[id(link)]
+                      for links in paths.values() for link in links}
+            tree_infos.append((paths, models,
+                               min(link.capacity for link in tree)))
+    else:
+        # one carrier (one loss process) per leaf ejection link, SHARED by
+        # every tree crossing it — mirrors simulate_packet_allgather's
+        # abstract mode; per-tree forks would decorrelate bursts that
+        # physically hit all trees at once
+        carriers = {x: packet_mod._AbstractCarrier() for x in hosts}
+        leaf_models = {x: template.fork(rng) for x in sorted(carriers)}
+        for h in hosts:
+            paths = {x: [carriers[x]] for x in hosts if x != h}
+            models = {id(carriers[x]): leaf_models[x] for x in hosts
+                      if x != h}
+            tree_infos.append((paths, models, fabric.b_link))
+
+    def overlay() -> float:
+        return max(packet_mod.recovery_overlay(
+            paths, models, n_chunks, chunk, rate, fabric, workers, rng)
+            for paths, models, rate in tree_infos)
+
+    return overlay
+
+
 def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
                        n_layers: int = 32, layer_bytes: float = 256e6,
                        p: int = 16,
@@ -576,7 +656,10 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
                        tokens_per_device: int = 4096,
                        hw_flops: float = 200e12,
                        dtype_bytes: int = 2,
-                       topology=None, hosts=None) -> FsdpStepResult:
+                       topology=None, hosts=None,
+                       fidelity: str = "fluid", loss=None,
+                       rng: "np.random.Generator | None" = None,
+                       workers: "WorkerParams | None" = None) -> FsdpStepResult:
     """Interleaved forward-AG + backward-RS + compute FSDP timeline.
 
     Per layer the parameters live sharded 1/p per node; the forward pass
@@ -614,8 +697,23 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
 
     bubble_fraction = 1 - compute_time / step_time: the fraction of the step
     the compute units sit idle waiting on exposed communication.
+
+    ``fidelity="packet"`` overlays the core/packet.py loss/recovery model on
+    every layer's AG readiness: multicast policies sample per-Link drops on
+    the AG trees and pay NACK-aggregation + retransmission rounds at the
+    tree bottleneck rate (packet.recovery_overlay — a stated approximation:
+    recovery flows do not re-enter the global max-min allocation); the
+    unicast "naive" policy pays the RC goodput inflation 1/(1-q_path).
+    ``loss`` is a rate or a packet.LossModel; ``rng`` seeds the sampling;
+    ``workers`` sets the NACK-service pool (e.g. via workers_from_dpa —
+    default: one fully-threaded DPA core, 16 workers).
     """
     assert policy in FSDP_POLICIES, policy
+    assert fidelity in ("fluid", "packet"), fidelity
+    # same footgun guard as simulate_broadcast/simulate_allgather: a loss
+    # model without packet fidelity would be silently ignored
+    assert fidelity == "packet" or loss is None, \
+        "loss models require fidelity='packet'"
     fabric = fabric or FabricParams()
     if model is not None:
         n_layers, layer_bytes = _layer_bytes_from_model(model, dtype_bytes)
@@ -669,6 +767,10 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
         rounds = max(p // max(n_chains, 1), 1)
         ag_sync = rounds * fabric.latency
 
+    ag_overlay = _make_ag_loss_overlay(
+        fidelity, loss, rng, policy, topology,
+        hosts if hosts is not None else range(p), p,
+        gather_bytes, shard_bytes, fabric, workers)
     compute_total = 0.0
 
     # ---- forward: AG(i+1) prefetched at compute-start of layer i
@@ -676,7 +778,7 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
     ag[0] = submit_ag(0.0)
     t = 0.0
     for i in range(n_layers):
-        t_ready = eng.wait(*ag[i]) + ag_sync
+        t_ready = eng.wait(*ag[i]) + ag_sync + ag_overlay()
         start = max(t, t_ready)
         if i + 1 < n_layers:
             ag[i + 1] = submit_ag(start)
@@ -689,7 +791,7 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
     ag_b[n_layers - 1] = submit_ag(t_fwd_end)
     rs_flows: list[Flow] = []
     for i in range(n_layers - 1, -1, -1):
-        t_ready = eng.wait(*ag_b[i]) + ag_sync
+        t_ready = eng.wait(*ag_b[i]) + ag_sync + ag_overlay()
         start = max(t, t_ready)
         if i - 1 >= 0:
             ag_b[i - 1] = submit_ag(start)

@@ -1,0 +1,1039 @@
+"""Packet-level reliable-multicast protocol engine (paper §III, per-packet).
+
+The fluid engine (core/engine.py) times *byte streams*; delivery is lossless
+by construction. This module replays the same routed runs at MTU granularity
+with loss injected on the engine ``Link``s, reproducing the part of the paper
+that distinguishes it from prior multicast collectives: reliability at
+~constant cost in node count.
+
+Datapath per Broadcast (simulate_packet_broadcast):
+
+  1. The root's stream is chunked into MTU packets; their injection times
+     come from the SAME fluid tree flow the fluid model uses (the fabric
+     contention model is shared, not duplicated).
+  2. Every tree Link samples a per-packet drop mask from its LossModel —
+     i.i.d. Bernoulli or bursty Gilbert–Elliott (per-link chain state
+     persists across retransmission rounds, so bursts straddle rounds). A
+     packet dropped on an upstream link is lost for every receiver below it:
+     the multicast loss correlation falls out of the tree structure.
+  3. Each receiver tracks arrival in a PACKED bitmap — the u32 word format of
+     kernels/bitmap.py (bitmap_pack_np / bitmap_unpack_np are bit-identical
+     numpy twins of the Pallas kernels); surviving packets run through the
+     DPA worker pool (engine.worker_pool_completion), whose staging-ring RNR
+     drops join the missing set.
+  4. Recovery rounds: at the cutoff timer (protocol.cutoff_time) every
+     incomplete receiver sends its missing-bitmap NACK up the reverse tree.
+     Switches OR-aggregate hop by hop, so the root's DPA services ONE
+     aggregated NACK per round (``aggregate_nacks=False`` disables this and
+     the root pool serves one NACK per nacker — the ablation that shows why
+     aggregation is what keeps recovery flat in P). The root then multicasts
+     the UNION of missing chunks down the tree pruned to the NACKing leaves
+     (a real engine tree flow: retransmissions contend on, and are counted
+     by, the same fabric links). Repeat until every bitmap is complete.
+
+simulate_packet_allgather composes R rounds of M concurrent packet
+Broadcasts (§IV-A round roots), chains colliding on the fabric exactly as in
+the fluid model, each chain recovering independently per round.
+
+Closed-form expectations for all of this live in core/protocol.py
+(analytic_* functions) and are used by the tests as a cross-check oracle; at
+loss rate 0 this engine reproduces the fluid model's times exactly.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import protocol
+from repro.core.engine import (
+    Engine,
+    FabricParams,
+    WorkerParams,
+    worker_pool_completion,
+)
+from repro.core.simulator import PhaseBreakdown, _chunking, _rnr_barrier
+from repro.kernels.bitmap_np import (  # jax-free: the packet wire format
+    bitmap_pack_np,
+    bitmap_popcount_np,
+    bitmap_unpack_np,
+)
+
+DEFAULT_MAX_ROUNDS = 64
+
+
+# ------------------------------------------------------------------ loss models
+
+
+class LossModel:
+    """Per-link packet-loss process. A model given to a simulator is a
+    *template*: ``fork(rng)`` derives an independently-seeded per-link
+    instance (loss processes on different cables are independent);
+    ``sample(n)`` draws the drop mask for the next n packets crossing the
+    link, advancing any internal channel state."""
+
+    def fork(self, rng: np.random.Generator) -> "LossModel":
+        raise NotImplementedError
+
+    def sample(self, n: int) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def mean_rate(self) -> float:
+        raise NotImplementedError
+
+
+class BernoulliLoss(LossModel):
+    """i.i.d. per-packet drops at a fixed rate."""
+
+    def __init__(self, rate: float, rng: np.random.Generator | None = None):
+        assert 0.0 <= rate < 1.0, rate
+        self.rate = float(rate)
+        self._rng = rng
+
+    def fork(self, rng: np.random.Generator) -> "BernoulliLoss":
+        return BernoulliLoss(
+            self.rate, np.random.default_rng(int(rng.integers(1 << 62))))
+
+    def sample(self, n: int) -> np.ndarray:
+        if self.rate == 0.0:
+            return np.zeros(n, dtype=bool)
+        assert self._rng is not None, "sample() on an unforked template"
+        return self._rng.random(n) < self.rate
+
+    @property
+    def mean_rate(self) -> float:
+        return self.rate
+
+
+class GilbertElliottLoss(LossModel):
+    """Two-state bursty channel: GOOD drops with prob e_good, BAD with
+    e_bad; per-packet transition probs p_gb (good->bad) and p_bg (bad->good).
+    Sojourn times are geometric, so the chain is sampled run-length-wise;
+    state persists across sample() calls (bursts straddle recovery rounds)."""
+
+    def __init__(self, p_gb: float, p_bg: float, *, e_good: float = 0.0,
+                 e_bad: float = 1.0, rng: np.random.Generator | None = None):
+        assert 0.0 < p_gb <= 1.0 and 0.0 < p_bg <= 1.0, (p_gb, p_bg)
+        assert 0.0 <= e_good <= 1.0 and 0.0 <= e_bad <= 1.0
+        self.p_gb, self.p_bg = float(p_gb), float(p_bg)
+        self.e_good, self.e_bad = float(e_good), float(e_bad)
+        self._rng = rng
+        self._bad = False
+        if rng is not None:  # start at the stationary distribution
+            pi_bad = self.p_gb / (self.p_gb + self.p_bg)
+            self._bad = bool(rng.random() < pi_bad)
+
+    @classmethod
+    def from_rate(cls, rate: float, mean_burst: float = 8.0,
+                  e_good: float = 0.0) -> "GilbertElliottLoss":
+        """Burst model with a target mean loss rate: BAD drops everything,
+        sojourns in BAD average ``mean_burst`` packets."""
+        assert 0.0 < rate < 1.0 and mean_burst >= 1.0
+        p_bg = 1.0 / mean_burst
+        # stationary P(bad) must equal the target rate (e_bad=1, e_good~0)
+        p_gb = min(p_bg * rate / (1.0 - rate), 1.0)
+        return cls(p_gb, p_bg, e_good=e_good, e_bad=1.0)
+
+    def fork(self, rng: np.random.Generator) -> "GilbertElliottLoss":
+        return GilbertElliottLoss(
+            self.p_gb, self.p_bg, e_good=self.e_good, e_bad=self.e_bad,
+            rng=np.random.default_rng(int(rng.integers(1 << 62))))
+
+    def sample(self, n: int) -> np.ndarray:
+        assert self._rng is not None, "sample() on an unforked template"
+        drops = np.empty(n, dtype=bool)
+        i = 0
+        while i < n:
+            leave = self.p_bg if self._bad else self.p_gb
+            run = int(self._rng.geometric(leave))
+            take = min(run, n - i)
+            e = self.e_bad if self._bad else self.e_good
+            if e <= 0.0:
+                drops[i:i + take] = False
+            elif e >= 1.0:
+                drops[i:i + take] = True
+            else:
+                drops[i:i + take] = self._rng.random(take) < e
+            i += take
+            if take == run:          # sojourn completed inside this block
+                self._bad = not self._bad
+        return drops
+
+    @property
+    def mean_rate(self) -> float:
+        pi_bad = self.p_gb / (self.p_gb + self.p_bg)
+        return (1.0 - pi_bad) * self.e_good + pi_bad * self.e_bad
+
+
+def resolve_loss(loss, fabric: FabricParams) -> LossModel | None:
+    """``loss=`` argument -> template: a LossModel passes through, a float is
+    a Bernoulli rate, None falls back to fabric.p_drop (0 -> lossless)."""
+    if loss is None:
+        return BernoulliLoss(fabric.p_drop) if fabric.p_drop > 0 else None
+    if isinstance(loss, LossModel):
+        return loss
+    rate = float(loss)
+    return BernoulliLoss(rate) if rate > 0 else None
+
+
+def attach_loss(topology, template: LossModel, rng: np.random.Generator,
+                predicate=None) -> int:
+    """Fork ``template`` onto every fabric Link (optionally only those whose
+    name satisfies ``predicate``); returns the number of links armed. Armed
+    links keep their model across simulator calls — GE burst state then
+    persists across collectives on the same fabric."""
+    n = 0
+    for link in topology.links().values():
+        if predicate is None or predicate(link.name):
+            link.loss = template.fork(rng)
+            n += 1
+    return n
+
+
+# ------------------------------------------------------------- tree plumbing
+
+
+def tree_paths(tree_links: Sequence, root_name: str,
+               leaf_names: Sequence[str]) -> dict[str, list]:
+    """Per-leaf ordered root->leaf Link path inside a multicast tree edge
+    set (the tree is a directed arborescence, so the path is unique)."""
+    children = defaultdict(list)
+    for link in tree_links:
+        assert link.src is not None and link.dst is not None, link
+        children[link.src].append(link)
+    want = set(leaf_names)
+    paths: dict[str, list] = {}
+    stack = [(root_name, [])]
+    while stack:
+        node, acc = stack.pop()
+        if node in want:
+            paths[node] = acc
+        for link in children[node]:
+            stack.append((link.dst, acc + [link]))
+    missing = want - set(paths)
+    assert not missing, f"leaves unreachable in tree: {sorted(missing)}"
+    return paths
+
+
+class _LeafState:
+    """Per-receiver protocol state: the packed arrival bitmap (the exact u32
+    word format of kernels/bitmap.py) plus hop latency and pool progress."""
+
+    __slots__ = ("flags", "hop_lat", "t_done", "rnr")
+
+    def __init__(self, n_chunks: int, hop_lat: float):
+        self.flags = np.zeros(n_chunks, dtype=bool)
+        self.hop_lat = hop_lat
+        self.t_done = 0.0
+        self.rnr = 0
+
+    def packed(self) -> np.ndarray:
+        """Arrival bitmap in the kernels/bitmap.py packed-u32 wire format
+        (this is the NACK payload: receivers send ~packed())."""
+        n = self.flags.shape[0]
+        pad = (-n) % 32
+        return bitmap_pack_np(np.pad(self.flags, (0, pad)))
+
+    def n_received(self) -> int:
+        return bitmap_popcount_np(self.packed())
+
+    def missing_idx(self) -> np.ndarray:
+        return np.nonzero(~self.flags)[0]
+
+    def complete(self) -> bool:
+        return bool(self.flags.all())
+
+
+def _pool_with_rnr_psns(arrivals: np.ndarray, psns: np.ndarray,
+                        workers: WorkerParams, service: float):
+    """Worker-pool pass that also identifies WHICH packets the staging ring
+    dropped (the vectorized engine pool only counts them). arrivals must be
+    sorted; psns aligned with arrivals. Returns (t_last_done, rnr_psns)."""
+    done, _ = worker_pool_completion(
+        arrivals, workers.n_recv_workers, service, workers.staging_chunks)
+    if arrivals.shape[0] == 0:
+        return None, psns[:0]
+    stg = workers.staging_chunks
+    if arrivals.shape[0] > stg:
+        pos = stg + np.nonzero(done[:-stg] > arrivals[stg:])[0]
+        rnr_psns = psns[pos]
+    else:
+        rnr_psns = psns[:0]
+    return float(done[-1]), rnr_psns
+
+
+def _or_masks(models: list[LossModel], n: int) -> np.ndarray:
+    """Drop mask for a packet crossing every model's link in sequence."""
+    lost = np.zeros(n, dtype=bool)
+    for m in models:
+        if m is not None:
+            lost |= m.sample(n)
+    return lost
+
+
+def _sample_link_round(link_models: dict[int, LossModel | None],
+                       n: int) -> dict[int, np.ndarray]:
+    """One drop mask per distinct link for the round's n packets — sampled
+    once per LINK (not per receiver), so an upstream drop is shared by every
+    receiver below it."""
+    zeros = np.zeros(n, dtype=bool)
+    return {lid: (m.sample(n) if m is not None else zeros)
+            for lid, m in link_models.items()}
+
+
+def _leaf_lost(path: list, masks: dict[int, np.ndarray], n: int) -> np.ndarray:
+    lost = np.zeros(n, dtype=bool)
+    for link in path:
+        lost |= masks[id(link)]
+    return lost
+
+
+def _models_on_paths(paths: dict, models: dict[int, LossModel | None],
+                     leaves) -> dict[int, LossModel | None]:
+    """Subset of ``models`` on the given leaves' paths — the links a pruned
+    retransmit tree actually traverses."""
+    return {id(link): models[id(link)]
+            for leaf in leaves for link in paths[leaf]}
+
+
+def _link_models(paths: dict[str, list], template: LossModel | None,
+                 rng: np.random.Generator,
+                 cache: dict[int, LossModel | None] | None = None,
+                 ) -> dict[int, LossModel | None]:
+    """Resolve the per-link model: a Link armed via attach_loss keeps its
+    own instance; unarmed links fork the template once (deterministic
+    order). ``cache`` shares the forks across callers — the M chains of an
+    Allgather crossing the same physical Link must see ONE loss process, not
+    M independent ones, and its state must persist across rounds."""
+    out: dict[int, LossModel | None] = {}
+    for leaf in sorted(paths):
+        for link in paths[leaf]:
+            lid = id(link)
+            if lid in out:
+                continue
+            if cache is not None and lid in cache:
+                out[lid] = cache[lid]
+                continue
+            model = getattr(link, "loss", None)
+            if model is None and template is not None:
+                model = template.fork(rng)
+            out[lid] = model
+            if cache is not None:
+                cache[lid] = model
+    return out
+
+
+# --------------------------------------------------------------- NACK + DPA
+
+
+def _nack_service(n_chunks: int, workers: WorkerParams, mtu: int) -> float:
+    """DPA service time for one (aggregated) NACK message: CQE-bound like a
+    data chunk (one MTU of the fabric in use), plus streaming the packed
+    bitmap payload through the worker (1 bit per tracked chunk —
+    protocol.bitmap_bytes)."""
+    wire = protocol.bitmap_bytes(n_chunks * mtu, mtu)
+    return (mtu + wire) / workers.thread_tput
+
+
+@dataclass
+class RoundTrace:
+    """One NACK/retransmission round of one Broadcast."""
+    nack_leaves: int                  # receivers still incomplete
+    root_nack_msgs: int               # NACKs the root DPA actually served
+    union_chunks: int                 # |union of missing| = retransmit size
+    t_nack_root: float                # aggregated NACK arrival at the root
+    t_retx_start: float               # retransmit flow injection start
+    t_end: float                      # last delivery of the round
+    recovered: int                    # chunks recovered this round
+
+
+# ------------------------------------------------------------ broadcast core
+
+
+@dataclass
+class PacketBcastResult:
+    """Field-compatible with simulator.BcastResult (same invariants:
+    bytes_fast + bytes_recovery == bytes_total on completion), plus the
+    per-round recovery trace of the packet protocol."""
+    completion: np.ndarray
+    phases: PhaseBreakdown
+    delivered_fast: int
+    recovered: int
+    rnr_drops: int
+    bytes_fast: int
+    bytes_recovery: int
+    bytes_total: int
+    link_bytes: dict[str, float] = field(default_factory=dict)
+    rounds: list[RoundTrace] = field(default_factory=list)
+    retransmit_wire_bytes: int = 0    # root-injected recovery traffic
+    duplicates: int = 0               # retransmitted chunks a leaf already had
+    completed: bool = True
+    delivery_order: dict[int, np.ndarray] = field(default_factory=dict)
+    # ^ collect_delivery=True only: per-leaf PSNs in staging-ring arrival
+    #   order (fast path then recovery rounds) — the scatter order the
+    #   kernels/chunk_reassembly.py datapath replays
+
+    @property
+    def time(self) -> float:
+        return float(self.completion.max(initial=0.0))
+
+    @property
+    def recovery_time(self) -> float:
+        """Wall time spent in NACK/retransmission rounds (the Fig. 10
+        reliability phase — the quantity the constant-time claim bounds)."""
+        return self.phases.reliability
+
+
+class _BroadcastRun:
+    """One packet-level Broadcast: fast-path delivery plus NACK-aggregation
+    / retransmission rounds on an Engine. Drives simulate_packet_broadcast.
+    NOTE: simulate_packet_allgather implements its round loop separately —
+    its M concurrent chains share every leaf's worker pool, so delivery must
+    merge arrivals ACROSS chains before the pool pass, which this
+    self-contained per-broadcast datapath cannot express. Protocol changes
+    (cutoff rule, NACK service, retransmit pruning) must be mirrored there."""
+
+    def __init__(self, p: int, n_bytes: int, fabric: FabricParams,
+                 workers: WorkerParams, rng: np.random.Generator,
+                 root: int, eng: Engine, *, topology=None, hosts=None,
+                 loss=None, aggregate_nacks: bool = True, tag: str = "mcast",
+                 collect_delivery: bool = False):
+        self.p, self.fabric, self.workers, self.rng = p, fabric, workers, rng
+        self.root, self.eng = root, eng
+        self.topology, self.aggregate = topology, aggregate_nacks
+        self.n_chunks, self.chunk = _chunking(n_bytes, fabric.mtu)
+        self.service = self.chunk / workers.thread_tput
+        self.tag = tag
+        template = resolve_loss(loss, fabric)
+        if topology is not None:
+            self.hosts = list(hosts) if hosts is not None else list(range(p))
+            assert len(self.hosts) == p, (len(self.hosts), p)
+            self.tree = topology.multicast_tree(self.hosts[root], self.hosts)
+            names = {leaf: f"h{self.hosts[leaf]}" for leaf in range(p)
+                     if leaf != root}
+            paths = tree_paths(self.tree, f"h{self.hosts[root]}",
+                               list(names.values()))
+            self.paths = {leaf: paths[n] for leaf, n in names.items()}
+            self.models = _link_models(
+                {names[leaf]: self.paths[leaf] for leaf in names}, template,
+                rng)
+        else:
+            self.hosts = list(range(p))
+            self.tree = None
+            # abstract mode: each leaf behind one pseudo-link of independent
+            # loss (the leaf's ejection path); timing shares the root link
+            self.paths = {leaf: [_AbstractCarrier()] for leaf in range(p)
+                          if leaf != root}
+            self.models = {
+                id(c): (template.fork(rng) if template is not None else None)
+                for path in (self.paths[leaf] for leaf in sorted(self.paths))
+                for c in path
+            }
+        self.leaves = {
+            leaf: _LeafState(
+                self.n_chunks,
+                (len(self.paths[leaf]) if topology is not None else 1)
+                * fabric.latency,
+            )
+            for leaf in sorted(self.paths)
+        }
+        self.completion = np.zeros(p)
+        self.rounds: list[RoundTrace] = []
+        self.rnr_total = 0
+        self.duplicates = 0
+        self.retransmit_wire = 0
+        self.t_fast_end = 0.0
+        self.t_rel_end = 0.0
+        self._cutoff = 0.0
+        # arrival-ordered delivered PSNs per leaf (kernels/chunk_reassembly
+        # replay: the staging-ring scatter order), kept only on request
+        self.delivery = ({leaf: [] for leaf in self.leaves}
+                         if collect_delivery else None)
+
+    def _record_delivery(self, leaf: int, psns_in_arrival_order: np.ndarray,
+                         rnr_psns: np.ndarray) -> None:
+        if self.delivery is None:
+            return
+        got = psns_in_arrival_order
+        if rnr_psns.size:
+            got = got[~np.isin(got, rnr_psns)]
+        self.delivery[leaf].append(got)
+
+    # -- round 0: the multicast fast path
+    def submit_fast(self, t_start: float):
+        nbytes = self.n_chunks * self.chunk
+        if self.tree is not None:
+            self.flow = self.eng.submit_tree(self.tree, nbytes,
+                                             t_start=t_start, tag=self.tag)
+        else:
+            link = self.eng.add_link(f"{self.tag}.root{self.root}.send",
+                                     self.fabric.b_link)
+            self.flow = self.eng.submit(link, nbytes, t_start=t_start,
+                                        tag=self.tag)
+        self.t_start = t_start
+        return self.flow
+
+    def deliver_fast(self) -> None:
+        """Engine has run: sample per-link drops, push survivors through
+        every leaf's worker pool, record bitmaps (call once)."""
+        inject = self.flow.chunk_times(self.n_chunks, self.chunk)
+        self._cutoff = self.flow.t_end + self.fabric.alpha
+        masks = _sample_link_round(self.models, self.n_chunks)
+        fab = self.fabric
+        for leaf, st in self.leaves.items():
+            lost = _leaf_lost(self.paths[leaf], masks, self.n_chunks)
+            psns = np.nonzero(~lost)[0]
+            arr = (inject[psns] + st.hop_lat
+                   + self.rng.uniform(0.0, fab.jitter, size=psns.shape[0]))
+            order = np.argsort(arr, kind="stable")
+            t_last, rnr_psns = _pool_with_rnr_psns(
+                arr[order], psns[order], self.workers, self.service)
+            st.rnr = rnr_psns.shape[0]
+            self.rnr_total += st.rnr
+            st.flags[psns] = True
+            st.flags[rnr_psns] = False      # staging overflow: treat as lost
+            self._record_delivery(leaf, psns[order], rnr_psns)
+            st.t_done = t_last if t_last is not None else self.t_start
+            self.completion[leaf] = st.t_done
+            self.t_fast_end = max(self.t_fast_end, st.t_done)
+        self.completion[self.root] = self.flow.t_end
+        self.t_fast_end = max(self.t_fast_end, self.flow.t_end)
+
+    # -- recovery rounds
+    def incomplete(self) -> list[int]:
+        return [leaf for leaf, st in self.leaves.items() if not st.complete()]
+
+    def plan_retransmit(self):
+        """Build this round's NACK aggregation + retransmit flow. Returns
+        None when every leaf is complete, else an opaque meta tuple (flow
+        first) to pass to deliver_retransmit() after the engine ran it."""
+        nackers = self.incomplete()
+        if not nackers:
+            return None
+        # union of missing = OR of the packed NACK bitmaps (wire format)
+        agg_words = np.zeros_like(self.leaves[nackers[0]].packed())
+        for leaf in nackers:
+            agg_words |= ~self.leaves[leaf].packed()
+        union = np.nonzero(bitmap_unpack_np(agg_words, self.n_chunks))[0]
+        assert union.size > 0
+        fab, wk = self.fabric, self.workers
+        # NACK ascent: a leaf declares loss at the cutoff timer (or when its
+        # pool drained, whichever is later) and sends its bitmap up the tree
+        t_send = {leaf: max(self.leaves[leaf].t_done, self._cutoff)
+                  + self.leaves[leaf].hop_lat for leaf in nackers}
+        if self.aggregate:
+            # switches OR hop-by-hop: the root serves ONE aggregated NACK
+            arrivals = np.array([max(t_send.values())])
+        else:
+            arrivals = np.sort(np.array([t_send[leaf] for leaf in nackers]))
+        t_root_done, _ = _pool_with_rnr_psns(
+            arrivals, np.arange(arrivals.shape[0]), wk,
+            _nack_service(self.n_chunks, wk, fab.mtu))
+        t_retx = max(t_root_done, self.eng.now)
+        if self.tree is not None:
+            members = [self.hosts[self.root]] + [self.hosts[x]
+                                                 for x in nackers]
+            rtree = self.topology.multicast_tree(self.hosts[self.root],
+                                                 members)
+            flow = self.eng.submit_tree(rtree, union.size * self.chunk,
+                                        t_start=t_retx, tag=f"{self.tag}.retx")
+        else:
+            flow = self.eng.submit(f"{self.tag}.root{self.root}.send",
+                                   union.size * self.chunk, t_start=t_retx,
+                                   tag=f"{self.tag}.retx")
+        meta = (flow, union, nackers, arrivals, float(t_root_done))
+        return meta
+
+    def deliver_retransmit(self, meta) -> None:
+        flow, union, nackers, arrivals, t_root_done = meta
+        inject = flow.chunk_times(union.size, self.chunk)
+        # sample ONLY the links the pruned retransmit tree traverses — the
+        # nackers' paths; advancing loss-process state (GE chains) on links
+        # that carry no retransmit packets would time-shift their bursts
+        masks = _sample_link_round(
+            _models_on_paths(self.paths, self.models, nackers), union.size)
+        recovered_round = 0
+        t_round_end = t_root_done
+        for leaf in nackers:
+            st = self.leaves[leaf]
+            miss = st.missing_idx()
+            pos = np.searchsorted(union, miss)      # union ⊇ miss
+            self.duplicates += int(union.size - miss.size)
+            lost = _leaf_lost(self.paths[leaf], masks, union.size)[pos]
+            got_pos, got_psn = pos[~lost], miss[~lost]
+            arr = (inject[got_pos] + st.hop_lat
+                   + self.rng.uniform(0.0, self.fabric.jitter,
+                                      size=got_psn.shape[0]))
+            order = np.argsort(arr, kind="stable")
+            t_last, rnr_psns = _pool_with_rnr_psns(
+                arr[order], got_psn[order], self.workers, self.service)
+            self.rnr_total += rnr_psns.shape[0]
+            st.flags[got_psn] = True
+            st.flags[rnr_psns] = False
+            self._record_delivery(leaf, got_psn[order], rnr_psns)
+            recovered_round += got_psn.shape[0] - rnr_psns.shape[0]
+            if t_last is not None:
+                st.t_done = t_last
+                self.completion[leaf] = t_last
+                t_round_end = max(t_round_end, t_last)
+        self._cutoff = flow.t_end + self.fabric.alpha
+        self.t_rel_end = max(self.t_rel_end, t_round_end)
+        self.rounds.append(RoundTrace(
+            nack_leaves=len(nackers),
+            root_nack_msgs=int(arrivals.shape[0]),
+            union_chunks=int(union.size),
+            t_nack_root=float(arrivals.max()),
+            t_retx_start=float(flow.t_start),
+            t_end=t_round_end,
+            recovered=recovered_round,
+        ))
+        self.retransmit_wire += int(union.size) * self.chunk
+
+    def stats(self) -> dict:
+        n_total = (self.p - 1) * self.n_chunks
+        recovered = sum(tr.recovered for tr in self.rounds)
+        return {
+            "delivered_fast": n_total - recovered
+            - sum(st.missing_idx().size for st in self.leaves.values()),
+            "recovered": recovered,
+        }
+
+
+class _AbstractCarrier:
+    """Loss carrier for the no-topology mode: stands in for the single
+    abstract hop between the root's send link and one leaf."""
+
+    __slots__ = ("loss",)
+
+    def __init__(self):
+        self.loss = None
+
+
+def simulate_packet_broadcast(
+        p: int, n_bytes: int, fabric: FabricParams, workers: WorkerParams,
+        rng: np.random.Generator, root: int = 0, *, topology=None,
+        hosts=None, loss=None, max_rounds: int = DEFAULT_MAX_ROUNDS,
+        aggregate_nacks: bool = True,
+        collect_delivery: bool = False) -> PacketBcastResult:
+    """Packet-fidelity reliable Broadcast (the ``fidelity="packet"`` backend
+    of simulator.simulate_broadcast — see the module docstring for the
+    protocol model). At ``loss=None``/``p_drop=0`` it reproduces the fluid
+    model's times exactly (bit-exactly with jitter=0; with jitter the two
+    draw different samples from the same distribution)."""
+    t_rnr = _rnr_barrier(p, fabric, workers)
+    eng = Engine()
+    if topology is not None:
+        topology.reset()
+    run = _BroadcastRun(p, n_bytes, fabric, workers, rng, root, eng,
+                        topology=topology, hosts=hosts, loss=loss,
+                        aggregate_nacks=aggregate_nacks,
+                        collect_delivery=collect_delivery)
+    run.submit_fast(t_rnr)
+    eng.run()
+    run.deliver_fast()
+
+    n_rounds = 0
+    while run.incomplete() and n_rounds < max_rounds:
+        meta = run.plan_retransmit()
+        eng.run()
+        run.deliver_retransmit(meta)
+        n_rounds += 1
+    completed = not run.incomplete()
+
+    completion = run.completion
+    # final handshake: send final to left, need final from right (§III-C)
+    completion = np.maximum(completion, np.roll(completion, -1)) \
+        + fabric.latency
+    st = run.stats()
+    phases = PhaseBreakdown(
+        rnr_sync=t_rnr,
+        multicast=run.t_fast_end - t_rnr,
+        reliability=max(run.t_rel_end - run.t_fast_end, 0.0),
+        handshake=fabric.latency,
+    )
+    return PacketBcastResult(
+        completion=completion,
+        phases=phases,
+        delivered_fast=st["delivered_fast"],
+        recovered=st["recovered"],
+        rnr_drops=run.rnr_total,
+        bytes_fast=st["delivered_fast"] * run.chunk,
+        bytes_recovery=st["recovered"] * run.chunk,
+        bytes_total=(p - 1) * run.n_chunks * run.chunk,
+        link_bytes=eng.link_bytes() if topology is not None else {},
+        rounds=run.rounds,
+        retransmit_wire_bytes=run.retransmit_wire,
+        duplicates=run.duplicates,
+        completed=completed,
+        delivery_order=(
+            {leaf: (np.concatenate(parts) if parts
+                    else np.empty(0, dtype=np.intp))
+             for leaf, parts in run.delivery.items()}
+            if run.delivery is not None else {}),
+    )
+
+
+# ------------------------------------------------------------ allgather core
+
+
+@dataclass
+class PacketAllgatherResult:
+    """Field-compatible with simulator.AllgatherResult plus the packet
+    protocol's per-chain round traces."""
+    time: float
+    phases: PhaseBreakdown
+    recovered: int
+    bytes_fast: int
+    bytes_recovery: int
+    bytes_total: int
+    per_rank_recv_tput: float
+    link_bytes: dict[str, float] = field(default_factory=dict)
+    rounds: list[RoundTrace] = field(default_factory=list)
+    rnr_drops: int = 0
+    retransmit_wire_bytes: int = 0
+    completed: bool = True
+
+
+class _ChainState:
+    """One chain (one round root) of a packet Allgather round: its tree
+    flow, per-leaf root->leaf paths/models and per-leaf missing bitmaps.
+    Unlike the standalone Broadcast, delivery is NOT self-contained — all
+    chains of a round share every leaf's worker pool, so the driver merges
+    arrivals across chains before the pool pass."""
+
+    __slots__ = ("root", "tree", "paths", "models", "flow", "inject",
+                 "masks", "missing", "retx", "wire", "rmasks")
+
+    def __init__(self, run_args, root: int, template,
+                 rng: np.random.Generator, shared_carriers, model_cache):
+        p, n_chunks, fabric, topology, host_list = run_args
+        self.root = root
+        if topology is not None:
+            self.tree = topology.multicast_tree(host_list[root], host_list)
+            names = {leaf: f"h{host_list[leaf]}" for leaf in range(p)
+                     if leaf != root}
+            by_name = tree_paths(self.tree, f"h{host_list[root]}",
+                                 list(names.values()))
+            self.paths = {leaf: by_name[n] for leaf, n in names.items()}
+            # model_cache: one loss process per physical Link, shared by
+            # every chain crossing it and persistent across rounds
+            self.models = _link_models(
+                {names[leaf]: self.paths[leaf] for leaf in names}, template,
+                rng, cache=model_cache)
+        else:
+            # abstract: loss lives on each leaf's ejection carrier, shared
+            # by every chain (it is the same physical link); a chain sends
+            # nothing to its own root, so its carrier is NOT in the model
+            # set (sampling it would time-shift the shared loss process)
+            self.tree = None
+            self.paths = {leaf: [shared_carriers[leaf]] for leaf in range(p)
+                          if leaf != root}
+            self.models = {id(c): c.loss
+                           for path in self.paths.values() for c in path}
+        self.missing = {}                      # leaf -> bool mask over chunks
+        self.flow = None
+        self.retx = None                       # (flow, union, ...) per round
+        self.rmasks = None
+        self.wire = 0
+
+
+def simulate_packet_allgather(
+        p: int, n_bytes: int, fabric: FabricParams, workers: WorkerParams,
+        rng: np.random.Generator, n_chains: int = 1, *, topology=None,
+        hosts=None, loss=None, max_rounds: int = DEFAULT_MAX_ROUNDS,
+        aggregate_nacks: bool = True) -> PacketAllgatherResult:
+    """Packet-fidelity Allgather: R sequential rounds of M concurrent packet
+    Broadcasts (§IV-A round roots G^r). Within a round the M chains' fast
+    paths AND their retransmission flows share one engine (recovery traffic
+    collides with data on the fabric), and every leaf's worker pool serves
+    the MERGED arrival stream of all chains — the receive-bound contention
+    the fluid model captures with its single representative leaf. The next
+    round's activation waits for every chain of this round to complete."""
+    assert p % n_chains == 0
+    rounds = p // n_chains
+    n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
+    service = chunk / workers.thread_tput
+    t_rnr = _rnr_barrier(p, fabric, workers)
+    template = resolve_loss(loss, fabric)
+    eng = Engine()
+    if topology is not None:
+        host_list = list(hosts) if hosts is not None else list(range(p))
+        assert len(host_list) == p, (len(host_list), p)
+        topology.reset()
+        shared_carriers = None
+        recv_link = None
+    else:
+        host_list = list(range(p))
+        recv_link = eng.add_link("leaf.recv", fabric.b_link)
+        shared_carriers = {leaf: _AbstractCarrier() for leaf in range(p)}
+        for leaf in range(p):
+            if template is not None:
+                shared_carriers[leaf].loss = template.fork(rng)
+    run_args = (p, n_chunks, fabric, topology, host_list)
+    # one loss process per physical fabric Link for the WHOLE allgather:
+    # chains sharing a cable share its (possibly bursty) channel state
+    model_cache: dict[int, LossModel | None] = {}
+
+    def hop_lat(ch: _ChainState, leaf: int) -> float:
+        if topology is None:
+            return fabric.latency
+        return len(ch.paths[leaf]) * fabric.latency
+
+    def pool_merged(entries, t_floor: float):
+        """Merge (chain, psns, arrivals) triples through ONE leaf pool pass;
+        returns (t_done, per-chain surviving psns after RNR)."""
+        if not entries:
+            return t_floor, {}, 0
+        arr = np.concatenate([e[2] for e in entries])
+        key = np.concatenate([np.full(e[2].shape[0], i)
+                              for i, e in enumerate(entries)])
+        psn = np.concatenate([e[1] for e in entries])
+        order = np.argsort(arr, kind="stable")
+        done, _ = worker_pool_completion(
+            arr[order], workers.n_recv_workers, service,
+            workers.staging_chunks)
+        rnr = np.zeros(arr.shape[0], dtype=bool)
+        stg = workers.staging_chunks
+        if arr.shape[0] > stg:
+            rnr[stg + np.nonzero(done[:-stg] > arr[order][stg:])[0]] = True
+        got = {}
+        ko, po, ro = key[order], psn[order], rnr
+        for i, e in enumerate(entries):
+            sel = ko == i
+            got[e[0]] = (po[sel & ~ro], po[sel & ro])   # (delivered, rnr)
+        t_done = float(done[-1]) if done.size else t_floor
+        n_rnr = int(rnr.sum())
+        return t_done, got, n_rnr
+
+    t = t_rnr
+    traces: list[RoundTrace] = []
+    mcast_time = 0.0
+    rel_time = 0.0
+    recovered_total = 0
+    rnr_total = 0
+    retx_wire = 0
+    fast_total = 0
+    undelivered = 0
+    completed = True
+    for r in range(rounds):
+        roots = [i for i in range(p) if i % rounds == r]
+        chains = [_ChainState(run_args, root, template, rng,
+                              shared_carriers, model_cache)
+                  for root in roots]
+        for ch in chains:
+            nbytes = n_chunks * chunk
+            if ch.tree is not None:
+                ch.flow = eng.submit_tree(ch.tree, nbytes, t_start=t,
+                                          tag=f"chain{host_list[ch.root]}")
+            else:
+                ch.flow = eng.submit(recv_link, nbytes, t_start=t,
+                                     tag=f"chain{ch.root}")
+        eng.run()
+        for ch in chains:
+            ch.inject = ch.flow.chunk_times(n_chunks, chunk)
+            ch.masks = _sample_link_round(ch.models, n_chunks)
+        cutoff = max(ch.flow.t_end for ch in chains) + fabric.alpha
+        # fast path: merged per-leaf pool over every chain's survivors
+        t_fast = t
+        leaf_done = np.full(p, t)
+        for leaf in range(p):
+            entries = []
+            for ch in chains:
+                if leaf == ch.root:
+                    continue
+                lost = _leaf_lost(ch.paths[leaf], ch.masks, n_chunks)
+                psns = np.nonzero(~lost)[0]
+                if lost.any():
+                    ch.missing[leaf] = lost.copy()
+                arr = (ch.inject[psns] + hop_lat(ch, leaf)
+                       + rng.uniform(0.0, fabric.jitter, size=psns.shape[0]))
+                entries.append((ch, psns, arr))
+            t_done, got, n_rnr = pool_merged(entries, t)
+            rnr_total += n_rnr
+            for ch in chains:
+                if ch in got:
+                    _, dropped = got[ch]
+                    if dropped.size:
+                        m = ch.missing.setdefault(
+                            leaf, np.zeros(n_chunks, dtype=bool))
+                        m[dropped] = True
+            leaf_done[leaf] = t_done
+            t_fast = max(t_fast, t_done)
+        mcast_time += max(t_fast - t, 0.0)
+        # interleaved recovery: every incomplete chain NACKs + retransmits
+        # concurrently; retx flows contend on the shared engine and the
+        # leaves' pools again serve the merged retransmission stream
+        t_round_end = t_fast
+        for _ in range(max_rounds):
+            live = [ch for ch in chains if ch.missing]
+            if not live:
+                break
+            for ch in live:
+                union = np.zeros(n_chunks, dtype=bool)
+                for lost in ch.missing.values():
+                    union |= lost
+                upos = np.nonzero(union)[0]
+                nackers = sorted(ch.missing)
+                t_send = [max(leaf_done[lf], cutoff) + hop_lat(ch, lf)
+                          for lf in nackers]
+                arrivals = (np.array([max(t_send)]) if aggregate_nacks
+                            else np.sort(np.array(t_send)))
+                t_root_done, _ = _pool_with_rnr_psns(
+                    arrivals, np.arange(arrivals.shape[0]), workers,
+                    _nack_service(n_chunks, workers, fabric.mtu))
+                t_retx = max(t_root_done, eng.now)
+                if ch.tree is not None:
+                    members = [host_list[ch.root]] + [host_list[x]
+                                                      for x in nackers]
+                    rtree = topology.multicast_tree(host_list[ch.root],
+                                                    members)
+                    rflow = eng.submit_tree(
+                        rtree, upos.size * chunk, t_start=t_retx,
+                        tag=f"chain{host_list[ch.root]}.retx")
+                else:
+                    rflow = eng.submit(recv_link, upos.size * chunk,
+                                       t_start=t_retx,
+                                       tag=f"chain{ch.root}.retx")
+                ch.retx = (rflow, upos, nackers, arrivals)
+                ch.wire += int(upos.size) * chunk
+                retx_wire += int(upos.size) * chunk
+            eng.run()
+            cutoff = max(ch.retx[0].t_end for ch in live) + fabric.alpha
+            for ch in live:
+                # pruned-tree links only (see _BroadcastRun.deliver_retransmit)
+                ch.rmasks = _sample_link_round(
+                    _models_on_paths(ch.paths, ch.models, sorted(ch.missing)),
+                    ch.retx[1].size)
+            chain_recovered = {id(ch): 0 for ch in live}
+            for leaf in range(p):
+                entries = []
+                for ch in live:
+                    if leaf not in ch.missing:
+                        continue
+                    rflow, upos, _, _ = ch.retx
+                    inject_r = rflow.chunk_times(upos.size, chunk)
+                    miss = np.nonzero(ch.missing[leaf])[0]
+                    pos = np.searchsorted(upos, miss)
+                    lost = _leaf_lost(ch.paths[leaf], ch.rmasks,
+                                      upos.size)[pos]
+                    got_pos, got_psn = pos[~lost], miss[~lost]
+                    arr = (inject_r[got_pos] + hop_lat(ch, leaf)
+                           + rng.uniform(0.0, fabric.jitter,
+                                         size=got_psn.shape[0]))
+                    entries.append((ch, got_psn, arr))
+                t_done, got, n_rnr = pool_merged(entries,
+                                                 float(leaf_done[leaf]))
+                rnr_total += n_rnr
+                for ch in live:
+                    if leaf not in ch.missing or ch not in got:
+                        continue
+                    delivered, _ = got[ch]
+                    ch.missing[leaf][delivered] = False
+                    recovered_total += delivered.shape[0]
+                    chain_recovered[id(ch)] += delivered.shape[0]
+                    if not ch.missing[leaf].any():
+                        del ch.missing[leaf]
+                if entries:
+                    leaf_done[leaf] = t_done
+                    t_round_end = max(t_round_end, t_done)
+            for ch in live:
+                rflow, upos, nackers, arrivals = ch.retx
+                traces.append(RoundTrace(
+                    nack_leaves=len(nackers),
+                    root_nack_msgs=int(arrivals.shape[0]),
+                    union_chunks=int(upos.size),
+                    t_nack_root=float(arrivals.max()),
+                    t_retx_start=float(rflow.t_start),
+                    t_end=t_round_end,
+                    recovered=chain_recovered[id(ch)],
+                ))
+                ch.retx = None
+                ch.rmasks = None
+        completed &= not any(ch.missing for ch in chains)
+        undelivered += sum(int(m.sum()) for ch in chains
+                           for m in ch.missing.values())
+        rel_time += max(t_round_end - t_fast, 0.0)
+        fast_total += len(chains) * (p - 1) * n_chunks
+        # activation signal to the next round's roots
+        t = max(t_round_end + fabric.latency, eng.now)
+    # fast = everything not recovered and not still missing (max_rounds can
+    # truncate recovery: completed=False, conservation shows the shortfall)
+    fast_total -= recovered_total + undelivered
+
+    t_done = t + fabric.latency  # final handshake
+    phases = PhaseBreakdown(
+        rnr_sync=t_rnr, multicast=mcast_time, reliability=rel_time,
+        handshake=fabric.latency,
+    )
+    return PacketAllgatherResult(
+        time=t_done,
+        phases=phases,
+        recovered=recovered_total,
+        bytes_fast=fast_total * chunk,
+        bytes_recovery=recovered_total * chunk,
+        # ALL receivers counted (the fluid model tracks one representative
+        # leaf): p chains, each delivering n_chunks to p-1 leaves
+        bytes_total=p * (p - 1) * n_chunks * chunk,
+        per_rank_recv_tput=(p - 1) * n_bytes / t_done,
+        link_bytes=eng.link_bytes() if topology is not None else {},
+        rounds=traces,
+        rnr_drops=rnr_total,
+        retransmit_wire_bytes=retx_wire,
+        completed=completed,
+    )
+
+
+# --------------------------------------------- FSDP overlay (closed timing)
+
+
+def recovery_overlay(paths: dict, models: dict[int, LossModel | None],
+                     n_chunks: int, chunk: int, bottleneck_rate: float,
+                     fabric: FabricParams, workers: WorkerParams,
+                     rng: np.random.Generator, *,
+                     max_rounds: int = DEFAULT_MAX_ROUNDS,
+                     aggregate_nacks: bool = True) -> float:
+    """Extra completion time a loss process adds to an already-timed tree
+    flow (the FSDP packet overlay): sampled NACK/retransmission rounds with
+    the retransmit stream served at the tree's bottleneck rate, WITHOUT
+    re-entering the global max-min allocation. Used where a full per-layer
+    packet replay would be quadratic (simulate_fsdp_step fidelity="packet");
+    DESIGN.md §3.1 records the approximation."""
+    missing = {}
+    masks = _sample_link_round(models, n_chunks)
+    for leaf, path in paths.items():
+        lost = _leaf_lost(path, masks, n_chunks)
+        if lost.any():
+            missing[leaf] = lost
+    extra = 0.0
+    depth = max((len(p) for p in paths.values()), default=1)
+    for _ in range(max_rounds):
+        if not missing:
+            break
+        union = np.zeros(n_chunks, dtype=bool)
+        for lost in missing.values():
+            union |= lost
+        n_union = int(union.sum())
+        n_msgs = 1 if aggregate_nacks else len(missing)
+        # ceil(msgs/workers) service batches: a single aggregated NACK costs
+        # one full service on one worker — it cannot be split across the pool
+        batches = -(-n_msgs // max(workers.n_recv_workers, 1))
+        t_nack = fabric.alpha + depth * fabric.latency \
+            + batches * _nack_service(n_chunks, workers, fabric.mtu)
+        t_retx = n_union * chunk / bottleneck_rate + depth * fabric.latency
+        extra += t_nack + t_retx
+        rmasks = _sample_link_round(
+            _models_on_paths(paths, models, sorted(missing)), n_union)
+        upos = np.nonzero(union)[0]
+        nxt = {}
+        for leaf, lost in missing.items():
+            pos = np.searchsorted(upos, np.nonzero(lost)[0])
+            still = _leaf_lost(paths[leaf], rmasks, n_union)[pos]
+            if still.any():
+                again = np.zeros(n_chunks, dtype=bool)
+                again[np.nonzero(lost)[0][still]] = True
+                nxt[leaf] = again
+        missing = nxt
+    return extra

@@ -1,16 +1,26 @@
-"""Reliable constant-time Broadcast protocol state machines (paper §III).
+"""Reliable constant-time Broadcast protocol (paper §III).
 
-These classes model the *logical* protocol exactly — segmentation with PSNs,
-receive-side staging ring, per-chunk bitmap, cutoff timer, fetch-ring
-recovery, RNR barrier, final handshake — independent of timing. The
-discrete-event timing lives in core/simulator.py; hypothesis property tests
-drive these machines directly with adversarial drop/reorder patterns.
+Three layers live here:
+
+  1. The *logical* state machines — segmentation with PSNs, receive-side
+     staging ring, per-chunk bitmap, cutoff timer, fetch-ring recovery, RNR
+     barrier, final handshake — independent of timing; hypothesis property
+     tests drive them with adversarial drop/reorder patterns.
+  2. The ENGINE-BACKED timing facade (``broadcast_time`` /
+     ``allgather_time``): protocol timing is produced by the discrete-event
+     engines — the fluid model in core/simulator.py, or the packet-level
+     reliable-multicast engine in core/packet.py (``fidelity="packet"``)
+     with per-Link loss injection and NACK/retransmission rounds.
+  3. The CLOSED-FORM ``analytic_*`` path, kept as the cross-check oracle the
+     tests hold the engines against (and the reliable-unicast baseline the
+     loss-crossover benchmark compares multicast recovery to).
 
 On TPU this layer applies to the switched inter-pod (DCN) axis; intra-pod ICI
 is reliable (DESIGN.md §2).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 MTU = 4096
@@ -149,6 +159,116 @@ def cutoff_time(n_bytes: int, b_link: float, alpha: float = 50e-6) -> float:
 def final_handshake_ok(completed: list[bool]) -> bool:
     """All leaves completed -> every final packet sent+received in the ring."""
     return all(completed)
+
+
+# ------------------------------------------------- engine-backed timing facade
+
+
+def broadcast_time(p: int, n_bytes: int, fabric=None, workers=None, *,
+                   fidelity: str = "packet", seed: int = 0, **kw) -> float:
+    """Completion time of one reliable Broadcast, produced by the
+    discrete-event engines (packet fidelity by default — this facade IS the
+    protocol's timing model; the closed forms below only cross-check it)."""
+    import numpy as np
+
+    from repro.core import simulator  # deferred: simulator imports protocol
+
+    fabric = fabric or simulator.FabricParams()
+    workers = workers or simulator.WorkerParams()
+    return simulator.simulate_broadcast(
+        p, n_bytes, fabric, workers, np.random.default_rng(seed),
+        fidelity=fidelity, **kw).time
+
+
+def allgather_time(p: int, n_bytes: int, fabric=None, workers=None, *,
+                   n_chains: int = 1, fidelity: str = "packet",
+                   seed: int = 0, **kw) -> float:
+    """Completion time of one reliable M-chain Allgather (engine-backed)."""
+    import numpy as np
+
+    from repro.core import simulator  # deferred: simulator imports protocol
+
+    fabric = fabric or simulator.FabricParams()
+    workers = workers or simulator.WorkerParams()
+    return simulator.simulate_allgather(
+        p, n_bytes, fabric, workers, np.random.default_rng(seed),
+        n_chains, fidelity=fidelity, **kw).time
+
+
+# ----------------------------------------------- closed-form cross-check oracle
+
+
+def analytic_rnr_barrier(p: int, latency: float,
+                         rnr_hop: float = 1.5e-6) -> float:
+    """§V-A recursive-doubling RNR barrier (mirrors the engines exactly)."""
+    return math.ceil(math.log2(max(p, 2))) * (latency + rnr_hop)
+
+
+def analytic_bcast_time(p: int, n_bytes: int, b_link: float, latency: float,
+                        *, pool_rate: float | None = None, depth: int = 1,
+                        rnr_hop: float = 1.5e-6) -> float:
+    """Lossless closed form of the engine Broadcast: RNR barrier + stream at
+    the slower of wire and worker pool + per-hop latency + final handshake.
+    The engines must reproduce this within tolerance at loss 0 — the
+    cross-check oracle of tests/test_packet.py."""
+    rate = b_link if pool_rate is None else min(b_link, pool_rate)
+    return (analytic_rnr_barrier(p, latency, rnr_hop)
+            + n_bytes / rate + depth * latency + latency)
+
+
+def analytic_expected_rounds(path_loss: float, n_chunks: int,
+                             target: float = 0.5) -> float:
+    """Expected NACK/retransmission rounds until a receiver behind a path
+    with per-packet loss ``path_loss`` completes: missing decays
+    geometrically, so rounds ~ log(1/(n_chunks)) / log(q) — the reason
+    recovery cost is flat in P at fixed loss."""
+    assert 0.0 <= path_loss < 1.0
+    if path_loss == 0.0 or n_chunks <= 0:
+        return 0.0
+    # rounds until E[missing] < target chunks
+    return max(math.log(target / n_chunks) / math.log(path_loss), 1.0)
+
+
+def analytic_recovery_time(p: int, n_bytes: int, b_link: float,
+                           latency: float, path_loss: float, *,
+                           n_tree_links: int | None = None,
+                           link_loss: float | None = None,
+                           mtu: int = MTU, depth: int = 6,
+                           alpha: float = 50e-6) -> float:
+    """Closed-form expected recovery time of the NACK-aggregation +
+    multicast-retransmission protocol. Per round: cutoff slack + NACK ascent
+    + retransmit of the UNION of missing chunks (1 - (1-q_link)^L of the
+    buffer for L lossy tree links) + descent. The p-dependence enters only
+    through L (saturating) and the log-depth terms — the analytic form of
+    the paper's constant-time claim."""
+    n_chunks = max(-(-n_bytes // mtu), 1)
+    rounds = analytic_expected_rounds(path_loss, n_chunks)
+    if rounds == 0.0:
+        return 0.0
+    if n_tree_links is not None and link_loss is not None:
+        union_frac = 1.0 - (1.0 - link_loss) ** n_tree_links
+    else:
+        union_frac = min(p * path_loss, 1.0)
+    t = 0.0
+    frac = union_frac
+    for _ in range(int(math.ceil(rounds))):
+        t += alpha + 2 * depth * latency + frac * n_bytes / b_link
+        frac *= path_loss
+    return t
+
+
+def analytic_ring_pipeline_bcast_time(p: int, n_bytes: int, b_link: float,
+                                      latency: float, *, loss_rate: float = 0.0,
+                                      mtu: int = MTU) -> float:
+    """Reliable-UNICAST baseline: pipelined ring broadcast on RC transport.
+    Hardware go-back-N retransmission shows up as a goodput inflation
+    1/(1-q) per hop (the crossover benchmark compares packet-multicast
+    recovery against this)."""
+    assert 0.0 <= loss_rate < 1.0
+    n_chunks = max(-(-n_bytes // mtu), 1)
+    chunk = min(mtu, n_bytes) if n_bytes else mtu
+    wire = (n_chunks + p - 2) * chunk / b_link / (1.0 - loss_rate)
+    return wire + (p - 1) * latency
 
 
 # --------------------------------------------------------- memory footprint

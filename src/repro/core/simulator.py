@@ -23,6 +23,19 @@ yields both the timing AND the per-link switch-port bytes
 (result.link_bytes, Fig. 12) — there is no separate static counting pass.
 Build the topology with b_host=fabric.b_link so the NIC and its fabric port
 agree on line rate.
+
+Both simulators also take ``fidelity=``:
+
+  "fluid"  (default) this module's model: drops are an aggregate Bernoulli
+           thinning of the arrival stream and recovery is the closed-form
+           fetch-ring term — fast, but the reliability protocol itself is
+           not exercised.
+  "packet" the core/packet.py engine: MTU packets, per-Link loss models
+           (``loss=`` — i.i.d. rate, or a packet.LossModel such as
+           GilbertElliottLoss), per-receiver packed bitmaps, NACK
+           aggregation and multicast retransmission rounds on the DPA
+           worker pool. At loss 0 it reproduces the fluid times exactly
+           (tests/test_packet.py pins the equivalence).
 """
 from __future__ import annotations
 
@@ -30,6 +43,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import protocol
 from repro.core.engine import (  # noqa: F401  (re-exported public API)
     Engine,
     FabricParams,
@@ -37,6 +51,8 @@ from repro.core.engine import (  # noqa: F401  (re-exported public API)
     worker_pool_completion,
     workers_from_dpa,
 )
+
+FIDELITIES = ("fluid", "packet")
 
 
 @dataclass
@@ -82,13 +98,25 @@ def _rnr_barrier(p: int, fabric: FabricParams, workers: WorkerParams) -> float:
 
 def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
                        workers: WorkerParams, rng: np.random.Generator,
-                       root: int = 0, *, topology=None, hosts=None) -> BcastResult:
+                       root: int = 0, *, topology=None, hosts=None,
+                       fidelity: str = "fluid", loss=None,
+                       **packet_kw) -> BcastResult:
     """Reliable multicast Broadcast. Without ``topology`` the datapath is the
     abstract root-injection link of the original model; with a
     core/topology.py Topology the root's stream is ONE multicast tree flow
     whose rate is set by the most-contended fabric link (switch replication),
     per-leaf latency scales with routed hop count, and result.link_bytes
-    carries the per-link switch-port traffic of the same engine run."""
+    carries the per-link switch-port traffic of the same engine run.
+    ``fidelity="packet"`` replays the run at MTU granularity with per-Link
+    loss injection and NACK/retransmission recovery (core/packet.py)."""
+    assert fidelity in FIDELITIES, fidelity
+    if fidelity == "packet":
+        from repro.core import packet  # deferred: packet imports this module
+
+        return packet.simulate_packet_broadcast(
+            p, n_bytes, fabric, workers, rng, root, topology=topology,
+            hosts=hosts, loss=loss, **packet_kw)
+    assert loss is None, "loss models require fidelity='packet'"
     n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
     t_rnr = _rnr_barrier(p, fabric, workers)
 
@@ -117,7 +145,7 @@ def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
     t_mcast_end = t_rnr
     t_rel_end = 0.0
 
-    cutoff = t_rnr + n_bytes / fabric.b_link + fabric.alpha
+    cutoff = t_rnr + protocol.cutoff_time(n_bytes, fabric.b_link, fabric.alpha)
 
     for leaf in range(p):
         if leaf == root:
@@ -185,7 +213,8 @@ class AllgatherResult:
 def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
                        workers: WorkerParams, rng: np.random.Generator,
                        n_chains: int = 1, *, topology=None,
-                       hosts=None) -> AllgatherResult:
+                       hosts=None, fidelity: str = "fluid", loss=None,
+                       **packet_kw) -> AllgatherResult:
     """Allgather = R sequential rounds of M concurrent Broadcasts (§IV-A).
     Within a round the M chain roots multicast concurrently; the leaf receive
     path (link + worker pool) is the shared bottleneck — modeled as M flows
@@ -196,7 +225,18 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
     the Appendix-A round roots G^r = {r, R+r, 2R+r, ...} placed on fabric
     hosts: they collide on shared edge/agg/core links and on every leaf's
     ejection link, and result.link_bytes returns the same run's switch-port
-    byte counters (the Fig. 12 measurement, no static pass)."""
+    byte counters (the Fig. 12 measurement, no static pass).
+    ``fidelity="packet"`` replays the rounds at MTU granularity with
+    per-Link loss and per-chain NACK/retransmission recovery
+    (core/packet.py)."""
+    assert fidelity in FIDELITIES, fidelity
+    if fidelity == "packet":
+        from repro.core import packet  # deferred: packet imports this module
+
+        return packet.simulate_packet_allgather(
+            p, n_bytes, fabric, workers, rng, n_chains, topology=topology,
+            hosts=hosts, loss=loss, **packet_kw)
+    assert loss is None, "loss models require fidelity='packet'"
     assert p % n_chains == 0
     rounds = p // n_chains
     n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
@@ -250,7 +290,8 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
         )
         t_fast = done[-1] if done.size else t
         missing = int(dropped.sum()) + rnr
-        cutoff = t + m * n_bytes / fabric.b_link + fabric.alpha
+        cutoff = t + protocol.cutoff_time(m * n_bytes, fabric.b_link,
+                                          fabric.alpha)
         t_round_end = t_fast
         if missing:
             t0 = max(t_fast, cutoff)

@@ -1,8 +1,22 @@
 # Pallas TPU kernels for the data-movement hot spots the paper offloads:
 #   chunk_reassembly — the DPA receive datapath (Appendix C) as a TPU kernel
 #   collective_matmul — allgather-fused MXU matmul (latency hiding)
-#   bitmap — reliability-state pack/popcount
+#   bitmap — reliability-state pack/popcount (bitmap_np: jax-free twins)
 # Validated on CPU via interpret=True against the pure-jnp oracles in ref.py.
-from repro.kernels import ops, ref
+#
+# Submodules load lazily (PEP 562): the jax-free bitmap_np twins are on the
+# packet-protocol simulator hot path, so importing repro.kernels.bitmap_np
+# must not pull in jax through this package init. Star-import exposes only
+# ops/ref (the historical surface); attribute access reaches every submodule.
+import importlib
 
 __all__ = ["ops", "ref"]
+
+_SUBMODULES = ("bitmap", "bitmap_np", "chunk_reassembly", "collective_matmul",
+               "ops", "ref", "ring_allgather")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.kernels.{name}")
+    raise AttributeError(f"module 'repro.kernels' has no attribute {name!r}")

@@ -7,14 +7,26 @@ The bitmap is the only protocol state that grows with the receive buffer
     (32 chunks/word), tiled so each grid step packs a VMEM block.
   - ``bitmap_popcount``: count set bits per word block (completeness check —
     the "all chunks received -> final handshake" predicate).
+
+The ``*_np`` twins (kernels/bitmap_np.py, re-exported here) are bit-identical
+numpy references over the SAME packed u32 word format. They exist so the
+packet-level protocol engine (core/packet.py) can track per-receiver arrival
+state and build NACK payloads in the exact wire format the Pallas kernels
+consume, without a jax dependency on the simulator hot path (core/packet.py
+imports them from bitmap_np directly); tests cross-check the two
+implementations on the simulator's actual bitmaps.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.bitmap_np import (  # noqa: F401  (re-exported twins)
+    bitmap_pack_np,
+    bitmap_popcount_np,
+    bitmap_unpack_np,
+)
 
 
 def _pack_kernel(flags_ref, words_ref):

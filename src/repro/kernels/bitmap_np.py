@@ -1,0 +1,37 @@
+"""Numpy twins of the kernels/bitmap.py Pallas kernels — jax-free on purpose.
+
+The packet-level protocol engine (core/packet.py) tracks per-receiver
+arrival state and builds NACK payloads in the exact packed-u32 wire format
+the Pallas kernels consume; importing this module must NOT pull in jax, so
+the simulator hot path (and the CI smoke benchmarks) stay numpy-only.
+kernels/bitmap.py re-exports these next to the Pallas implementations, and
+tests cross-check the two bit-for-bit on the simulator's actual bitmaps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def bitmap_pack_np(flags: np.ndarray) -> np.ndarray:
+    """flags (n,) 0/1, n % 32 == 0 -> packed (n/32,) uint32 — bit-identical to
+    ``bitmap_pack`` (bit i of word w = flag[32*w + i])."""
+    f = np.asarray(flags, dtype=np.uint32).reshape(-1, 32)
+    shifts = np.arange(32, dtype=np.uint32)
+    return np.bitwise_or.reduce(f << shifts, axis=1).astype(np.uint32)
+
+
+def bitmap_unpack_np(words: np.ndarray, n_chunks: int | None = None) -> np.ndarray:
+    """Packed (w,) uint32 -> (32*w,) bool flags (inverse of bitmap_pack_np),
+    truncated to ``n_chunks`` when given."""
+    w = np.asarray(words, dtype=np.uint32)
+    shifts = np.arange(32, dtype=np.uint32)
+    flags = ((w[:, None] >> shifts) & 1).astype(bool).reshape(-1)
+    return flags if n_chunks is None else flags[:n_chunks]
+
+
+def bitmap_popcount_np(words: np.ndarray) -> int:
+    """Total set bits across packed u32 words (matches ``bitmap_popcount``)."""
+    w = np.asarray(words, dtype=np.uint32)
+    if hasattr(np, "bitwise_count"):          # numpy >= 2.0
+        return int(np.bitwise_count(w).sum())
+    return int(bitmap_unpack_np(w).sum())

@@ -1,8 +1,6 @@
 """Jitted public wrappers for the Pallas kernels (interpret=True on CPU)."""
 from __future__ import annotations
 
-import functools
-
 import jax
 
 from repro.kernels.bitmap import bitmap_pack, bitmap_popcount

@@ -28,9 +28,19 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _compiler_params(**kw):
+    """jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; resolve
+    whichever this version exposes and fail loudly if neither exists."""
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    assert cls is not None, (
+        "pallas TPU exposes neither CompilerParams nor TPUCompilerParams — "
+        "a new rename needs handling here")
+    return cls(**kw)
 
 
 def ring_allgather_tpu(x_shard: jax.Array, *, axis_name: str = "ring",
@@ -65,7 +75,7 @@ def ring_allgather_tpu(x_shard: jax.Array, *, axis_name: str = "ring",
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         out_shape=out_shape,
         scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
-        compiler_params=pltpu.CompilerParams(collective_id=0),
+        compiler_params=_compiler_params(collective_id=0),
     )(x_shard).reshape(n_devices * rows, cols)
 
 

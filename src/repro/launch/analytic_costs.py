@@ -177,7 +177,8 @@ def collective_cost(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
 
     if shape.kind == "train":
         regather = 2.0 if remat == "full" else 1.0
-        ag = pbytes * dpf * (1.0 + regather) * 1.0  # per step (gathers repeat per microbatch but move the same bytes each time)
+        # per step: gathers repeat per microbatch but move the same bytes
+        ag = pbytes * dpf * (1.0 + regather) * 1.0
         ag *= grad_accum
         rs = count_params_analytic(cfg) / tp * 4.0 * dpf
         toks_local = b * s / max(dp, 1)

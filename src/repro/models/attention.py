@@ -14,7 +14,6 @@ flash-decoding), so a 32k-context cache never needs gathering.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -17,7 +17,6 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import encdec, layers, moe, rglru, rwkv, transformer

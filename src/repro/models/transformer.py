@@ -7,7 +7,6 @@ constraints; with no mesh active everything runs single-device (smoke tests).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -4,7 +4,6 @@ ShardCtx (fsdp_mode = "xla" | "mcast" | "mcast_ring" | "mcast_bcast").
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

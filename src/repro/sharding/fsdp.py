@@ -18,7 +18,6 @@ the axis where the paper's multicast protocol literally applies (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -7,15 +7,22 @@ Exposes the subset the repo's tests use:
 
 Strategies are seeded-random samplers (numpy Generator); `given` derives a
 deterministic per-test seed from the test name, so runs are reproducible and
-failures repeatable. This shim does NOT shrink counterexamples or track a
-database — it is a sampler, not a replacement for real hypothesis.
+failures repeatable (the CI reproducibility contract — when the real
+hypothesis IS installed, tests/conftest.py pins it with a derandomized
+profile for the same guarantee). Set REPRO_TEST_SEED=<int> to salt every
+per-test seed and explore a different deterministic sample set locally.
+This shim does NOT shrink counterexamples or track a database — it is a
+sampler, not a replacement for real hypothesis.
 """
 from __future__ import annotations
 
 import functools
+import os
 import zlib
 
 import numpy as np
+
+_SEED_SALT = int(os.environ.get("REPRO_TEST_SEED", "0"))
 
 _DEFAULT_MAX_EXAMPLES = 25
 
@@ -95,7 +102,8 @@ def given(*strategies: _Strategy):
                 fn, "_shim_settings", {}
             )
             max_examples = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
-            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()) + _SEED_SALT)
             for i in range(max_examples):
                 drawn = [s.example(rng) for s in strategies]
                 try:

@@ -4,6 +4,16 @@ import sys
 
 import pytest
 
+try:  # pin real-hypothesis runs: CI must be reproducible (the offline shim
+    # in _hypothesis_shim.py derives per-test seeds and is always pinned)
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("repro-ci", derandomize=True,
+                                   deadline=None)
+    _hyp_settings.load_profile("repro-ci")
+except ImportError:
+    pass
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 

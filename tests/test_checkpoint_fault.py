@@ -1,6 +1,4 @@
 """Checkpoint roundtrip, fault-tolerant supervision, elastic restore."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,6 +9,9 @@ from repro.configs import RunConfig, ShapeConfig, TrainConfig, get_model_config,
 from repro.data import SyntheticPipeline
 from repro.runtime import init_state, make_train_step
 from repro.runtime.fault import FailureInjector, StragglerMonitor, TrainSupervisor
+# jax model/integration tier: excluded from the fast CI
+# lane (scripts/check.sh), run by the `slow` CI job
+pytestmark = pytest.mark.slow
 
 
 def _tiny_run():
@@ -108,6 +109,7 @@ run1 = RunConfig(model=cfg, shape=ShapeConfig('t','train',32,8), mesh=M24())
 mesh1 = jax.make_mesh((2,4), ('data','model'))
 state = init_state(run1, mesh1, jax.random.PRNGKey(0))
 import tempfile, os
+
 d = tempfile.mkdtemp()
 save(state, d, 5)
 

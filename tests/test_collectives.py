@@ -1,10 +1,16 @@
 """The paper's shard_map collectives on 8 fake devices (subprocess)."""
 import pytest
 
+# jax model/integration tier: excluded from the fast CI
+# lane (scripts/check.sh), run by the `slow` CI job
+pytestmark = pytest.mark.slow
+
+
 
 def test_allgather_modes(multidev):
     multidev(
         """
+import pytest
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import collectives as C
@@ -81,6 +87,7 @@ def test_collectives_gradients(multidev):
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import collectives as C
+
 mesh = jax.make_mesh((8,), ('x',))
 n = 32
 full = jnp.arange(8 * n, dtype=jnp.float32)

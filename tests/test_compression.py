@@ -7,6 +7,10 @@ import pytest
 from repro.optim.compression import (compress_leaf, compression_ratio,
                                      make_compressor)
 
+# jax model/integration tier: excluded from the fast CI
+# lane (scripts/check.sh), run by the `slow` CI job
+pytestmark = pytest.mark.slow
+
 
 def test_roundtrip_accuracy():
     rng = np.random.default_rng(0)

@@ -7,7 +7,7 @@ except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
 import pytest
 
 from repro.core import cost_model as cm
-from repro.core.topology import FatTree, Torus2D
+from repro.core.topology import FatTree
 
 
 @given(st.integers(2, 4096))

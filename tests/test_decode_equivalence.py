@@ -10,6 +10,10 @@ from repro.configs import get_model_config, reduced
 from repro.models import build_model
 from repro.models.model_builder import _head_matrix
 
+# jax model/integration tier: excluded from the fast CI
+# lane (scripts/check.sh), run by the `slow` CI job
+pytestmark = pytest.mark.slow
+
 FAMS = ["smollm-135m", "rwkv6-7b", "recurrentgemma-9b", "deepseek-moe-16b"]
 
 

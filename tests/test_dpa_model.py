@@ -58,3 +58,17 @@ def test_fig16_tbit_feasible_with_half_dpa():
 def test_economics():
     eco = dpa.economics_summary()
     assert eco["cpu_cores_needed_4x1600g"] >= 64  # §VII-d: "at least 64 cores"
+
+
+def test_nack_rate_matches_cqe_bound_pool():
+    """NACK processing is CQE-bound like the data path: the pool's NACK
+    message rate equals its chunk rate (same Table-I per-CQE cost), scales
+    with threads, and respects the per-core NIC-interface cap."""
+    one = dpa.nack_rate(dpa.DpaConfig("UD", 1))
+    assert one == pytest.approx(dpa.single_thread_tput("UD") / 4096.0)
+    sixteen = dpa.nack_rate(dpa.DpaConfig("UD", 16))
+    assert one < sixteen <= 16 * one          # sublinear within a core
+    assert sixteen <= dpa.CORE_CAP_CHUNKS_PER_S
+    # consistent with the data-path chunk rate: one CQE is one CQE
+    assert sixteen == pytest.approx(
+        dpa.pool_tput(dpa.DpaConfig("UD", 16)) / 4096.0)

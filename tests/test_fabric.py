@@ -17,7 +17,7 @@ except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
 import pytest
 
 from repro.core import cost_model as cm
-from repro.core.engine import Engine, FabricParams
+from repro.core.engine import Engine
 from repro.core.topology import FatTree, Torus2D, Topology
 
 

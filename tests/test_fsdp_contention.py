@@ -6,7 +6,6 @@ import pytest
 
 from repro.core.engine import (
     FSDP_POLICIES,
-    FabricParams,
     simulate_fsdp_step,
     simulate_multi_job,
     sweep_fsdp_contention,
@@ -208,3 +207,33 @@ def test_worker_pool_vectorized_is_fast():
         lambda: worker_pool_completion_loop(arrivals, 8, 1e-6, 8192))
     assert done.shape == arrivals.shape
     assert dt_vec < dt_loop / 10, (dt_vec, dt_loop)
+
+
+def test_packet_fidelity_loss_inflates_step():
+    """fidelity="packet": per-layer AG readiness pays the sampled
+    NACK/retransmission overlay; at loss 0 the overlay is free and the
+    fluid step time is reproduced exactly."""
+    for policy in FSDP_POLICIES:
+        fluid = simulate_fsdp_step(n_layers=4, layer_bytes=64e6, p=16,
+                                   policy=policy)
+        zero = simulate_fsdp_step(n_layers=4, layer_bytes=64e6, p=16,
+                                  policy=policy, fidelity="packet", loss=0.0)
+        lossy = simulate_fsdp_step(n_layers=4, layer_bytes=64e6, p=16,
+                                   policy=policy, fidelity="packet",
+                                   loss=1e-3,
+                                   rng=np.random.default_rng(0))
+        assert zero.step_time == pytest.approx(fluid.step_time, rel=1e-12)
+        assert lossy.step_time > fluid.step_time, policy
+        assert lossy.bubble_fraction >= fluid.bubble_fraction - 1e-12
+
+
+def test_packet_fidelity_topology_mode():
+    topo = FatTree(k=8, n_hosts=16)
+    fluid = simulate_fsdp_step(n_layers=3, layer_bytes=32e6, p=16,
+                               policy="split", topology=topo)
+    topo = FatTree(k=8, n_hosts=16)
+    lossy = simulate_fsdp_step(n_layers=3, layer_bytes=32e6, p=16,
+                               policy="split", topology=topo,
+                               fidelity="packet", loss=1e-3,
+                               rng=np.random.default_rng(1))
+    assert lossy.step_time > fluid.step_time

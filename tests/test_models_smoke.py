@@ -8,6 +8,10 @@ import pytest
 from repro.configs import ShapeConfig, arch_names, get_model_config, reduced
 from repro.models import build_model, count_params_analytic, make_dummy_batch
 
+# jax model/integration tier: excluded from the fast CI
+# lane (scripts/check.sh), run by the `slow` CI job
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = [
     "rwkv6-7b", "whisper-base", "phi-3-vision-4.2b", "deepseek-moe-16b",
     "moonshot-v1-16b-a3b", "yi-9b", "granite-3-8b", "granite-34b",

@@ -1,4 +1,5 @@
 """MoE dispatch/combine correctness."""
+import pytest
 import dataclasses
 
 import jax
@@ -7,6 +8,10 @@ import numpy as np
 
 from repro.configs import get_model_config, reduced
 from repro.models import moe
+
+# jax model/integration tier: excluded from the fast CI
+# lane (scripts/check.sh), run by the `slow` CI job
+pytestmark = pytest.mark.slow
 
 
 def _cfg(capacity_factor=8.0, top_k=2):

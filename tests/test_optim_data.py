@@ -1,5 +1,4 @@
 """AdamW reference step, LR schedule, data determinism."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

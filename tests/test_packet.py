@@ -1,0 +1,323 @@
+"""Packet-level reliable-multicast engine (core/packet.py): loss models,
+NACK-aggregation/retransmission recovery, the kernels/bitmap.py packed-word
+state, the chunk_reassembly delivery replay, and the analytic-vs-engine
+cross-check oracle (at loss 0 the packet model must reproduce the fluid
+engine's times). All stochastic tests pin their seeds — CI runs are
+bit-reproducible."""
+import numpy as np
+import pytest
+
+from repro.core import protocol
+from repro.core.packet import (
+    BernoulliLoss,
+    GilbertElliottLoss,
+    attach_loss,
+    simulate_packet_broadcast,
+    tree_paths,
+)
+from repro.core.simulator import (
+    FabricParams,
+    WorkerParams,
+    simulate_allgather,
+    simulate_broadcast,
+)
+from repro.core.topology import FatTree
+
+FAB = FabricParams(jitter=0.0)
+WK = WorkerParams(n_recv_workers=8)
+
+
+# --------------------------------------------------------------- loss models
+
+
+def test_bernoulli_rate_and_determinism():
+    rng = np.random.default_rng(0)
+    m = BernoulliLoss(0.05).fork(rng)
+    drops = m.sample(200_000)
+    assert abs(drops.mean() - 0.05) < 0.005
+    m2 = BernoulliLoss(0.05).fork(np.random.default_rng(0))
+    assert np.array_equal(m2.sample(1000),
+                          BernoulliLoss(0.05).fork(
+                              np.random.default_rng(0)).sample(1000))
+
+
+def test_gilbert_elliott_mean_rate_and_burstiness():
+    rate, burst = 0.02, 16.0
+    tmpl = GilbertElliottLoss.from_rate(rate, mean_burst=burst)
+    assert abs(tmpl.mean_rate - rate) < 1e-12
+    m = tmpl.fork(np.random.default_rng(3))
+    drops = m.sample(500_000)
+    assert abs(drops.mean() - rate) < rate * 0.25
+    # burstiness: mean run length of consecutive drops ~ mean_burst
+    d = np.asarray(drops, dtype=np.int8)
+    starts = np.sum((d[1:] == 1) & (d[:-1] == 0)) + int(d[0] == 1)
+    mean_run = d.sum() / max(starts, 1)
+    assert burst / 2 < mean_run < burst * 2, mean_run
+    # i.i.d. at the same rate has runs ~ 1/(1-q) ~ 1
+    b = BernoulliLoss(rate).fork(np.random.default_rng(3)).sample(500_000)
+    bi = np.asarray(b, dtype=np.int8)
+    bstarts = np.sum((bi[1:] == 1) & (bi[:-1] == 0)) + int(bi[0] == 1)
+    assert bi.sum() / max(bstarts, 1) < 2.0
+
+
+def test_gilbert_elliott_state_persists_across_calls():
+    """Bursts straddle sample() boundaries (recovery rounds): the chain is
+    one process, so two calls of n/2 equal one call of n under the same
+    seed."""
+    a = GilbertElliottLoss.from_rate(0.1, 4.0).fork(np.random.default_rng(7))
+    b = GilbertElliottLoss.from_rate(0.1, 4.0).fork(np.random.default_rng(7))
+    one = a.sample(1000)
+    two = np.concatenate([b.sample(500), b.sample(500)])
+    # identical rng stream, identical chain — allow the boundary truncation
+    # to shift at most one sojourn's worth of packets
+    assert np.array_equal(one[:400], two[:400])
+
+
+# ----------------------------------------- zero-loss cross-check vs the fluid
+
+
+@pytest.mark.parametrize("p", [4, 16, 64])
+@pytest.mark.parametrize("n_bytes", [1 << 17, 1 << 20, 4 << 20])
+def test_zero_loss_reproduces_fluid_broadcast(p, n_bytes):
+    """Satellite cross-check: at loss 0 the packet engine and the fluid
+    engine are the SAME timing model (identical injection, pool, handshake),
+    across p and message sizes."""
+    a = simulate_broadcast(p, n_bytes, FAB, WK, np.random.default_rng(0))
+    b = simulate_broadcast(p, n_bytes, FAB, WK, np.random.default_rng(0),
+                           fidelity="packet")
+    assert b.time == pytest.approx(a.time, rel=1e-9)
+    np.testing.assert_allclose(b.completion, a.completion, rtol=1e-9)
+    assert b.recovered == 0 and not b.rounds and b.completed
+
+
+@pytest.mark.parametrize("n_chains", [2, 4, 16])
+def test_zero_loss_reproduces_fluid_allgather(n_chains):
+    p, n = 16, 1 << 18
+    a = simulate_allgather(p, n, FAB, WK, np.random.default_rng(0),
+                           n_chains=n_chains)
+    b = simulate_allgather(p, n, FAB, WK, np.random.default_rng(0),
+                           n_chains=n_chains, fidelity="packet")
+    assert b.time == pytest.approx(a.time, rel=1e-6)
+    assert b.recovered == 0 and b.completed
+
+
+def test_zero_loss_reproduces_fluid_routed():
+    p, n = 16, 1 << 20
+    topo = FatTree(k=8, n_hosts=p, b_host=FAB.b_link)
+    a = simulate_broadcast(p, n, FAB, WK, np.random.default_rng(0),
+                           topology=topo)
+    b = simulate_broadcast(p, n, FAB, WK, np.random.default_rng(0),
+                           topology=topo, fidelity="packet")
+    assert b.time == pytest.approx(a.time, rel=1e-9)
+    # same engine run, same switch-port byte counters
+    assert a.link_bytes == pytest.approx(b.link_bytes)
+
+
+def test_analytic_oracle_brackets_engine():
+    """protocol.analytic_bcast_time is the closed-form cross-check of the
+    engine-backed path (kept per the PR contract): lossless engine times
+    land within 10% of the oracle across scale and size."""
+    for p in (4, 16, 64):
+        for n in (1 << 17, 4 << 20):
+            t_eng = simulate_broadcast(p, n, FAB, WK,
+                                       np.random.default_rng(0),
+                                       fidelity="packet").time
+            t_ana = protocol.analytic_bcast_time(
+                p, n, FAB.b_link, FAB.latency,
+                pool_rate=WK.n_recv_workers * WK.thread_tput)
+            assert t_eng == pytest.approx(t_ana, rel=0.10), (p, n)
+
+
+# ---------------------------------------------------------- lossy recovery
+
+
+def test_loss_recovers_and_conserves():
+    topo = FatTree(k=8, n_hosts=16, b_host=FAB.b_link)
+    clean = simulate_broadcast(16, 1 << 20, FAB, WK,
+                               np.random.default_rng(1), topology=topo,
+                               fidelity="packet")
+    topo = FatTree(k=8, n_hosts=16, b_host=FAB.b_link)
+    lossy = simulate_broadcast(16, 1 << 20, FAB, WK,
+                               np.random.default_rng(1), topology=topo,
+                               fidelity="packet", loss=0.01)
+    assert lossy.completed and lossy.recovered > 0 and lossy.rounds
+    assert lossy.time > clean.time
+    assert lossy.bytes_fast + lossy.bytes_recovery == lossy.bytes_total
+    # recovery traffic rides the same fabric counters as the fast path
+    assert sum(lossy.link_bytes.values()) > sum(clean.link_bytes.values())
+
+
+def test_heavier_loss_slower_recovery():
+    t = {}
+    for q in (0.002, 0.2):
+        t[q] = simulate_broadcast(16, 1 << 20, FAB, WK,
+                                  np.random.default_rng(5),
+                                  fidelity="packet", loss=q)
+        assert t[q].completed
+    assert t[0.2].time > t[0.002].time
+    assert t[0.2].recovered > t[0.002].recovered
+
+
+def test_bursty_loss_recovers():
+    ge = GilbertElliottLoss.from_rate(0.05, mean_burst=32)
+    r = simulate_broadcast(16, 1 << 20, FAB, WK, np.random.default_rng(2),
+                           fidelity="packet", loss=ge)
+    assert r.completed and r.recovered > 0
+    assert r.bytes_fast + r.bytes_recovery == r.bytes_total
+
+
+def test_nack_aggregation_one_root_message():
+    """In-tree OR aggregation: the root DPA serves exactly ONE NACK per
+    round regardless of how many receivers lost packets — the mechanism
+    behind the constant-time recovery claim. The ablation serves one per
+    nacker and can only be slower."""
+    topo = FatTree(k=8, n_hosts=32, b_host=FAB.b_link)
+    agg = simulate_broadcast(32, 1 << 20, FAB, WK, np.random.default_rng(4),
+                            topology=topo, fidelity="packet", loss=0.02)
+    assert agg.rounds and all(tr.root_nack_msgs == 1 for tr in agg.rounds)
+    topo = FatTree(k=8, n_hosts=32, b_host=FAB.b_link)
+    noagg = simulate_broadcast(32, 1 << 20, FAB, WK, np.random.default_rng(4),
+                               topology=topo, fidelity="packet", loss=0.02,
+                               aggregate_nacks=False)
+    assert any(tr.root_nack_msgs > 1 for tr in noagg.rounds)
+    assert all(a.root_nack_msgs <= b.root_nack_msgs for a, b in
+               zip(agg.rounds, noagg.rounds))
+    assert noagg.time >= agg.time - 1e-12
+
+
+def test_upstream_drop_correlates_receivers():
+    """A drop on a shared up-tree link must be missed by every receiver
+    below it: arm ONLY the root's host->edge uplink with total loss of the
+    first sample round and watch every leaf NACK."""
+    p = 16
+    topo = FatTree(k=8, n_hosts=p, b_host=FAB.b_link)
+    rng = np.random.default_rng(0)
+    n_armed = attach_loss(topo, BernoulliLoss(0.5), rng,
+                          predicate=lambda name: name == "h0->e0.0")
+    assert n_armed == 1
+    r = simulate_broadcast(p, 1 << 20, FAB, WK, np.random.default_rng(0),
+                           topology=topo, fidelity="packet")
+    assert r.completed and r.rounds
+    # every non-root leaf sits below the armed link -> all 15 NACK
+    assert r.rounds[0].nack_leaves == p - 1
+
+
+def test_allgather_packet_loss_routed():
+    p, n = 16, 1 << 18
+    topo = FatTree(k=8, n_hosts=p, b_host=FAB.b_link)
+    clean = simulate_allgather(p, n, FAB, WK, np.random.default_rng(0),
+                               n_chains=p, topology=topo, fidelity="packet")
+    topo = FatTree(k=8, n_hosts=p, b_host=FAB.b_link)
+    lossy = simulate_allgather(p, n, FAB, WK, np.random.default_rng(0),
+                               n_chains=p, topology=topo, fidelity="packet",
+                               loss=0.005)
+    assert lossy.completed and lossy.recovered > 0
+    assert lossy.time > clean.time
+    assert lossy.bytes_fast + lossy.bytes_recovery == lossy.bytes_total
+
+
+def test_seeded_runs_bit_identical():
+    kw = dict(fidelity="packet", loss=0.01)
+    a = simulate_broadcast(16, 1 << 20, FAB, WK, np.random.default_rng(9), **kw)
+    b = simulate_broadcast(16, 1 << 20, FAB, WK, np.random.default_rng(9), **kw)
+    assert a.time == b.time and a.recovered == b.recovered
+    np.testing.assert_array_equal(a.completion, b.completion)
+
+
+def test_recovery_time_log_bound_in_p():
+    """The tentpole acceptance property at test scale: recovery time at a
+    fixed 0.1% per-link loss grows no faster than the O(log p) envelope
+    (benchmarks/paper_figs.protocol_loss_sweep measures the full curve)."""
+    rec = {}
+    for p in (16, 128):
+        per = []
+        for s in (0, 1, 2):
+            topo = FatTree(k=16, n_hosts=p, b_host=FAB.b_link)
+            r = simulate_broadcast(p, 1 << 20, FAB, WK,
+                                   np.random.default_rng(s), topology=topo,
+                                   fidelity="packet", loss=1e-3)
+            assert r.completed
+            per.append(r.phases.reliability)
+        rec[p] = np.mean(per)
+    bound = np.log2(128) / np.log2(16)
+    assert rec[128] <= rec[16] * bound * 1.5, rec
+
+
+# ------------------------------------------ packed bitmaps + reassembly replay
+
+
+def test_bitmap_np_twins_match_pallas_kernels():
+    from repro.kernels.bitmap import (bitmap_pack, bitmap_pack_np,
+                                      bitmap_popcount, bitmap_popcount_np,
+                                      bitmap_unpack_np)
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    flags = rng.integers(0, 2, 2048).astype(np.uint32)
+    words_np = bitmap_pack_np(flags)
+    words_pl = np.asarray(bitmap_pack(jnp.asarray(flags), interpret=True))
+    np.testing.assert_array_equal(words_np, words_pl)
+    assert bitmap_popcount_np(words_np) == int(
+        bitmap_popcount(jnp.asarray(words_np), interpret=True))
+    np.testing.assert_array_equal(bitmap_unpack_np(words_np).astype(np.uint32),
+                                  flags)
+
+
+def test_delivery_replay_through_chunk_reassembly():
+    """The packet engine's arrival order drives the SAME datapath the DPA
+    offloads: replay a lossy run's staging order through the
+    kernels/chunk_reassembly.py scatter and recover the full buffer plus a
+    complete bitmap."""
+    from repro.kernels.chunk_reassembly import chunk_reassembly
+    import jax.numpy as jnp
+
+    mtu = 128
+    fab = FabricParams(jitter=0.0, mtu=mtu)
+    n_bytes = 64 * mtu
+    r = simulate_packet_broadcast(
+        8, n_bytes, fab, WK, np.random.default_rng(11), loss=0.05,
+        collect_delivery=True)
+    assert r.completed and r.recovered > 0
+    buf = np.arange(n_bytes, dtype=np.uint8).tobytes()
+    chunks = protocol.segment(buf, mtu)
+    src = np.frombuffer(buf, np.uint8).reshape(len(chunks), mtu)
+    leaf = max(r.delivery_order,
+               key=lambda x: 0 if r.delivery_order[x].size == 64 else 1)
+    order = r.delivery_order[leaf]
+    assert sorted(order.tolist()) == list(range(64))     # exactly-once
+    staging = src[order].astype(np.float32)
+    user = np.zeros_like(src, dtype=np.float32)
+    out, bitmap = chunk_reassembly(
+        jnp.asarray(staging), jnp.asarray(order, jnp.int32),
+        jnp.asarray(user), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), src.astype(np.float32))
+    assert int(np.asarray(bitmap).sum()) == 64
+
+
+def test_tree_paths_cover_all_leaves():
+    p = 32
+    topo = FatTree(k=8, n_hosts=p, b_host=FAB.b_link)
+    tree = topo.multicast_tree(0, list(range(p)))
+    paths = tree_paths(tree, "h0", [f"h{i}" for i in range(1, p)])
+    assert len(paths) == p - 1
+    for name, path in paths.items():
+        assert path[-1].dst == name            # ends at the leaf host
+        assert path[0].src == "h0"             # starts at the root host
+        for a, b in zip(path, path[1:]):       # contiguous chain
+            assert a.dst == b.src
+
+
+def test_packet_hot_path_is_jax_free():
+    """The packet engine's wire-format bitmaps come from the jax-free
+    kernels/bitmap_np.py twins: importing the simulator/protocol/packet
+    stack must never pull in jax (the CI smoke benchmarks depend on it)."""
+    import subprocess
+    import sys
+
+    code = ("import sys\n"
+            "import repro.core.packet, repro.core.simulator\n"
+            "import repro.core.protocol, repro.kernels.bitmap_np\n"
+            "assert 'jax' not in sys.modules, 'jax leaked into the hot path'\n")
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True)
+    assert res.returncode == 0, res.stderr[-2000:]

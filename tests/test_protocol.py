@@ -90,3 +90,37 @@ def test_cutoff_time_scaling():
     t1 = protocol.cutoff_time(1 << 20, 25e9)
     t2 = protocol.cutoff_time(1 << 24, 25e9)
     assert t2 > t1  # N/B + alpha
+
+
+def test_analytic_oracle_shapes():
+    """Closed-form cross-check path: the ring baseline inflates with loss,
+    expected recovery rounds shrink as loss drops, and the engine-backed
+    facade agrees with the oracle at loss 0."""
+    b, lat = 25e9, 2e-6
+    t0 = protocol.analytic_ring_pipeline_bcast_time(16, 1 << 20, b, lat)
+    t1 = protocol.analytic_ring_pipeline_bcast_time(16, 1 << 20, b, lat,
+                                                    loss_rate=0.1)
+    assert t1 > t0 > 0
+    assert protocol.analytic_ring_pipeline_bcast_time(
+        64, 1 << 20, b, lat) > t0          # more hops, more latency
+    r_hi = protocol.analytic_expected_rounds(0.1, 256)
+    r_lo = protocol.analytic_expected_rounds(0.001, 256)
+    assert r_hi > r_lo >= 1.0
+    assert protocol.analytic_expected_rounds(0.0, 256) == 0.0
+    assert protocol.analytic_recovery_time(
+        16, 1 << 20, b, lat, 0.0) == 0.0
+    assert protocol.analytic_recovery_time(
+        64, 1 << 20, b, lat, 0.01) > protocol.analytic_recovery_time(
+        64, 1 << 20, b, lat, 0.0001)
+
+
+def test_engine_backed_facade():
+    """protocol.broadcast_time/allgather_time ARE the engine-backed timing
+    model (packet fidelity by default) and agree with the closed form."""
+    t_pkt = protocol.broadcast_time(16, 1 << 20)
+    t_fluid = protocol.broadcast_time(16, 1 << 20, fidelity="fluid")
+    assert t_pkt > 0 and t_fluid > 0
+    assert protocol.allgather_time(8, 1 << 18, n_chains=8) > 0
+    ana = protocol.analytic_bcast_time(16, 1 << 20, 200e9 / 8, 2e-6,
+                                       pool_rate=5.2 * (1 << 30))
+    assert 0.5 < t_pkt / ana < 2.0

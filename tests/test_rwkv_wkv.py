@@ -4,12 +4,15 @@ try:
     from hypothesis import given, settings
 except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
     from _hypothesis_shim import given, settings, strategies as st
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.models.rwkv import wkv_chunked, wkv_recurrent
+
+# jax model/integration tier: excluded from the fast CI
+# lane (scripts/check.sh), run by the `slow` CI job
+pytestmark = pytest.mark.slow
 
 
 def _case(b, s, h, hd, seed, decay_scale=1.0):

@@ -146,3 +146,31 @@ def test_worker_scaling_helps_when_underprovisioned():
                               thread_tput=2.0 * (1 << 30)),
                               np.random.default_rng(0))
     assert fast.time < slow.time
+
+
+def test_packet_fidelity_routed_loss_recovery():
+    """fidelity="packet" plugs the core/packet.py engine under the same
+    call: routed run, per-link loss, NACK/retransmission recovery, and the
+    recovery traffic lands on the same switch-port counters."""
+    p, n = 16, 1 << 20
+    fab = _fab(jitter=0.0)
+    topo = FatTree(k=8, n_hosts=p, b_host=fab.b_link)
+    clean = simulate_broadcast(p, n, fab, WorkerParams(8),
+                               np.random.default_rng(0), topology=topo,
+                               fidelity="packet")
+    topo = FatTree(k=8, n_hosts=p, b_host=fab.b_link)
+    lossy = simulate_broadcast(p, n, fab, WorkerParams(8),
+                               np.random.default_rng(0), topology=topo,
+                               fidelity="packet", loss=0.01)
+    assert clean.recovered == 0 and lossy.recovered > 0
+    assert lossy.time > clean.time
+    assert sum(lossy.link_bytes.values()) > sum(clean.link_bytes.values())
+
+
+def test_fluid_rejects_loss_models_and_bad_fidelity():
+    with pytest.raises(AssertionError):
+        simulate_broadcast(4, 1 << 16, _fab(), WorkerParams(2),
+                           np.random.default_rng(0), loss=0.1)
+    with pytest.raises(AssertionError):
+        simulate_allgather(4, 1 << 16, _fab(), WorkerParams(2),
+                           np.random.default_rng(0), fidelity="quantum")

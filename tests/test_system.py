@@ -3,14 +3,18 @@
 The production 512-device dry-run runs via ``python -m repro.launch.dryrun``;
 here we validate the same machinery end-to-end at test scale (8 devices).
 """
-import json
-
 import pytest
+
+# jax model/integration tier: excluded from the fast CI
+# lane (scripts/check.sh), run by the `slow` CI job
+pytestmark = pytest.mark.slow
+
 
 
 def test_hlo_collective_stats(multidev):
     multidev(
         """
+import pytest
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch.hlo_stats import collective_stats
@@ -73,6 +77,7 @@ def test_dryrun_cell_machinery(multidev):
 import os
 assert os.environ['XLA_FLAGS'].endswith('512')
 from repro.launch.dryrun import run_cell
+
 rec = run_cell('smollm-135m', 'decode_32k', False)
 assert rec['ok'], rec.get('error')
 assert rec['analytic']['model_flops'] > 0

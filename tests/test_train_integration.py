@@ -1,15 +1,15 @@
 """End-to-end training integration: descent, grad-accum equivalence, and the
 FSDP-mode equivalence on a multi-device mesh."""
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs import (CollectiveConfig, RunConfig, ShapeConfig, TrainConfig,
+from repro.configs import (RunConfig, ShapeConfig, TrainConfig,
                            get_model_config, reduced)
 from repro.data import SyntheticPipeline
 from repro.runtime import init_state, make_train_step
+# jax model/integration tier: excluded from the fast CI
+# lane (scripts/check.sh), run by the `slow` CI job
+pytestmark = pytest.mark.slow
 
 
 def _run(grad_accum=1, steps=30):
@@ -113,6 +113,7 @@ state = init_state(run, mesh, jax.random.PRNGKey(0))
 pipe = SyntheticPipeline(cfg, run.shape)
 state, m = jstep(state, pipe.next_batch(0))
 import math
+
 assert math.isfinite(float(m['loss']))
 print('ok', float(m['loss']))
 """
