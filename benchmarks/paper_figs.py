@@ -375,6 +375,97 @@ def protocol_loss_sweep_smoke():
         loss_grid=(1e-3, 1e-2, 3e-2, 1e-1, 3e-1))
 
 
+def dpa_scaling_sweep(thread_grid=(1, 2, 4, 8, 16)):
+    """Figs 13/14/16 + §VII-d on the EVENT-level DPA progress engine
+    (core/dpa_engine.py): thread-scaling and saturation measured by driving
+    the simulator with line-rate traces — multithreading hides the
+    stalled-on-memory cycles mechanistically instead of applying the
+    analytic T^e envelope — with core/dpa.py retained as the cross-check
+    oracle (full-core capacity and the Fig-16 margin must land within 10%).
+    Also pins the §VII-d offload economics: one DPA core vs one host core
+    (Fig 5), the FSDP freed-host-cycles benefit, and the cycle-stealing
+    cost of running the recovery protocol on the receive contexts."""
+    from repro.core import dpa_engine as de
+    from repro.core.engine import simulate_fsdp_step
+    from repro.core.simulator import simulate_broadcast as sim_bcast
+
+    rows = []
+    # -- Figs 13/14: receive throughput vs threads, saturation thread counts
+    for t in ("UD", "UC"):
+        for n in thread_grid:
+            ev = de.sustained_tput_event(de.EventDpaParams.from_table1(t, n))
+            rows.append((f"dpaev.fig13.{t}.{n}threads_gibs",
+                         round(ev / GIB, 2),
+                         f"analytic {dpa.sustained_tput(dpa.DpaConfig(t, n))/GIB:.2f}"))
+        sat_ev = de.threads_to_saturate_event(t)
+        sat_an = dpa.threads_to_saturate(t)
+        rows.append((f"dpaev.fig14.{t}.sat_vs_analytic_x",
+                     round(sat_ev / sat_an, 3),
+                     f"event saturates 200G at {sat_ev} threads, "
+                     f"analytic at {sat_an}"))
+    assert de.threads_to_saturate_event("UC") <= 4          # paper: ~4
+    assert 8 <= de.threads_to_saturate_event("UD") <= 16    # paper: 8-16
+    # full-core capacity anchors: the event engine must land on the oracle
+    for t in ("UD", "UC"):
+        ev = de.pool_tput_event(de.EventDpaParams.from_table1(t, 16))
+        an = dpa.pool_tput(dpa.DpaConfig(t, 16))
+        rows.append((f"dpaev.{t}.core16_vs_oracle_x", round(ev / an, 3),
+                     f"event {ev/GIB:.2f} vs pool_tput {an/GIB:.2f} GiB/s"))
+        assert abs(ev / an - 1.0) < 0.10, (t, ev, an)
+
+    # -- Fig 16: 64 B chunks, 128 threads vs the 1.6 Tbit/s arrival rate
+    need = dpa.link_chunk_arrival_rate(dpa.LINK_1600G_BYTES)
+    rate = de.sustained_chunk_rate_event(
+        de.EventDpaParams.from_table1("UD", 128), need, chunk_bytes=64)
+    an_rate = dpa.sustained_chunk_rate(
+        dpa.DpaConfig("UD", 128, 64, dpa.LINK_1600G_BYTES))
+    rows.append(("dpaev.fig16.UD128_vs_required_x", round(rate / need, 3),
+                 f"{rate/1e6:.1f} of {need/1e6:.1f} Mchunks/s"))
+    assert de.tbit_feasible_event("UD", 128)
+    assert not de.tbit_feasible_event("UD", 8)
+    assert abs(rate / an_rate - 1.0) < 0.10, (rate, an_rate)  # 10% of oracle
+
+    # -- Fig 5 / §VII-d: one multithreaded DPA core vs one host CPU core
+    dpa_core = de.sustained_tput_event(de.EventDpaParams.from_table1("UD", 16))
+    host_core = de.pool_tput_event(de.EventDpaParams.host_cpu(1))
+    rows.append(("dpaev.fig5.dpa_core_vs_host_core_x",
+                 round(dpa_core / host_core, 3),
+                 f"host core {host_core/GIB:.1f} GiB/s cannot hold 200G"))
+    assert dpa_core / host_core > 1.2 and host_core < dpa.LINK_200G_BYTES
+
+    # -- freed-host-cycles benefit in the FSDP bubble accounting
+    kw = dict(n_layers=4, layer_bytes=64e6, p=16, policy="split")
+    d = simulate_fsdp_step(**kw)
+    h = simulate_fsdp_step(**kw, progress_engine="host", host_cores=2)
+    rows.append(("dpaev.fsdp.host_vs_dpa_step_x",
+                 round(h.step_time / d.step_time, 3),
+                 f"host bubbles {h.bubble_fraction:.3f} vs DPA "
+                 f"{d.bubble_fraction:.3f}"))
+    assert h.step_time > d.step_time
+    assert h.bubble_fraction > d.bubble_fraction
+
+    # -- cycle stealing: the same lossy Broadcast through the scalar pool
+    # and through the event engine (NACK + retransmit posting contend with
+    # the receive datapath) — the event fidelity can only be slower
+    fab = FabricParams(jitter=0.0)
+    wk = WorkerParams(n_recv_workers=16)
+    scl = sim_bcast(16, 1 << 20, fab, wk, np.random.default_rng(0),
+                    fidelity="packet", loss=1e-3)
+    evt = sim_bcast(16, 1 << 20, fab, wk, np.random.default_rng(0),
+                    fidelity="packet", loss=1e-3, dpa_fidelity="event")
+    rows.append(("dpaev.P16.event_vs_scalar_x",
+                 round(evt.time / scl.time, 4),
+                 f"event {evt.time*1e6:.1f}us scalar {scl.time*1e6:.1f}us"))
+    assert evt.completed and evt.time >= scl.time - 1e-12
+    return rows
+
+
+def dpa_scaling_smoke():
+    """CI-sized dpa_scaling_sweep: the full sweep is already seconds-scale
+    (event traces are tens of thousands of CQEs), so smoke == full grid."""
+    return dpa_scaling_sweep()
+
+
 def fsdp_contention_sweep():
     """Abstract's opening claim: interleaved AG/RS contend for injection
     bandwidth; the multicast schedule and the Insight-2 direction split cut
@@ -472,15 +563,16 @@ ALL = [
     fig2_traffic_model, fig5_cpu_datapath, fig10_critical_path,
     fig11_throughput_188, fig12_traffic_savings, table1_datapath,
     fig13_14_thread_scaling, fig15_chunk_sizes, fig16_tbit,
-    appendix_b_speedup, fsdp_contention_sweep, fabric_sweep,
-    protocol_loss_sweep, multi_job_contention, measured_protocol_micro,
-    measured_jax_collectives,
+    appendix_b_speedup, dpa_scaling_sweep, fsdp_contention_sweep,
+    fabric_sweep, protocol_loss_sweep, multi_job_contention,
+    measured_protocol_micro, measured_jax_collectives,
 ]
 
 # seconds-scale subset for benchmarks/run.py --smoke / CI: the FSDP
 # contention grid, the routed fabric sweep (capped at 512 hosts so its
 # traffic-conservation and Insight-1 asserts run on every check in < ~60 s),
 # the packet-protocol loss sweep (constant-time recovery + unicast
-# crossover) and the multi-job contention scenario
+# crossover), the event-level DPA scaling sweep (Figs 13/14/16 + offload
+# economics) and the multi-job contention scenario
 SMOKE = [fsdp_contention_sweep, fabric_sweep_smoke, protocol_loss_sweep_smoke,
-         multi_job_contention]
+         dpa_scaling_smoke, multi_job_contention]

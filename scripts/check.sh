@@ -27,7 +27,7 @@ else
 fi
 
 echo "== tests (fast tier)"
-python -m pytest -x -q -m "not slow" "$@"
+python -m pytest -x -q -m "not slow" --durations=15 --durations-min=1.0 "$@"
 
 if [[ "${RUN_SLOW:-0}" != "0" ]]; then
     echo "== tests (slow tier: jax model/integration)"

@@ -10,8 +10,8 @@ simulator/protocol/packet/engine path is numpy-only — importing the package
 for the discrete-event side must not pay (or require) the jax import."""
 import importlib
 
-__all__ = ["collectives", "cost_model", "engine", "schedule", "topology",
-           "dpa", "packet", "protocol", "simulator"]
+__all__ = ["collectives", "cost_model", "dpa", "dpa_engine", "engine",
+           "packet", "protocol", "schedule", "simulator", "topology"]
 
 
 def __getattr__(name):

@@ -472,6 +472,22 @@ def worker_pool_completion_loop(arrivals: np.ndarray, n_workers: int,
     return done, rnr
 
 
+def staging_rnr_mask(done: np.ndarray, arrivals: np.ndarray,
+                     staging: int) -> np.ndarray:
+    """Staging-ring (RNR) overflow rule, shared by EVERY pool fidelity
+    (scalar T-server queue, merged allgather pools, the event-level DPA):
+    chunk k is dropped when the chunk ``staging`` places ahead of it is
+    still unserviced at k's arrival. One definition — the scalar and event
+    fidelities must never diverge on it (the zero-cost exactness pins rely
+    on that)."""
+    n = arrivals.shape[0]
+    mask = np.zeros(n, dtype=bool)
+    if n > staging:
+        over = np.nonzero(done[: n - staging] > arrivals[staging:])[0]
+        mask[staging + over] = True
+    return mask
+
+
 def worker_pool_completion(arrivals: np.ndarray, n_workers: int,
                            service: float, staging: int) -> tuple[np.ndarray, int]:
     """Vectorized equivalent of worker_pool_completion_loop.
@@ -492,10 +508,7 @@ def worker_pool_completion(arrivals: np.ndarray, n_workers: int,
         i = np.arange(idx.size, dtype=float)
         shifted = arrivals[idx] - i * service
         done[idx] = np.maximum.accumulate(shifted) + (i + 1.0) * service
-    if n > staging:
-        rnr = int(np.count_nonzero(done[: n - staging] > arrivals[staging:]))
-    else:
-        rnr = 0
+    rnr = int(staging_rnr_mask(done, arrivals, staging).sum())
     return done, rnr
 
 
@@ -503,6 +516,7 @@ def worker_pool_completion(arrivals: np.ndarray, n_workers: int,
 
 
 FSDP_POLICIES = ("naive", "mcast", "split")
+PROGRESS_ENGINES = ("dpa", "host")
 
 
 @dataclass
@@ -517,6 +531,8 @@ class FsdpStepResult:
     rs_bytes: float
     n_layers: int
     p: int
+    progress_engine: str = "dpa"      # who runs the reliability datapath
+    datapath_tput: float | None = None  # host engine bytes/s (None: DPA/line)
 
 
 def _layer_bytes_from_model(model: "ModelConfig", dtype_bytes: int) -> tuple[int, float]:
@@ -659,7 +675,10 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
                        topology=None, hosts=None,
                        fidelity: str = "fluid", loss=None,
                        rng: "np.random.Generator | None" = None,
-                       workers: "WorkerParams | None" = None) -> FsdpStepResult:
+                       workers: "WorkerParams | None" = None,
+                       progress_engine: str = "dpa",
+                       host_cores: int = 2,
+                       host_total_cores: int = 108) -> FsdpStepResult:
     """Interleaved forward-AG + backward-RS + compute FSDP timeline.
 
     Per layer the parameters live sharded 1/p per node; the forward pass
@@ -707,9 +726,25 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
     ``loss`` is a rate or a packet.LossModel; ``rng`` seeds the sampling;
     ``workers`` sets the NACK-service pool (e.g. via workers_from_dpa —
     default: one fully-threaded DPA core, 16 workers).
+
+    ``progress_engine`` selects who runs the reliability datapath (§VII-d):
+
+      "dpa"   (default) the SmartNIC DPA: the receive datapath keeps up
+              with the wire (Figs 13/14) and the HOST cores are freed for
+              compute — the freed-host-cycles benefit of the offload.
+      "host"  1-4 Epyc-class cores (``host_cores``) run the protocol in
+              software (Fig 5, core/dpa_engine.py EventDpaParams.host_cpu:
+              no hardware thread contexts, nothing hides the stalls). Two
+              costs enter the bubble accounting: each layer's AG is not
+              ready until its gather bytes ALSO drained through the host
+              engine's measured throughput, and the stolen cores stretch
+              every layer's compute by host_total_cores /
+              (host_total_cores - host_cores) (2x 54-core Xeons per
+              SuperPOD node — §VII-d).
     """
     assert policy in FSDP_POLICIES, policy
     assert fidelity in ("fluid", "packet"), fidelity
+    assert progress_engine in PROGRESS_ENGINES, progress_engine
     # same footgun guard as simulate_broadcast/simulate_allgather: a loss
     # model without packet fidelity would be silently ignored
     assert fidelity == "packet" or loss is None, \
@@ -719,10 +754,23 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
         n_layers, layer_bytes = _layer_bytes_from_model(model, dtype_bytes)
     assert p >= 2 and n_layers >= 1
 
+    if progress_engine == "host":
+        from repro.core import dpa_engine  # deferred: keeps import light
+
+        assert 1 <= host_cores < host_total_cores, (host_cores,
+                                                    host_total_cores)
+        datapath_cap = dpa_engine.pool_tput_event(
+            dpa_engine.EventDpaParams.host_cpu(host_cores))
+        compute_scale = host_total_cores / (host_total_cores - host_cores)
+    else:
+        datapath_cap = None
+        compute_scale = 1.0
+
     b = fabric.b_link
     gather_bytes = (p - 1) / p * layer_bytes     # bytes a node must receive
     shard_bytes = layer_bytes / p
-    fwd_t = 2.0 * (layer_bytes / dtype_bytes) * tokens_per_device / hw_flops
+    fwd_t = (2.0 * (layer_bytes / dtype_bytes) * tokens_per_device / hw_flops
+             * compute_scale)
     bwd_t = 2.0 * fwd_t
 
     eng = Engine()
@@ -773,30 +821,44 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
         gather_bytes, shard_bytes, fabric, workers)
     compute_total = 0.0
 
+    # bubble accounting counts USEFUL compute at full-node capability: the
+    # host-engine stretch (stolen cores) is protocol overhead and must show
+    # up as bubble, exactly like exposed communication — this is where the
+    # freed-host-cycles benefit of the DPA offload becomes measurable
+    fwd_useful = fwd_t / compute_scale
+    bwd_useful = bwd_t / compute_scale
+
+    def ag_ready(t_submit: float, flows) -> float:
+        """A layer's parameters are usable when the wire delivered them AND
+        (host progress engine only) the gather bytes drained through the
+        software receive datapath at its measured throughput."""
+        t_wire = eng.wait(*flows)
+        if datapath_cap is not None:
+            t_wire = max(t_wire, t_submit + gather_bytes / datapath_cap)
+        return t_wire + ag_sync + ag_overlay()
+
     # ---- forward: AG(i+1) prefetched at compute-start of layer i
     ag = [None] * n_layers
-    ag[0] = submit_ag(0.0)
+    ag[0] = (0.0, submit_ag(0.0))
     t = 0.0
     for i in range(n_layers):
-        t_ready = eng.wait(*ag[i]) + ag_sync + ag_overlay()
-        start = max(t, t_ready)
+        start = max(t, ag_ready(*ag[i]))
         if i + 1 < n_layers:
-            ag[i + 1] = submit_ag(start)
+            ag[i + 1] = (start, submit_ag(start))
         t = start + fwd_t
-        compute_total += fwd_t
+        compute_total += fwd_useful
     t_fwd_end = t
 
     # ---- backward: re-gather params in reverse order, RS grads async
     ag_b = [None] * n_layers
-    ag_b[n_layers - 1] = submit_ag(t_fwd_end)
+    ag_b[n_layers - 1] = (t_fwd_end, submit_ag(t_fwd_end))
     rs_flows: list[Flow] = []
     for i in range(n_layers - 1, -1, -1):
-        t_ready = eng.wait(*ag_b[i]) + ag_sync + ag_overlay()
-        start = max(t, t_ready)
+        start = max(t, ag_ready(*ag_b[i]))
         if i - 1 >= 0:
-            ag_b[i - 1] = submit_ag(start)
+            ag_b[i - 1] = (start, submit_ag(start))
         t = start + bwd_t
-        compute_total += bwd_t
+        compute_total += bwd_useful
         rs_flows += submit_rs(t)
     t_bwd_end = t
 
@@ -819,6 +881,8 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
         rs_bytes=gather_bytes * n_layers,       # one RS per layer, backward only
         n_layers=n_layers,
         p=p,
+        progress_engine=progress_engine,
+        datapath_tput=datapath_cap,
     )
 
 

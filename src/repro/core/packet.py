@@ -35,6 +35,22 @@ simulate_packet_allgather composes R rounds of M concurrent packet
 Broadcasts (§IV-A round roots), chains colliding on the fabric exactly as in
 the fluid model, each chain recovering independently per round.
 
+The DPA itself has two fidelities (``dpa_fidelity=``):
+
+  "scalar"  (default) the progress engine is the T-server queue
+            engine.worker_pool_completion at the WorkerParams aggregate rate
+            (dpa.pool_tput via workers_from_dpa) — the DPA consumed as a
+            scalar rate.
+  "event"   core/dpa_engine.py: every packet arrival is a CQE event on a
+            simulated N-core x M-context DPA (compute serialized on the
+            core pipeline, stalls hidden by co-resident contexts, per-core
+            NIC-interface caps, LLC-occupancy degradation) and the NACK /
+            retransmit-post work items run on the SAME contexts — protocol
+            work steals cycles from the receive datapath. ``dpa=`` supplies
+            an EventDpaParams or dpa.DpaConfig (default: Table-I UD pool
+            sized like the scalar worker pool). With zero per-CQE cost the
+            event mode reproduces the scalar mode exactly (pinned).
+
 Closed-form expectations for all of this live in core/protocol.py
 (analytic_* functions) and are used by the tests as a cross-check oracle; at
 loss rate 0 this engine reproduces the fluid model's times exactly.
@@ -48,10 +64,16 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import protocol
+from repro.core.dpa_engine import (
+    DPA_FIDELITIES,
+    DpaEventPool,
+    resolve_event_params,
+)
 from repro.core.engine import (
     Engine,
     FabricParams,
     WorkerParams,
+    staging_rnr_mask,
     worker_pool_completion,
 )
 from repro.core.simulator import PhaseBreakdown, _chunking, _rnr_barrier
@@ -256,12 +278,7 @@ def _pool_with_rnr_psns(arrivals: np.ndarray, psns: np.ndarray,
         arrivals, workers.n_recv_workers, service, workers.staging_chunks)
     if arrivals.shape[0] == 0:
         return None, psns[:0]
-    stg = workers.staging_chunks
-    if arrivals.shape[0] > stg:
-        pos = stg + np.nonzero(done[:-stg] > arrivals[stg:])[0]
-        rnr_psns = psns[pos]
-    else:
-        rnr_psns = psns[:0]
+    rnr_psns = psns[staging_rnr_mask(done, arrivals, workers.staging_chunks)]
     return float(done[-1]), rnr_psns
 
 
@@ -329,13 +346,17 @@ def _link_models(paths: dict[str, list], template: LossModel | None,
 # --------------------------------------------------------------- NACK + DPA
 
 
+def _nack_wire_bytes(n_chunks: int, mtu: int) -> int:
+    """One (aggregated) NACK message on the wire: an MTU header datagram
+    plus the packed missing-bitmap payload (1 bit per tracked chunk)."""
+    return mtu + protocol.bitmap_bytes(n_chunks * mtu, mtu)
+
+
 def _nack_service(n_chunks: int, workers: WorkerParams, mtu: int) -> float:
-    """DPA service time for one (aggregated) NACK message: CQE-bound like a
-    data chunk (one MTU of the fabric in use), plus streaming the packed
-    bitmap payload through the worker (1 bit per tracked chunk —
-    protocol.bitmap_bytes)."""
-    wire = protocol.bitmap_bytes(n_chunks * mtu, mtu)
-    return (mtu + wire) / workers.thread_tput
+    """Scalar-DPA service time for one NACK message: CQE-bound like a data
+    chunk, plus streaming the packed bitmap payload through the worker (the
+    event-DPA twin scales its Table-I cycles by the same wire bytes)."""
+    return _nack_wire_bytes(n_chunks, mtu) / workers.thread_tput
 
 
 @dataclass
@@ -400,13 +421,17 @@ class _BroadcastRun:
                  workers: WorkerParams, rng: np.random.Generator,
                  root: int, eng: Engine, *, topology=None, hosts=None,
                  loss=None, aggregate_nacks: bool = True, tag: str = "mcast",
-                 collect_delivery: bool = False):
+                 collect_delivery: bool = False, dpa_fidelity: str = "scalar",
+                 dpa=None):
         self.p, self.fabric, self.workers, self.rng = p, fabric, workers, rng
         self.root, self.eng = root, eng
         self.topology, self.aggregate = topology, aggregate_nacks
         self.n_chunks, self.chunk = _chunking(n_bytes, fabric.mtu)
         self.service = self.chunk / workers.thread_tput
         self.tag = tag
+        assert dpa_fidelity in DPA_FIDELITIES, dpa_fidelity
+        assert dpa is None or dpa_fidelity == "event", \
+            "dpa= requires dpa_fidelity='event'"
         template = resolve_loss(loss, fabric)
         if topology is not None:
             self.hosts = list(hosts) if hosts is not None else list(range(p))
@@ -440,6 +465,17 @@ class _BroadcastRun:
             )
             for leaf in sorted(self.paths)
         }
+        if dpa_fidelity == "event":
+            # one DPA progress engine per NIC, persistent across rounds:
+            # NACK service and retransmit posting run on the root's contexts
+            # (cycle theft from its receive datapath — visible in the
+            # Allgather, where every root also receives)
+            params = resolve_event_params(dpa, workers.n_recv_workers)
+            self.pools = {leaf: DpaEventPool(params) for leaf in self.leaves}
+            self.root_pool = DpaEventPool(params)
+        else:
+            self.pools = None
+            self.root_pool = None
         self.completion = np.zeros(p)
         self.rounds: list[RoundTrace] = []
         self.rnr_total = 0
@@ -452,6 +488,16 @@ class _BroadcastRun:
         # replay: the staging-ring scatter order), kept only on request
         self.delivery = ({leaf: [] for leaf in self.leaves}
                          if collect_delivery else None)
+
+    def _leaf_pool_pass(self, leaf: int, arrivals: np.ndarray,
+                        psns: np.ndarray):
+        """One receive-datapath pass at ``leaf``: the scalar T-server queue,
+        or the leaf's persistent event-level DPA (dpa_fidelity="event")."""
+        if self.pools is None:
+            return _pool_with_rnr_psns(arrivals, psns, self.workers,
+                                       self.service)
+        return self.pools[leaf].service_with_rnr(
+            arrivals, psns, self.chunk, self.workers.staging_chunks)
 
     def _record_delivery(self, leaf: int, psns_in_arrival_order: np.ndarray,
                          rnr_psns: np.ndarray) -> None:
@@ -489,8 +535,8 @@ class _BroadcastRun:
             arr = (inject[psns] + st.hop_lat
                    + self.rng.uniform(0.0, fab.jitter, size=psns.shape[0]))
             order = np.argsort(arr, kind="stable")
-            t_last, rnr_psns = _pool_with_rnr_psns(
-                arr[order], psns[order], self.workers, self.service)
+            t_last, rnr_psns = self._leaf_pool_pass(
+                leaf, arr[order], psns[order])
             st.rnr = rnr_psns.shape[0]
             self.rnr_total += st.rnr
             st.flags[psns] = True
@@ -529,10 +575,22 @@ class _BroadcastRun:
             arrivals = np.array([max(t_send.values())])
         else:
             arrivals = np.sort(np.array([t_send[leaf] for leaf in nackers]))
-        t_root_done, _ = _pool_with_rnr_psns(
-            arrivals, np.arange(arrivals.shape[0]), wk,
-            _nack_service(self.n_chunks, wk, fab.mtu))
+        if self.root_pool is None:
+            t_root_done, _ = _pool_with_rnr_psns(
+                arrivals, np.arange(arrivals.shape[0]), wk,
+                _nack_service(self.n_chunks, wk, fab.mtu))
+        else:
+            wire = _nack_wire_bytes(self.n_chunks, fab.mtu)
+            t_root_done, _ = self.root_pool.service_with_rnr(
+                arrivals, np.arange(arrivals.shape[0]), wire,
+                wk.staging_chunks, kind="nack", wire_bytes=wire)
         t_retx = max(t_root_done, self.eng.now)
+        if self.root_pool is not None:
+            # retransmit WQE posting runs on the same contexts (stealing
+            # cycles from whatever else they serve); the wire injection
+            # overlaps posting and starts at t_retx
+            self.root_pool.service_batch(
+                np.full(union.size, t_retx), self.chunk, kind="retx")
         if self.tree is not None:
             members = [self.hosts[self.root]] + [self.hosts[x]
                                                  for x in nackers]
@@ -568,8 +626,8 @@ class _BroadcastRun:
                    + self.rng.uniform(0.0, self.fabric.jitter,
                                       size=got_psn.shape[0]))
             order = np.argsort(arr, kind="stable")
-            t_last, rnr_psns = _pool_with_rnr_psns(
-                arr[order], got_psn[order], self.workers, self.service)
+            t_last, rnr_psns = self._leaf_pool_pass(
+                leaf, arr[order], got_psn[order])
             self.rnr_total += rnr_psns.shape[0]
             st.flags[got_psn] = True
             st.flags[rnr_psns] = False
@@ -616,13 +674,16 @@ def simulate_packet_broadcast(
         p: int, n_bytes: int, fabric: FabricParams, workers: WorkerParams,
         rng: np.random.Generator, root: int = 0, *, topology=None,
         hosts=None, loss=None, max_rounds: int = DEFAULT_MAX_ROUNDS,
-        aggregate_nacks: bool = True,
-        collect_delivery: bool = False) -> PacketBcastResult:
+        aggregate_nacks: bool = True, collect_delivery: bool = False,
+        dpa_fidelity: str = "scalar", dpa=None) -> PacketBcastResult:
     """Packet-fidelity reliable Broadcast (the ``fidelity="packet"`` backend
     of simulator.simulate_broadcast — see the module docstring for the
     protocol model). At ``loss=None``/``p_drop=0`` it reproduces the fluid
     model's times exactly (bit-exactly with jitter=0; with jitter the two
-    draw different samples from the same distribution)."""
+    draw different samples from the same distribution).
+    ``dpa_fidelity="event"`` swaps the scalar worker pool for the
+    event-level DPA progress engine of core/dpa_engine.py (``dpa=``
+    supplies its EventDpaParams / DpaConfig)."""
     t_rnr = _rnr_barrier(p, fabric, workers)
     eng = Engine()
     if topology is not None:
@@ -630,7 +691,8 @@ def simulate_packet_broadcast(
     run = _BroadcastRun(p, n_bytes, fabric, workers, rng, root, eng,
                         topology=topology, hosts=hosts, loss=loss,
                         aggregate_nacks=aggregate_nacks,
-                        collect_delivery=collect_delivery)
+                        collect_delivery=collect_delivery,
+                        dpa_fidelity=dpa_fidelity, dpa=dpa)
     run.submit_fast(t_rnr)
     eng.run()
     run.deliver_fast()
@@ -744,20 +806,33 @@ def simulate_packet_allgather(
         p: int, n_bytes: int, fabric: FabricParams, workers: WorkerParams,
         rng: np.random.Generator, n_chains: int = 1, *, topology=None,
         hosts=None, loss=None, max_rounds: int = DEFAULT_MAX_ROUNDS,
-        aggregate_nacks: bool = True) -> PacketAllgatherResult:
+        aggregate_nacks: bool = True, dpa_fidelity: str = "scalar",
+        dpa=None) -> PacketAllgatherResult:
     """Packet-fidelity Allgather: R sequential rounds of M concurrent packet
     Broadcasts (§IV-A round roots G^r). Within a round the M chains' fast
     paths AND their retransmission flows share one engine (recovery traffic
     collides with data on the fabric), and every leaf's worker pool serves
     the MERGED arrival stream of all chains — the receive-bound contention
     the fluid model captures with its single representative leaf. The next
-    round's activation waits for every chain of this round to complete."""
+    round's activation waits for every chain of this round to complete.
+    ``dpa_fidelity="event"`` gives every host a persistent event-level DPA
+    (core/dpa_engine.py); a chain root's NACK service and retransmit
+    posting then run on the SAME contexts that receive the other chains —
+    protocol work steals cycles from the receive datapath."""
     assert p % n_chains == 0
+    assert dpa_fidelity in DPA_FIDELITIES, dpa_fidelity
+    assert dpa is None or dpa_fidelity == "event", \
+        "dpa= requires dpa_fidelity='event'"
     rounds = p // n_chains
     n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
     service = chunk / workers.thread_tput
     t_rnr = _rnr_barrier(p, fabric, workers)
     template = resolve_loss(loss, fabric)
+    if dpa_fidelity == "event":
+        ev_params = resolve_event_params(dpa, workers.n_recv_workers)
+        pools = {leaf: DpaEventPool(ev_params) for leaf in range(p)}
+    else:
+        pools = None
     eng = Engine()
     if topology is not None:
         host_list = list(hosts) if hosts is not None else list(range(p))
@@ -782,9 +857,10 @@ def simulate_packet_allgather(
             return fabric.latency
         return len(ch.paths[leaf]) * fabric.latency
 
-    def pool_merged(entries, t_floor: float):
-        """Merge (chain, psns, arrivals) triples through ONE leaf pool pass;
-        returns (t_done, per-chain surviving psns after RNR)."""
+    def pool_merged(entries, t_floor: float, leaf: int):
+        """Merge (chain, psns, arrivals) triples through ONE leaf pool pass
+        (the leaf's scalar queue, or its persistent event DPA); returns
+        (t_done, per-chain surviving psns after RNR)."""
         if not entries:
             return t_floor, {}, 0
         arr = np.concatenate([e[2] for e in entries])
@@ -792,19 +868,21 @@ def simulate_packet_allgather(
                               for i, e in enumerate(entries)])
         psn = np.concatenate([e[1] for e in entries])
         order = np.argsort(arr, kind="stable")
-        done, _ = worker_pool_completion(
-            arr[order], workers.n_recv_workers, service,
-            workers.staging_chunks)
-        rnr = np.zeros(arr.shape[0], dtype=bool)
-        stg = workers.staging_chunks
-        if arr.shape[0] > stg:
-            rnr[stg + np.nonzero(done[:-stg] > arr[order][stg:])[0]] = True
+        if pools is None:
+            done, _ = worker_pool_completion(
+                arr[order], workers.n_recv_workers, service,
+                workers.staging_chunks)
+        else:
+            done = pools[leaf].service_batch(arr[order], chunk)
+        rnr = staging_rnr_mask(done, arr[order], workers.staging_chunks)
         got = {}
         ko, po, ro = key[order], psn[order], rnr
         for i, e in enumerate(entries):
             sel = ko == i
             got[e[0]] = (po[sel & ~ro], po[sel & ro])   # (delivered, rnr)
-        t_done = float(done[-1]) if done.size else t_floor
+        # max, not done[-1]: a persistent event pool's last-arriving item is
+        # not necessarily the last one to complete (busy-context backlog)
+        t_done = float(done.max()) if done.size else t_floor
         n_rnr = int(rnr.sum())
         return t_done, got, n_rnr
 
@@ -851,7 +929,7 @@ def simulate_packet_allgather(
                 arr = (ch.inject[psns] + hop_lat(ch, leaf)
                        + rng.uniform(0.0, fabric.jitter, size=psns.shape[0]))
                 entries.append((ch, psns, arr))
-            t_done, got, n_rnr = pool_merged(entries, t)
+            t_done, got, n_rnr = pool_merged(entries, t, leaf)
             rnr_total += n_rnr
             for ch in chains:
                 if ch in got:
@@ -881,10 +959,22 @@ def simulate_packet_allgather(
                           for lf in nackers]
                 arrivals = (np.array([max(t_send)]) if aggregate_nacks
                             else np.sort(np.array(t_send)))
-                t_root_done, _ = _pool_with_rnr_psns(
-                    arrivals, np.arange(arrivals.shape[0]), workers,
-                    _nack_service(n_chunks, workers, fabric.mtu))
+                if pools is None:
+                    t_root_done, _ = _pool_with_rnr_psns(
+                        arrivals, np.arange(arrivals.shape[0]), workers,
+                        _nack_service(n_chunks, workers, fabric.mtu))
+                else:
+                    # the chain root's DPA serves the NACKs — the same
+                    # contexts that receive every OTHER chain's stream
+                    wire = _nack_wire_bytes(n_chunks, fabric.mtu)
+                    t_root_done, _ = pools[ch.root].service_with_rnr(
+                        arrivals, np.arange(arrivals.shape[0]), wire,
+                        workers.staging_chunks, kind="nack",
+                        wire_bytes=wire)
                 t_retx = max(t_root_done, eng.now)
+                if pools is not None:
+                    pools[ch.root].service_batch(
+                        np.full(upos.size, t_retx), chunk, kind="retx")
                 if ch.tree is not None:
                     members = [host_list[ch.root]] + [host_list[x]
                                                       for x in nackers]
@@ -925,7 +1015,7 @@ def simulate_packet_allgather(
                                          size=got_psn.shape[0]))
                     entries.append((ch, got_psn, arr))
                 t_done, got, n_rnr = pool_merged(entries,
-                                                 float(leaf_done[leaf]))
+                                                 float(leaf_done[leaf]), leaf)
                 rnr_total += n_rnr
                 for ch in live:
                     if leaf not in ch.missing or ch not in got:

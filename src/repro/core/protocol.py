@@ -165,16 +165,26 @@ def final_handshake_ok(completed: list[bool]) -> bool:
 
 
 def broadcast_time(p: int, n_bytes: int, fabric=None, workers=None, *,
-                   fidelity: str = "packet", seed: int = 0, **kw) -> float:
+                   fidelity: str = "packet", seed: int = 0, dpa=None,
+                   **kw) -> float:
     """Completion time of one reliable Broadcast, produced by the
     discrete-event engines (packet fidelity by default — this facade IS the
-    protocol's timing model; the closed forms below only cross-check it)."""
+    protocol's timing model; the closed forms below only cross-check it).
+
+    ``dpa=`` (a dpa.DpaConfig or dpa_engine.EventDpaParams) routes the
+    receive datapath through the EVENT-level DPA progress engine
+    (core/dpa_engine.py, ``dpa_fidelity="event"``) instead of consuming
+    dpa.pool_tput as a scalar worker-pool rate."""
     import numpy as np
 
     from repro.core import simulator  # deferred: simulator imports protocol
 
     fabric = fabric or simulator.FabricParams()
     workers = workers or simulator.WorkerParams()
+    if dpa is not None:
+        assert fidelity == "packet", "dpa= requires fidelity='packet'"
+        kw.setdefault("dpa_fidelity", "event")
+        kw["dpa"] = dpa
     return simulator.simulate_broadcast(
         p, n_bytes, fabric, workers, np.random.default_rng(seed),
         fidelity=fidelity, **kw).time
@@ -182,14 +192,19 @@ def broadcast_time(p: int, n_bytes: int, fabric=None, workers=None, *,
 
 def allgather_time(p: int, n_bytes: int, fabric=None, workers=None, *,
                    n_chains: int = 1, fidelity: str = "packet",
-                   seed: int = 0, **kw) -> float:
-    """Completion time of one reliable M-chain Allgather (engine-backed)."""
+                   seed: int = 0, dpa=None, **kw) -> float:
+    """Completion time of one reliable M-chain Allgather (engine-backed).
+    ``dpa=`` selects the event-level DPA, as in broadcast_time."""
     import numpy as np
 
     from repro.core import simulator  # deferred: simulator imports protocol
 
     fabric = fabric or simulator.FabricParams()
     workers = workers or simulator.WorkerParams()
+    if dpa is not None:
+        assert fidelity == "packet", "dpa= requires fidelity='packet'"
+        kw.setdefault("dpa_fidelity", "event")
+        kw["dpa"] = dpa
     return simulator.simulate_allgather(
         p, n_bytes, fabric, workers, np.random.default_rng(seed),
         n_chains, fidelity=fidelity, **kw).time

@@ -35,7 +35,12 @@ Both simulators also take ``fidelity=``:
            GilbertElliottLoss), per-receiver packed bitmaps, NACK
            aggregation and multicast retransmission rounds on the DPA
            worker pool. At loss 0 it reproduces the fluid times exactly
-           (tests/test_packet.py pins the equivalence).
+           (tests/test_packet.py pins the equivalence). The packet engine's
+           DPA itself has two fidelities (``dpa_fidelity="scalar"|"event"``,
+           forwarded): the scalar worker-pool rate, or the event-level
+           progress-engine simulator of core/dpa_engine.py (per-CQE
+           compute/stall cycles, per-core caps, LLC occupancy, protocol
+           work stealing receive cycles).
 """
 from __future__ import annotations
 
@@ -117,6 +122,10 @@ def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
             p, n_bytes, fabric, workers, rng, root, topology=topology,
             hosts=hosts, loss=loss, **packet_kw)
     assert loss is None, "loss models require fidelity='packet'"
+    # same footgun: dpa_fidelity=/dpa=/... silently ignored would let a
+    # caller believe the event DPA (or any packet option) was simulated
+    assert not packet_kw, \
+        f"{sorted(packet_kw)} require fidelity='packet'"
     n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
     t_rnr = _rnr_barrier(p, fabric, workers)
 
@@ -237,6 +246,8 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
             p, n_bytes, fabric, workers, rng, n_chains, topology=topology,
             hosts=hosts, loss=loss, **packet_kw)
     assert loss is None, "loss models require fidelity='packet'"
+    assert not packet_kw, \
+        f"{sorted(packet_kw)} require fidelity='packet'"
     assert p % n_chains == 0
     rounds = p // n_chains
     n_chunks, chunk = _chunking(n_bytes, fabric.mtu)

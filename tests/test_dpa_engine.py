@@ -1,0 +1,288 @@
+"""Event-level DPA progress engine (core/dpa_engine.py): property suite.
+
+Drives the simulator with hypothesis-sampled hardware shapes and arrival
+traces (or the offline seeded shim — REPRO_TEST_SEED salts the sample set)
+and pins:
+
+  - conservation: every CQE submitted is serviced exactly once
+  - monotonicity: more thread contexts never slow a saturating batch down
+    (until the per-core NIC-interface cap, where the curves merge)
+  - convergence: measured pool capacity tracks the analytic oracle
+    dpa.pool_tput at 4 KiB chunks — exact at the T=1 anchor, within 10% at
+    full-core multiples, within a documented band mid-range (the linear
+    stall-contention mechanism vs the T^e envelope) and at partial trailing
+    cores (static round-robin dispatch under-serves them vs the oracle's
+    perfect balance — DESIGN.md §7)
+  - the degenerate contract: zero compute / zero contention / no caps makes
+    DpaEventPool bit-identical to engine.worker_pool_completion (which is
+    what the packet engine's zero-cost exactness rests on)
+  - the paper anchors: Fig 13/14 saturation thread counts, Fig 16 Tbit
+    feasibility, Fig 5 host-CPU inferiority, LLC-occupancy degradation and
+    protocol work stealing receive cycles.
+"""
+import math
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
+    from _hypothesis_shim import given, settings, strategies as st
+import numpy as np
+import pytest
+
+from repro.core import dpa
+from repro.core.dpa_engine import (
+    DpaEventPool,
+    EventDpaParams,
+    pool_tput_event,
+    resolve_event_params,
+    sustained_chunk_rate_event,
+    sustained_tput_event,
+    tbit_feasible_event,
+    threads_to_saturate_event,
+)
+from repro.core.engine import worker_pool_completion
+
+GIB = 1 << 30
+
+
+@st.composite
+def arrival_traces(draw):
+    """Sorted CQE arrival trace: bursts + paced stretches (what the packet
+    engine's fast path + recovery rounds actually produce)."""
+    n = draw(st.integers(8, 600))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    kind = draw(st.sampled_from(["burst", "paced", "mixed"]))
+    if kind == "burst":
+        arr = np.zeros(n)
+    elif kind == "paced":
+        arr = np.arange(n) * float(rng.uniform(1e-8, 2e-6))
+    else:
+        arr = np.sort(rng.uniform(0.0, 1e-3, size=n))
+    return arr
+
+
+@st.composite
+def hw_shapes(draw):
+    transport = draw(st.sampled_from(["UD", "UC"]))
+    n_threads = draw(st.integers(1, 48))
+    return transport, n_threads
+
+
+# ------------------------------------------------------------- conservation
+
+
+@settings(max_examples=30, deadline=None)
+@given(hw_shapes(), arrival_traces(), st.integers(6, 14),
+       st.sampled_from([4, 8, 16]))
+def test_conservation_every_cqe_serviced_once(shape, arrivals, chunk_log2,
+                                              threads_per_core):
+    """One done time per submitted CQE, no earlier than its arrival plus the
+    single-CQE floor; n_served counts every submission across batches —
+    across core counts (threads_per_core varies the core split)."""
+    import dataclasses
+
+    transport, n_threads = shape
+    params = dataclasses.replace(
+        EventDpaParams.from_table1(transport, n_threads),
+        threads_per_core=threads_per_core)
+    pool = DpaEventPool(params)
+    chunk = 1 << chunk_log2
+    floor = (params.cycles_compute + params.cycles_stall) / params.freq_hz
+    split = arrivals.shape[0] // 2
+    total = 0
+    for batch in (arrivals[:split], arrivals[split:]):
+        done = pool.service_batch(batch, chunk)
+        assert done.shape == batch.shape
+        assert np.isfinite(done).all()
+        assert (done >= batch + floor - 1e-18).all()
+        total += batch.shape[0]
+    assert pool.n_served == total
+
+
+# ------------------------------------------------------------- monotonicity
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(["UD", "UC"]), st.integers(1, 24))
+def test_more_threads_never_slower_until_core_cap(transport, t_small):
+    """Doubling the contexts never lengthens a saturating batch's makespan:
+    added contexts inflate each other's stalls (shared LLC ports) but the
+    aggregate service rate still rises until the per-core NIC-interface cap
+    levels both configurations off."""
+    t_big = 2 * t_small
+    n = 64 * t_big                       # divisible by both thread counts
+    mk = {}
+    for t in (t_small, t_big):
+        pool = DpaEventPool(EventDpaParams.from_table1(transport, t))
+        mk[t] = float(pool.service_batch(np.zeros(n), 4096).max())
+    assert mk[t_big] <= mk[t_small] * (1.0 + 1e-9), mk
+
+
+# ------------------------------------------- convergence to the analytic oracle
+
+
+@settings(max_examples=30, deadline=None)
+@given(hw_shapes())
+def test_capacity_converges_to_pool_tput(shape):
+    """Event-measured pool capacity vs dpa.pool_tput at 4 KiB chunks.
+    Bands (DESIGN.md §7): mid-range the linear stall-contention mechanism
+    sits up to ~30% above the T^0.55 envelope, and a partial trailing core
+    is under-served by static round-robin dispatch down to ~0.78x."""
+    transport, n_threads = shape
+    ev = pool_tput_event(EventDpaParams.from_table1(transport, n_threads))
+    an = dpa.pool_tput(dpa.DpaConfig(transport, n_threads))
+    assert 0.78 <= ev / an <= 1.32, (transport, n_threads, ev / an)
+
+
+@pytest.mark.parametrize("transport", ["UD", "UC"])
+def test_capacity_anchors_exact(transport):
+    """T=1 sits exactly on Table I; full-core multiples land within 10% of
+    the oracle (both are cap-limited there)."""
+    one = pool_tput_event(EventDpaParams.from_table1(transport, 1))
+    assert one == pytest.approx(dpa.single_thread_tput(transport), rel=0.02)
+    for t in (16, 32, 64):
+        ev = pool_tput_event(EventDpaParams.from_table1(transport, t))
+        an = dpa.pool_tput(dpa.DpaConfig(transport, t))
+        assert ev == pytest.approx(an, rel=0.10), (transport, t)
+
+
+# --------------------------------------------------- the degenerate contract
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrival_traces(), st.integers(1, 16),
+       st.floats(1e-8, 1e-5), st.integers(1, 256))
+def test_degenerate_pool_is_worker_pool_completion(arrivals, w, service,
+                                                   staging):
+    """Zero compute, zero contention, no cap, no LLC: the event pool IS the
+    scalar T-server queue — identical done times AND identical staging-ring
+    RNR decisions."""
+    params = EventDpaParams(
+        n_threads=w, cycles_compute=0.0,
+        cycles_stall=service * dpa.DPA_FREQ_HZ, mem_contention=0.0,
+        core_cap_msgs=None, llc_bytes=math.inf)
+    done_ref, rnr_ref = worker_pool_completion(arrivals, w, service, staging)
+    done_ev = DpaEventPool(params).service_batch(arrivals, 4096)
+    np.testing.assert_allclose(done_ev, done_ref, rtol=1e-12, atol=1e-18)
+    psns = np.arange(arrivals.shape[0])
+    _, rnr_psns = DpaEventPool(params).service_with_rnr(
+        arrivals, psns, 4096, staging)
+    assert rnr_psns.shape[0] == rnr_ref
+
+
+def test_zero_cost_pool_is_transparent():
+    arr = np.sort(np.random.default_rng(0).uniform(0, 1e-3, 200))
+    done = DpaEventPool(EventDpaParams.zero_cost(4)).service_batch(arr, 4096)
+    np.testing.assert_array_equal(done, arr)
+
+
+# ------------------------------------------------------- mechanism anchors
+
+
+def test_fig13_14_saturation_thread_counts_event():
+    """Acceptance: the event engine saturates 200G at ~4 UC threads and
+    within 8-16 UD threads — measured, not asserted via the analytic
+    envelope."""
+    assert threads_to_saturate_event("UC") <= 4
+    assert 8 <= threads_to_saturate_event("UD") <= 16
+
+
+def test_fig16_tbit_feasibility_event():
+    """Acceptance: 128 threads sustain the 1.6 Tbit/s chunk arrival rate at
+    64 B chunks, within 10% of the analytic oracle; 8 threads cannot."""
+    assert tbit_feasible_event("UD", 128)
+    assert not tbit_feasible_event("UD", 8)
+    need = dpa.link_chunk_arrival_rate(dpa.LINK_1600G_BYTES)
+    rate = sustained_chunk_rate_event(
+        EventDpaParams.from_table1("UD", 128), need, chunk_bytes=64)
+    an = dpa.sustained_chunk_rate(
+        dpa.DpaConfig("UD", 128, 64, dpa.LINK_1600G_BYTES))
+    assert rate == pytest.approx(an, rel=0.10)
+
+
+def test_per_core_interface_cap_binds():
+    """No thread count pushes a core past its NIC-interface message rate."""
+    cap_bytes = dpa.CORE_CAP_CHUNKS_PER_S * 4096
+    for t in (16, 32, 48):
+        ev = pool_tput_event(EventDpaParams.from_table1("UC", t))
+        n_cores = -(-t // 16)
+        assert ev <= n_cores * cap_bytes * (1.0 + 1e-9), (t, ev)
+
+
+def test_llc_occupancy_degrades_service():
+    """A burst whose outstanding chunk state spills the 1.5 MB LLC is served
+    slower than under an infinite LLC; a trickle that never spills is not."""
+    params = EventDpaParams.from_table1("UD", 4)
+    burst = np.zeros(1024)               # 4 MiB outstanding at t=0
+    spilled = DpaEventPool(params)
+    t_spill = float(spilled.service_batch(burst, 4096).max())
+    import dataclasses
+    no_llc = dataclasses.replace(params, llc_bytes=math.inf)
+    t_free = float(DpaEventPool(no_llc).service_batch(burst, 4096).max())
+    assert spilled.llc_spill_events > 0
+    assert t_spill > t_free * 1.2, (t_spill, t_free)
+    trickle = np.arange(64) * 1e-3       # backlog never builds
+    calm = DpaEventPool(params)
+    calm.service_batch(trickle, 4096)
+    assert calm.llc_spill_events == 0
+
+
+def test_protocol_work_steals_receive_cycles():
+    """NACK service and retransmit posting occupy the same contexts: a pool
+    that served protocol work first finishes the SAME data batch later."""
+    params = EventDpaParams.from_table1("UD", 4)
+    data = np.arange(256) * 1e-7
+    clean = DpaEventPool(params)
+    t_clean = float(clean.service_batch(data, 4096).max())
+    busy = DpaEventPool(params)
+    busy.service_batch(np.zeros(16), 4096 + 32, kind="nack", wire_bytes=4128)
+    busy.service_batch(np.zeros(64), 4096, kind="retx")
+    t_busy = float(busy.service_batch(data, 4096).max())
+    assert t_busy > t_clean
+
+
+def test_host_cpu_baseline_calibration():
+    """Fig 5: one Epyc core lands on its measured 9.0 GiB/s (UD +
+    reliability), scales linearly in cores (no shared-core contention), and
+    a single core cannot hold a 200 Gbit/s link — while one multithreaded
+    DPA core can."""
+    host1 = pool_tput_event(EventDpaParams.host_cpu(1))
+    assert host1 == pytest.approx(
+        dpa.CPU_CORE_TPUT_GIB["UD_reliability"] * GIB, rel=0.02)
+    host4 = pool_tput_event(EventDpaParams.host_cpu(4))
+    assert host4 == pytest.approx(4 * host1, rel=0.05)
+    assert host1 < dpa.LINK_200G_BYTES
+    dpa_core = sustained_tput_event(EventDpaParams.from_table1("UD", 16))
+    assert dpa_core >= 0.99 * dpa.LINK_200G_BYTES
+    assert dpa_core / host1 > 1.2
+
+
+def test_host_cpu_has_no_latency_hiding():
+    """The host baseline's per-CQE wall time is the FULL compute+stall
+    budget: adding a second core doubles throughput but a single core's
+    service never overlaps (contrast: 16 DPA threads on one core serve far
+    more than one thread)."""
+    host = EventDpaParams.host_cpu(1)
+    service = (host.cycles_compute + host.cycles_stall) / host.freq_hz
+    done = DpaEventPool(host).service_batch(np.zeros(10), 4096)
+    np.testing.assert_allclose(done, (np.arange(10) + 1) * service, rtol=1e-12)
+    one = pool_tput_event(EventDpaParams.from_table1("UD", 1))
+    sixteen = pool_tput_event(EventDpaParams.from_table1("UD", 16))
+    assert sixteen > 3 * one             # latency hiding, sublinear but real
+
+
+# ------------------------------------------------------------- param plumbing
+
+
+def test_resolve_event_params():
+    assert resolve_event_params(None, 8).n_threads == 8
+    cfg = dpa.DpaConfig("UC", 4)
+    p = resolve_event_params(cfg, 8)
+    assert p.transport == "UC" and p.n_threads == 4
+    assert resolve_event_params(p, 8) is p
+    with pytest.raises(TypeError):
+        resolve_event_params("UD", 8)
+    with pytest.raises(ValueError):
+        EventDpaParams.from_table1("UD", 2).service_cycles("bogus")

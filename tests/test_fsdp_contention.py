@@ -227,6 +227,41 @@ def test_packet_fidelity_loss_inflates_step():
         assert lossy.bubble_fraction >= fluid.bubble_fraction - 1e-12
 
 
+def test_progress_engine_host_vs_dpa():
+    """§VII-d offload economics in the bubble accounting: running the
+    reliability datapath on host cores (no hardware multithreading — Fig 5)
+    both caps each layer's AG readiness at the software engine's measured
+    throughput AND steals compute cores, so the DPA offload strictly wins;
+    fewer host cores lose harder. The default is the DPA path, unchanged."""
+    kw = dict(n_layers=4, layer_bytes=64e6, p=16, policy="split")
+    d = simulate_fsdp_step(**kw)
+    d_explicit = simulate_fsdp_step(**kw, progress_engine="dpa")
+    assert d_explicit.step_time == d.step_time
+    assert d.progress_engine == "dpa" and d.datapath_tput is None
+    h2 = simulate_fsdp_step(**kw, progress_engine="host", host_cores=2)
+    h1 = simulate_fsdp_step(**kw, progress_engine="host", host_cores=1)
+    assert h2.progress_engine == "host" and h2.datapath_tput is not None
+    assert h2.datapath_tput < 200e9 / 8         # two cores can't hold 200G
+    assert h2.step_time > d.step_time
+    assert h2.bubble_fraction > d.bubble_fraction
+    assert h1.step_time > h2.step_time          # fewer cores, slower datapath
+    # freed-host-cycles: compute accounting is at full-node capability, so
+    # the host engine's stolen cores surface as bubble, not as compute
+    assert h2.compute_time == pytest.approx(d.compute_time)
+
+
+def test_progress_engine_host_topology_mode():
+    topo = FatTree(k=8, n_hosts=16)
+    d = simulate_fsdp_step(n_layers=3, layer_bytes=64e6, p=16,
+                           policy="mcast", topology=topo)
+    topo = FatTree(k=8, n_hosts=16)
+    h = simulate_fsdp_step(n_layers=3, layer_bytes=64e6, p=16,
+                           policy="mcast", topology=topo,
+                           progress_engine="host", host_cores=2)
+    assert h.step_time > d.step_time
+    assert h.bubble_fraction > d.bubble_fraction
+
+
 def test_packet_fidelity_topology_mode():
     topo = FatTree(k=8, n_hosts=16)
     fluid = simulate_fsdp_step(n_layers=3, layer_bytes=32e6, p=16,

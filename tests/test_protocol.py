@@ -124,3 +124,19 @@ def test_engine_backed_facade():
     ana = protocol.analytic_bcast_time(16, 1 << 20, 200e9 / 8, 2e-6,
                                        pool_rate=5.2 * (1 << 30))
     assert 0.5 < t_pkt / ana < 2.0
+
+
+def test_facade_routes_dpa_config_to_event_engine():
+    """``dpa=`` on the facade replaces the scalar pool_tput consumption
+    with the event-level DPA engine (core/dpa_engine.py): a DpaConfig is
+    accepted directly, a fatter pool is never slower, and the analytic
+    closed form still brackets the event-backed time."""
+    from repro.core.dpa import DpaConfig
+
+    t_16 = protocol.broadcast_time(16, 1 << 20, dpa=DpaConfig("UD", 16))
+    t_2 = protocol.broadcast_time(16, 1 << 20, dpa=DpaConfig("UD", 2))
+    assert 0 < t_16 <= t_2
+    ana = protocol.analytic_bcast_time(16, 1 << 20, 200e9 / 8, 2e-6)
+    assert ana <= t_16 < 3.0 * ana
+    assert protocol.allgather_time(8, 1 << 18, n_chains=8,
+                                   dpa=DpaConfig("UC", 16)) > 0
