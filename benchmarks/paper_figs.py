@@ -466,6 +466,56 @@ def dpa_scaling_smoke():
     return dpa_scaling_sweep()
 
 
+def schedule_ir_sweep():
+    """Collective Schedule IR smoke: Allreduce lowered from ONE schedule
+    graph, comparing the RS∘multicast-AG composition (the paper's AG as the
+    second phase) against the classical ring allreduce — wall time on the
+    abstract full-duplex NIC and switch-port bytes on a routed fat-tree
+    (Insight 1 transplanted to allreduce) — plus the per-fabric chain
+    autotune. All rows are deterministic model ratios (jitter 0, loss 0)."""
+    from repro.core import sched_ir
+
+    fab = FabricParams(jitter=0.0)
+    wk = WorkerParams(n_recv_workers=8)
+    n = 1 << 22                                   # 4 MiB per-rank buffer
+    rows = []
+    for p in (16, 64):
+        mc = sched_ir.execute(sched_ir.build_allreduce(p, n, m=p), fab, wk,
+                              np.random.default_rng(0))
+        ring = sched_ir.execute(sched_ir.build_allreduce(p, n), fab, wk,
+                                np.random.default_rng(0))
+        rows.append((f"schedir.P{p}.allreduce_ring_vs_mcast_time_x",
+                     round(ring.time / mc.time, 4),
+                     f"ring={ring.time*1e6:.1f}us mcast={mc.time*1e6:.1f}us"))
+        topo = FatTree(k=8, n_hosts=p, b_host=fab.b_link)
+        mc_r = sched_ir.execute(sched_ir.build_allreduce(p, n, m=p), fab, wk,
+                                np.random.default_rng(0), topology=topo)
+        mc_bytes = sum(mc_r.link_bytes.values())
+        topo = FatTree(k=8, n_hosts=p, b_host=fab.b_link)
+        ring_r = sched_ir.execute(sched_ir.build_allreduce(p, n), fab, wk,
+                                  np.random.default_rng(0), topology=topo)
+        ring_bytes = sum(ring_r.link_bytes.values())
+        # Insight 1 on the composed collective: switch replication must cut
+        # the fabric bytes of the AG phase
+        assert mc_bytes < ring_bytes, (p, mc_bytes, ring_bytes)
+        rows.append((f"schedir.P{p}.allreduce_mcast_vs_ring_fabric_bytes_x",
+                     round(mc_bytes / ring_bytes, 4),
+                     f"mcast={mc_bytes/GIB:.3f}GiB ring={ring_bytes/GIB:.3f}GiB"))
+    best, times = sched_ir.autotune_chains(
+        sched_ir.build_allgather, p=64, n_bytes=1 << 18, fabric=fab,
+        workers=wk)
+    assert best == 64, times                     # flat fabric: full parallelism
+    rows.append(("schedir.autotune_flat_best_m", best,
+                 f"candidates={sorted(times)}"))
+    thin = FatTree(k=8, n_hosts=16, b_host=fab.b_link, oversubscription=4.0)
+    best_thin, _ = sched_ir.autotune_chains(
+        sched_ir.build_allgather, thin, p=16, n_bytes=1 << 18, fabric=fab,
+        workers=wk)
+    rows.append(("schedir.autotune_oversub4_best_m", best_thin,
+                 "16 hosts, 4x oversubscribed fat-tree"))
+    return rows
+
+
 def fsdp_contention_sweep():
     """Abstract's opening claim: interleaved AG/RS contend for injection
     bandwidth; the multicast schedule and the Insight-2 direction split cut
@@ -565,7 +615,7 @@ ALL = [
     fig13_14_thread_scaling, fig15_chunk_sizes, fig16_tbit,
     appendix_b_speedup, dpa_scaling_sweep, fsdp_contention_sweep,
     fabric_sweep, protocol_loss_sweep, multi_job_contention,
-    measured_protocol_micro, measured_jax_collectives,
+    schedule_ir_sweep, measured_protocol_micro, measured_jax_collectives,
 ]
 
 # seconds-scale subset for benchmarks/run.py --smoke / CI: the FSDP
@@ -573,6 +623,7 @@ ALL = [
 # traffic-conservation and Insight-1 asserts run on every check in < ~60 s),
 # the packet-protocol loss sweep (constant-time recovery + unicast
 # crossover), the event-level DPA scaling sweep (Figs 13/14/16 + offload
-# economics) and the multi-job contention scenario
+# economics), the multi-job contention scenario and the schedule-IR
+# allreduce-vs-ring sweep (ring/mcast time + fabric-byte ratios, autotune)
 SMOKE = [fsdp_contention_sweep, fabric_sweep_smoke, protocol_loss_sweep_smoke,
-         dpa_scaling_smoke, multi_job_contention]
+         dpa_scaling_smoke, multi_job_contention, schedule_ir_sweep]

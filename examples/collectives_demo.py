@@ -5,13 +5,14 @@
 3. The reliable-broadcast protocol under drops + reordering (§III).
 4. The discrete-event simulator: phase breakdown (Fig 10).
 5. The DPA offload model: thread scaling to 1.6 Tbit/s (Figs 13-16).
+6. The Schedule IR: allreduce (RS ∘ AG) built once, lowered per fidelity.
 
     PYTHONPATH=src python examples/collectives_demo.py
 """
 import numpy as np
 
 from repro.core import cost_model as cm
-from repro.core import dpa, protocol, schedule
+from repro.core import dpa, protocol, sched_ir, schedule
 from repro.core.simulator import FabricParams, WorkerParams, simulate_broadcast
 from repro.core.topology import FatTree
 
@@ -72,6 +73,27 @@ def main():
         dpa.DpaConfig("UD", 128, 64, dpa.LINK_1600G_BYTES)) / 1e6
     print(f"   1.6 Tbit/s needs {need:.1f} Mchunks/s; 128 threads sustain "
           f"{got:.1f} -> feasible = {got >= need}")
+
+    print("=" * 72)
+    print("6. Schedule IR: Allreduce = RS ∘ AG from one schedule graph")
+    # quickstart: build once, lower onto any fidelity (sched_ir.execute)
+    p, n = 16, 1 << 22
+    fab = FabricParams(jitter=0.0)
+    wk = WorkerParams(n_recv_workers=8)
+    mc = sched_ir.execute(sched_ir.build_allreduce(p, n, m=p), fab, wk,
+                          np.random.default_rng(0))
+    ring = sched_ir.execute(sched_ir.build_allreduce(p, n), fab, wk,
+                            np.random.default_rng(0))
+    lb = sched_ir.execute(sched_ir.build_allreduce(p, n, m=p), fab, wk,
+                          fidelity="analytic")
+    print(f"   allreduce 4MiB x{p}: multicast-AG {mc.time*1e6:7.1f}us "
+          f"(RS {mc.rs_time*1e6:.1f} + AG {mc.ag_time*1e6:.1f}) | "
+          f"ring {ring.time*1e6:7.1f}us | analytic LB {lb*1e6:7.1f}us")
+    best_m, times = sched_ir.autotune_chains(sched_ir.build_allgather,
+                                             p=p, n_bytes=1 << 18,
+                                             fabric=fab, workers=wk)
+    print(f"   autotune_chains(allgather, flat fabric): best M = {best_m} "
+          f"of {sorted(times)}")
 
 
 if __name__ == "__main__":

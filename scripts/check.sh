@@ -26,6 +26,18 @@ else
     python scripts/lint.py
 fi
 
+echo "== schedule-IR guard"
+# The Collective Schedule IR (core/sched_ir.py) owns ALL chain/round flow
+# construction; the facades must never regrow their own. `_ChainState` was
+# packet.py's pre-IR per-chain state — its reappearance (or any direct
+# chain-state class) outside sched_ir.py means orchestration is being
+# duplicated again.
+if grep -n "_ChainState" src/repro/core/simulator.py src/repro/core/packet.py; then
+    echo "ERROR: chain-construction state outside core/sched_ir.py —" \
+         "build a Schedule and lower it via sched_ir.execute instead" >&2
+    exit 1
+fi
+
 echo "== tests (fast tier)"
 python -m pytest -x -q -m "not slow" --durations=15 --durations-min=1.0 "$@"
 

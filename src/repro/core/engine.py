@@ -544,49 +544,6 @@ def _layer_bytes_from_model(model: "ModelConfig", dtype_bytes: int) -> tuple[int
     return n_layers, count_params_analytic(model) / n_layers * dtype_bytes
 
 
-def _routed_fsdp_submitters(eng: Engine, topology, hosts, p: int, policy: str,
-                            gather_bytes: float, shard_bytes: float,
-                            fabric: FabricParams, n_chains: int):
-    """Build the per-layer AG/RS flow submitters for topology mode: routed
-    ring unicasts and multicast/aggregation tree flows on the real fabric.
-    Routes and trees are built once and reused every layer. The caller is
-    responsible for topology.reset() (multi-job runs share one fabric)."""
-    hosts = list(hosts)
-    assert len(hosts) == p, (len(hosts), p)
-    ring_routes = [topology.route(hosts[i], hosts[(i + 1) % p])
-                   for i in range(p)]
-
-    def submit_ring(tag, nbytes, t):
-        return [eng.submit_route(r, nbytes, t_start=t, tag=tag)
-                for r in ring_routes]
-
-    if policy == "naive":
-        # both collectives as P2P rings in the same direction: their flows
-        # share every host up/down link and the ECMP paths between them
-        submit_ag = lambda t: submit_ring("ag", gather_bytes, t)  # noqa: E731
-        submit_rs = lambda t: submit_ring("rs", gather_bytes, t)  # noqa: E731
-        return submit_ag, submit_rs, (p - 1) * fabric.latency
-
-    mcast_trees = [topology.multicast_tree(h, hosts) for h in hosts]
-
-    def submit_ag(t):
-        # every host multicasts its 1/P shard; switches replicate down-tree
-        return [eng.submit_tree(tree, shard_bytes, t_start=t, tag="ag")
-                for tree in mcast_trees]
-
-    if policy == "mcast":
-        submit_rs = lambda t: submit_ring("rs", gather_bytes, t)  # noqa: E731
-    else:  # split: RS_inc — aggregation trees run opposite the AG trees
-        agg_trees = [topology.aggregation_tree(h, hosts) for h in hosts]
-
-        def submit_rs(t):
-            return [eng.submit_tree(tree, shard_bytes, t_start=t, tag="rs")
-                    for tree in agg_trees]
-
-    rounds = max(p // max(n_chains, 1), 1)
-    return submit_ag, submit_rs, rounds * fabric.latency
-
-
 def _make_ag_loss_overlay(fidelity: str, loss, rng, policy: str, topology,
                           hosts, p: int, gather_bytes: float,
                           shard_bytes: float, fabric: FabricParams,
@@ -619,8 +576,9 @@ def _make_ag_loss_overlay(fidelity: str, loss, rng, policy: str, topology,
             path_len = max(sum(hops) / len(hops), 1.0)
         else:
             path_len = 1.0
-        q = 1.0 - (1.0 - template.mean_rate) ** path_len
-        extra = 2.0 * gather_bytes / fabric.b_link * (1.0 / (1.0 - q) - 1.0)
+        extra = (2.0 * gather_bytes / fabric.b_link
+                 * packet_mod.rc_goodput_inflation(template.mean_rate,
+                                                   path_len))
         return lambda: extra
 
     from repro.core.simulator import _chunking  # deferred, like packet_mod
@@ -678,7 +636,8 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
                        workers: "WorkerParams | None" = None,
                        progress_engine: str = "dpa",
                        host_cores: int = 2,
-                       host_total_cores: int = 108) -> FsdpStepResult:
+                       host_total_cores: int = 108,
+                       schedule=None) -> FsdpStepResult:
     """Interleaved forward-AG + backward-RS + compute FSDP timeline.
 
     Per layer the parameters live sharded 1/p per node; the forward pass
@@ -766,54 +725,32 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
         datapath_cap = None
         compute_scale = 1.0
 
-    b = fabric.b_link
     gather_bytes = (p - 1) / p * layer_bytes     # bytes a node must receive
     shard_bytes = layer_bytes / p
     fwd_t = (2.0 * (layer_bytes / dtype_bytes) * tokens_per_device / hw_flops
              * compute_scale)
     bwd_t = 2.0 * fwd_t
 
+    # the step's per-layer AG/RS collectives as a schedule graph; the IR
+    # lowering (sched_ir.fsdp_submitters) builds the per-policy flows —
+    # routed fabric trees/rings or the abstract representative-rank NIC.
+    # ``schedule=`` lets sched_ir.execute hand over the already-built graph
+    from repro.core import sched_ir  # deferred: sched_ir imports this module
+
+    sched = schedule
+    if sched is None:
+        sched = sched_ir.build_fsdp_step(
+            p=p, n_layers=n_layers, layer_bytes=layer_bytes, policy=policy,
+            n_chains=n_chains)
+    else:
+        assert sched.kind == "fsdp_step" and sched.p == p \
+            and sched.meta["policy"] == policy, (sched.kind, sched.p, policy)
     eng = Engine()
     if topology is not None:
         topology.reset()
-        submit_ag, submit_rs, ag_sync = _routed_fsdp_submitters(
-            eng, topology, hosts if hosts is not None else range(p), p, policy,
-            gather_bytes, shard_bytes, fabric, n_chains)
-    elif policy == "naive":
-        eng.add_link("shared", b)
-
-        def submit_ag(t):
-            # ring AG: (p-1)/p*L sent + received, all through the shared medium
-            return [eng.submit("shared", 2 * gather_bytes, t_start=t, tag="ag")]
-
-        def submit_rs(t):
-            return [eng.submit("shared", 2 * gather_bytes, t_start=t, tag="rs")]
-
-        ag_sync = (p - 1) * fabric.latency
-    else:  # mcast / split share the multicast AG; they differ in the RS side
-        eng.add_link("send", b)
-        eng.add_link("recv", b)
-
-        def submit_ag(t):
-            # AG_mc: receive-bound (send share 1/p — cost_model.mc_inc_share)
-            return [eng.submit("send", shard_bytes, t_start=t, tag="ag"),
-                    eng.submit("recv", gather_bytes, t_start=t, tag="ag")]
-
-        if policy == "mcast":
-            def submit_rs(t):
-                # ring RS: full gather bytes in both directions, so its
-                # receive stream contends with AG_mc on the ejection link
-                return [eng.submit("send", gather_bytes, t_start=t, tag="rs"),
-                        eng.submit("recv", gather_bytes, t_start=t, tag="rs")]
-        else:
-            def submit_rs(t):
-                # RS_inc: send-bound — the switch reduces in-network, the
-                # node receives only its own reduced shard
-                return [eng.submit("send", gather_bytes, t_start=t, tag="rs"),
-                        eng.submit("recv", shard_bytes, t_start=t, tag="rs")]
-
-        rounds = max(p // max(n_chains, 1), 1)
-        ag_sync = rounds * fabric.latency
+    submit_ag, submit_rs, ag_sync = sched_ir.fsdp_submitters(
+        sched, eng, fabric, topology=topology,
+        hosts=hosts if hosts is not None else range(p))
 
     ag_overlay = _make_ag_loss_overlay(
         fidelity, loss, rng, policy, topology,
@@ -962,6 +899,8 @@ def simulate_multi_job(topology, jobs: dict[str, "list[int]"], *,
     assert len(set(all_hosts)) == len(all_hosts), "jobs must use disjoint hosts"
     assert all(len(hs) >= 2 for hs in jobs.values())
 
+    from repro.core import sched_ir  # deferred: sched_ir imports this module
+
     def run(subset: list[str]) -> tuple[dict[str, float], Engine]:
         topology.reset()
         eng = Engine()
@@ -969,11 +908,11 @@ def simulate_multi_job(topology, jobs: dict[str, "list[int]"], *,
         for name in subset:
             hs = list(jobs[name])
             p = len(hs)
-            gather = (p - 1) / p * layer_bytes
-            shard = layer_bytes / p
-            submit_ag, _, ag_sync = _routed_fsdp_submitters(
-                eng, topology, hs, p, policy, gather, shard, fabric,
-                n_chains=p)
+            sched = sched_ir.build_fsdp_step(
+                p=p, n_layers=n_layers, layer_bytes=layer_bytes,
+                policy=policy, n_chains=p)
+            submit_ag, _, ag_sync = sched_ir.fsdp_submitters(
+                sched, eng, fabric, topology=topology, hosts=hs)
             state[name] = {
                 "submit": submit_ag, "sync": ag_sync,
                 "fwd": 2.0 * (layer_bytes / dtype_bytes) * tokens_per_device

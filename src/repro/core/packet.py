@@ -31,9 +31,16 @@ Datapath per Broadcast (simulate_packet_broadcast):
      (a real engine tree flow: retransmissions contend on, and are counted
      by, the same fabric links). Repeat until every bitmap is complete.
 
-simulate_packet_allgather composes R rounds of M concurrent packet
-Broadcasts (§IV-A round roots), chains colliding on the fabric exactly as in
-the fluid model, each chain recovering independently per round.
+simulate_packet_allgather is a facade over the Collective Schedule IR
+(core/sched_ir.py): it builds the explicit Appendix-A schedule graph and
+executes it at packet fidelity — R generations of concurrent packet
+Broadcasts whose round/root structure comes from the schedule's Activation
+edges, chains colliding on the fabric exactly as in the fluid model. The
+round loop (and the per-chain runtime state that used to live here as an
+ad-hoc chain-state class) lives in sched_ir._packet_allgather; this module
+keeps the protocol machinery it lowers onto: loss models, tree paths,
+bitmaps, NACK service, the worker pools. scripts/check.sh greps that chain
+state never grows back here.
 
 The DPA itself has two fidelities (``dpa_fidelity=``):
 
@@ -76,7 +83,7 @@ from repro.core.engine import (
     staging_rnr_mask,
     worker_pool_completion,
 )
-from repro.core.simulator import PhaseBreakdown, _chunking, _rnr_barrier
+from repro.core.sched_ir import PhaseBreakdown, _chunking, _rnr_barrier
 from repro.kernels.bitmap_np import (  # jax-free: the packet wire format
     bitmap_pack_np,
     bitmap_popcount_np,
@@ -199,6 +206,17 @@ def resolve_loss(loss, fabric: FabricParams) -> LossModel | None:
         return loss
     rate = float(loss)
     return BernoulliLoss(rate) if rate > 0 else None
+
+
+def rc_goodput_inflation(mean_rate: float, path_len: float) -> float:
+    """Reliable-unicast (RC) transport retransmits in hardware (go-back-N),
+    so loss appears as a deterministic goodput inflation: the extra
+    wire-time fraction 1/(1-q_path) - 1 for a path crossing ``path_len``
+    lossy links of mean per-link rate ``mean_rate`` (mean-field treatment;
+    DESIGN.md §3.1). Shared by the FSDP "naive" overlay and the
+    ring-schedule packet lowering — they must never diverge on it."""
+    q_path = 1.0 - (1.0 - mean_rate) ** path_len
+    return 1.0 / (1.0 - q_path) - 1.0
 
 
 def attach_loss(topology, template: LossModel, rng: np.random.Generator,
@@ -411,11 +429,12 @@ class PacketBcastResult:
 class _BroadcastRun:
     """One packet-level Broadcast: fast-path delivery plus NACK-aggregation
     / retransmission rounds on an Engine. Drives simulate_packet_broadcast.
-    NOTE: simulate_packet_allgather implements its round loop separately —
-    its M concurrent chains share every leaf's worker pool, so delivery must
-    merge arrivals ACROSS chains before the pool pass, which this
-    self-contained per-broadcast datapath cannot express. Protocol changes
-    (cutoff rule, NACK service, retransmit pruning) must be mirrored there."""
+    NOTE: the allgather executor (sched_ir._packet_allgather) implements its
+    round loop separately — its M concurrent chains share every leaf's
+    worker pool, so delivery must merge arrivals ACROSS chains before the
+    pool pass, which this self-contained per-broadcast datapath cannot
+    express. Protocol changes (cutoff rule, NACK service, retransmit
+    pruning) must be mirrored there."""
 
     def __init__(self, p: int, n_bytes: int, fabric: FabricParams,
                  workers: WorkerParams, rng: np.random.Generator,
@@ -759,321 +778,29 @@ class PacketAllgatherResult:
     completed: bool = True
 
 
-class _ChainState:
-    """One chain (one round root) of a packet Allgather round: its tree
-    flow, per-leaf root->leaf paths/models and per-leaf missing bitmaps.
-    Unlike the standalone Broadcast, delivery is NOT self-contained — all
-    chains of a round share every leaf's worker pool, so the driver merges
-    arrivals across chains before the pool pass."""
-
-    __slots__ = ("root", "tree", "paths", "models", "flow", "inject",
-                 "masks", "missing", "retx", "wire", "rmasks")
-
-    def __init__(self, run_args, root: int, template,
-                 rng: np.random.Generator, shared_carriers, model_cache):
-        p, n_chunks, fabric, topology, host_list = run_args
-        self.root = root
-        if topology is not None:
-            self.tree = topology.multicast_tree(host_list[root], host_list)
-            names = {leaf: f"h{host_list[leaf]}" for leaf in range(p)
-                     if leaf != root}
-            by_name = tree_paths(self.tree, f"h{host_list[root]}",
-                                 list(names.values()))
-            self.paths = {leaf: by_name[n] for leaf, n in names.items()}
-            # model_cache: one loss process per physical Link, shared by
-            # every chain crossing it and persistent across rounds
-            self.models = _link_models(
-                {names[leaf]: self.paths[leaf] for leaf in names}, template,
-                rng, cache=model_cache)
-        else:
-            # abstract: loss lives on each leaf's ejection carrier, shared
-            # by every chain (it is the same physical link); a chain sends
-            # nothing to its own root, so its carrier is NOT in the model
-            # set (sampling it would time-shift the shared loss process)
-            self.tree = None
-            self.paths = {leaf: [shared_carriers[leaf]] for leaf in range(p)
-                          if leaf != root}
-            self.models = {id(c): c.loss
-                           for path in self.paths.values() for c in path}
-        self.missing = {}                      # leaf -> bool mask over chunks
-        self.flow = None
-        self.retx = None                       # (flow, union, ...) per round
-        self.rmasks = None
-        self.wire = 0
-
-
 def simulate_packet_allgather(
         p: int, n_bytes: int, fabric: FabricParams, workers: WorkerParams,
         rng: np.random.Generator, n_chains: int = 1, *, topology=None,
         hosts=None, loss=None, max_rounds: int = DEFAULT_MAX_ROUNDS,
         aggregate_nacks: bool = True, dpa_fidelity: str = "scalar",
         dpa=None) -> PacketAllgatherResult:
-    """Packet-fidelity Allgather: R sequential rounds of M concurrent packet
-    Broadcasts (§IV-A round roots G^r). Within a round the M chains' fast
-    paths AND their retransmission flows share one engine (recovery traffic
-    collides with data on the fabric), and every leaf's worker pool serves
-    the MERGED arrival stream of all chains — the receive-bound contention
-    the fluid model captures with its single representative leaf. The next
-    round's activation waits for every chain of this round to complete.
-    ``dpa_fidelity="event"`` gives every host a persistent event-level DPA
-    (core/dpa_engine.py); a chain root's NACK service and retransmit
-    posting then run on the SAME contexts that receive the other chains —
-    protocol work steals cycles from the receive datapath."""
-    assert p % n_chains == 0
-    assert dpa_fidelity in DPA_FIDELITIES, dpa_fidelity
-    assert dpa is None or dpa_fidelity == "event", \
-        "dpa= requires dpa_fidelity='event'"
-    rounds = p // n_chains
-    n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
-    service = chunk / workers.thread_tput
-    t_rnr = _rnr_barrier(p, fabric, workers)
-    template = resolve_loss(loss, fabric)
-    if dpa_fidelity == "event":
-        ev_params = resolve_event_params(dpa, workers.n_recv_workers)
-        pools = {leaf: DpaEventPool(ev_params) for leaf in range(p)}
-    else:
-        pools = None
-    eng = Engine()
-    if topology is not None:
-        host_list = list(hosts) if hosts is not None else list(range(p))
-        assert len(host_list) == p, (len(host_list), p)
-        topology.reset()
-        shared_carriers = None
-        recv_link = None
-    else:
-        host_list = list(range(p))
-        recv_link = eng.add_link("leaf.recv", fabric.b_link)
-        shared_carriers = {leaf: _AbstractCarrier() for leaf in range(p)}
-        for leaf in range(p):
-            if template is not None:
-                shared_carriers[leaf].loss = template.fork(rng)
-    run_args = (p, n_chunks, fabric, topology, host_list)
-    # one loss process per physical fabric Link for the WHOLE allgather:
-    # chains sharing a cable share its (possibly bursty) channel state
-    model_cache: dict[int, LossModel | None] = {}
+    """Packet-fidelity Allgather: a facade over the Collective Schedule IR.
+    Builds the Appendix-A schedule graph (typed Multicast ops + Activation
+    edges, uneven chains supported) and executes it at packet fidelity —
+    the round loop lives in sched_ir._packet_allgather and lowers onto this
+    module's protocol machinery. ``dpa_fidelity="event"`` gives every host
+    a persistent event-level DPA (core/dpa_engine.py); a chain root's NACK
+    service and retransmit posting then run on the SAME contexts that
+    receive the other chains — protocol work steals cycles from the
+    receive datapath."""
+    from repro.core import sched_ir   # deferred: sched_ir lowers onto us
 
-    def hop_lat(ch: _ChainState, leaf: int) -> float:
-        if topology is None:
-            return fabric.latency
-        return len(ch.paths[leaf]) * fabric.latency
-
-    def pool_merged(entries, t_floor: float, leaf: int):
-        """Merge (chain, psns, arrivals) triples through ONE leaf pool pass
-        (the leaf's scalar queue, or its persistent event DPA); returns
-        (t_done, per-chain surviving psns after RNR)."""
-        if not entries:
-            return t_floor, {}, 0
-        arr = np.concatenate([e[2] for e in entries])
-        key = np.concatenate([np.full(e[2].shape[0], i)
-                              for i, e in enumerate(entries)])
-        psn = np.concatenate([e[1] for e in entries])
-        order = np.argsort(arr, kind="stable")
-        if pools is None:
-            done, _ = worker_pool_completion(
-                arr[order], workers.n_recv_workers, service,
-                workers.staging_chunks)
-        else:
-            done = pools[leaf].service_batch(arr[order], chunk)
-        rnr = staging_rnr_mask(done, arr[order], workers.staging_chunks)
-        got = {}
-        ko, po, ro = key[order], psn[order], rnr
-        for i, e in enumerate(entries):
-            sel = ko == i
-            got[e[0]] = (po[sel & ~ro], po[sel & ro])   # (delivered, rnr)
-        # max, not done[-1]: a persistent event pool's last-arriving item is
-        # not necessarily the last one to complete (busy-context backlog)
-        t_done = float(done.max()) if done.size else t_floor
-        n_rnr = int(rnr.sum())
-        return t_done, got, n_rnr
-
-    t = t_rnr
-    traces: list[RoundTrace] = []
-    mcast_time = 0.0
-    rel_time = 0.0
-    recovered_total = 0
-    rnr_total = 0
-    retx_wire = 0
-    fast_total = 0
-    undelivered = 0
-    completed = True
-    for r in range(rounds):
-        roots = [i for i in range(p) if i % rounds == r]
-        chains = [_ChainState(run_args, root, template, rng,
-                              shared_carriers, model_cache)
-                  for root in roots]
-        for ch in chains:
-            nbytes = n_chunks * chunk
-            if ch.tree is not None:
-                ch.flow = eng.submit_tree(ch.tree, nbytes, t_start=t,
-                                          tag=f"chain{host_list[ch.root]}")
-            else:
-                ch.flow = eng.submit(recv_link, nbytes, t_start=t,
-                                     tag=f"chain{ch.root}")
-        eng.run()
-        for ch in chains:
-            ch.inject = ch.flow.chunk_times(n_chunks, chunk)
-            ch.masks = _sample_link_round(ch.models, n_chunks)
-        cutoff = max(ch.flow.t_end for ch in chains) + fabric.alpha
-        # fast path: merged per-leaf pool over every chain's survivors
-        t_fast = t
-        leaf_done = np.full(p, t)
-        for leaf in range(p):
-            entries = []
-            for ch in chains:
-                if leaf == ch.root:
-                    continue
-                lost = _leaf_lost(ch.paths[leaf], ch.masks, n_chunks)
-                psns = np.nonzero(~lost)[0]
-                if lost.any():
-                    ch.missing[leaf] = lost.copy()
-                arr = (ch.inject[psns] + hop_lat(ch, leaf)
-                       + rng.uniform(0.0, fabric.jitter, size=psns.shape[0]))
-                entries.append((ch, psns, arr))
-            t_done, got, n_rnr = pool_merged(entries, t, leaf)
-            rnr_total += n_rnr
-            for ch in chains:
-                if ch in got:
-                    _, dropped = got[ch]
-                    if dropped.size:
-                        m = ch.missing.setdefault(
-                            leaf, np.zeros(n_chunks, dtype=bool))
-                        m[dropped] = True
-            leaf_done[leaf] = t_done
-            t_fast = max(t_fast, t_done)
-        mcast_time += max(t_fast - t, 0.0)
-        # interleaved recovery: every incomplete chain NACKs + retransmits
-        # concurrently; retx flows contend on the shared engine and the
-        # leaves' pools again serve the merged retransmission stream
-        t_round_end = t_fast
-        for _ in range(max_rounds):
-            live = [ch for ch in chains if ch.missing]
-            if not live:
-                break
-            for ch in live:
-                union = np.zeros(n_chunks, dtype=bool)
-                for lost in ch.missing.values():
-                    union |= lost
-                upos = np.nonzero(union)[0]
-                nackers = sorted(ch.missing)
-                t_send = [max(leaf_done[lf], cutoff) + hop_lat(ch, lf)
-                          for lf in nackers]
-                arrivals = (np.array([max(t_send)]) if aggregate_nacks
-                            else np.sort(np.array(t_send)))
-                if pools is None:
-                    t_root_done, _ = _pool_with_rnr_psns(
-                        arrivals, np.arange(arrivals.shape[0]), workers,
-                        _nack_service(n_chunks, workers, fabric.mtu))
-                else:
-                    # the chain root's DPA serves the NACKs — the same
-                    # contexts that receive every OTHER chain's stream
-                    wire = _nack_wire_bytes(n_chunks, fabric.mtu)
-                    t_root_done, _ = pools[ch.root].service_with_rnr(
-                        arrivals, np.arange(arrivals.shape[0]), wire,
-                        workers.staging_chunks, kind="nack",
-                        wire_bytes=wire)
-                t_retx = max(t_root_done, eng.now)
-                if pools is not None:
-                    pools[ch.root].service_batch(
-                        np.full(upos.size, t_retx), chunk, kind="retx")
-                if ch.tree is not None:
-                    members = [host_list[ch.root]] + [host_list[x]
-                                                      for x in nackers]
-                    rtree = topology.multicast_tree(host_list[ch.root],
-                                                    members)
-                    rflow = eng.submit_tree(
-                        rtree, upos.size * chunk, t_start=t_retx,
-                        tag=f"chain{host_list[ch.root]}.retx")
-                else:
-                    rflow = eng.submit(recv_link, upos.size * chunk,
-                                       t_start=t_retx,
-                                       tag=f"chain{ch.root}.retx")
-                ch.retx = (rflow, upos, nackers, arrivals)
-                ch.wire += int(upos.size) * chunk
-                retx_wire += int(upos.size) * chunk
-            eng.run()
-            cutoff = max(ch.retx[0].t_end for ch in live) + fabric.alpha
-            for ch in live:
-                # pruned-tree links only (see _BroadcastRun.deliver_retransmit)
-                ch.rmasks = _sample_link_round(
-                    _models_on_paths(ch.paths, ch.models, sorted(ch.missing)),
-                    ch.retx[1].size)
-            chain_recovered = {id(ch): 0 for ch in live}
-            for leaf in range(p):
-                entries = []
-                for ch in live:
-                    if leaf not in ch.missing:
-                        continue
-                    rflow, upos, _, _ = ch.retx
-                    inject_r = rflow.chunk_times(upos.size, chunk)
-                    miss = np.nonzero(ch.missing[leaf])[0]
-                    pos = np.searchsorted(upos, miss)
-                    lost = _leaf_lost(ch.paths[leaf], ch.rmasks,
-                                      upos.size)[pos]
-                    got_pos, got_psn = pos[~lost], miss[~lost]
-                    arr = (inject_r[got_pos] + hop_lat(ch, leaf)
-                           + rng.uniform(0.0, fabric.jitter,
-                                         size=got_psn.shape[0]))
-                    entries.append((ch, got_psn, arr))
-                t_done, got, n_rnr = pool_merged(entries,
-                                                 float(leaf_done[leaf]), leaf)
-                rnr_total += n_rnr
-                for ch in live:
-                    if leaf not in ch.missing or ch not in got:
-                        continue
-                    delivered, _ = got[ch]
-                    ch.missing[leaf][delivered] = False
-                    recovered_total += delivered.shape[0]
-                    chain_recovered[id(ch)] += delivered.shape[0]
-                    if not ch.missing[leaf].any():
-                        del ch.missing[leaf]
-                if entries:
-                    leaf_done[leaf] = t_done
-                    t_round_end = max(t_round_end, t_done)
-            for ch in live:
-                rflow, upos, nackers, arrivals = ch.retx
-                traces.append(RoundTrace(
-                    nack_leaves=len(nackers),
-                    root_nack_msgs=int(arrivals.shape[0]),
-                    union_chunks=int(upos.size),
-                    t_nack_root=float(arrivals.max()),
-                    t_retx_start=float(rflow.t_start),
-                    t_end=t_round_end,
-                    recovered=chain_recovered[id(ch)],
-                ))
-                ch.retx = None
-                ch.rmasks = None
-        completed &= not any(ch.missing for ch in chains)
-        undelivered += sum(int(m.sum()) for ch in chains
-                           for m in ch.missing.values())
-        rel_time += max(t_round_end - t_fast, 0.0)
-        fast_total += len(chains) * (p - 1) * n_chunks
-        # activation signal to the next round's roots
-        t = max(t_round_end + fabric.latency, eng.now)
-    # fast = everything not recovered and not still missing (max_rounds can
-    # truncate recovery: completed=False, conservation shows the shortfall)
-    fast_total -= recovered_total + undelivered
-
-    t_done = t + fabric.latency  # final handshake
-    phases = PhaseBreakdown(
-        rnr_sync=t_rnr, multicast=mcast_time, reliability=rel_time,
-        handshake=fabric.latency,
-    )
-    return PacketAllgatherResult(
-        time=t_done,
-        phases=phases,
-        recovered=recovered_total,
-        bytes_fast=fast_total * chunk,
-        bytes_recovery=recovered_total * chunk,
-        # ALL receivers counted (the fluid model tracks one representative
-        # leaf): p chains, each delivering n_chunks to p-1 leaves
-        bytes_total=p * (p - 1) * n_chunks * chunk,
-        per_rank_recv_tput=(p - 1) * n_bytes / t_done,
-        link_bytes=eng.link_bytes() if topology is not None else {},
-        rounds=traces,
-        rnr_drops=rnr_total,
-        retransmit_wire_bytes=retx_wire,
-        completed=completed,
-    )
+    sched = sched_ir.build_allgather(p, n_bytes, n_chains)
+    return sched_ir.execute(sched, fabric, workers, rng, fidelity="packet",
+                            topology=topology, hosts=hosts, loss=loss,
+                            max_rounds=max_rounds,
+                            aggregate_nacks=aggregate_nacks,
+                            dpa_fidelity=dpa_fidelity, dpa=dpa)
 
 
 # --------------------------------------------- FSDP overlay (closed timing)

@@ -231,6 +231,55 @@ def analytic_bcast_time(p: int, n_bytes: int, b_link: float, latency: float,
             + n_bytes / rate + depth * latency + latency)
 
 
+def analytic_allgather_time(p: int, n_bytes: int, b_link: float,
+                            latency: float, *, n_chains: int = 1,
+                            pool_rate: float | None = None,
+                            rnr_hop: float = 1.5e-6) -> float:
+    """Lossless closed form (lower bound) of the engine Allgather: RNR
+    barrier + the receive path ingesting the (P-1)N gathered bytes at the
+    slower of wire and worker pool + one activation hop per schedule
+    generation (R = ceil(P/M)) + the final handshake. The fluid lowering
+    additionally pays MTU chunk rounding and its own-chain echo (it ingests
+    P*N), so analytic <= fluid holds across the metamorphic grid."""
+    rate = b_link if pool_rate is None else min(b_link, pool_rate)
+    rounds = -(-p // n_chains)
+    return (analytic_rnr_barrier(p, latency, rnr_hop)
+            + (p - 1) * n_bytes / rate + rounds * latency + latency)
+
+
+def analytic_ring_allgather_time(p: int, n_bytes: int, b_link: float,
+                                 latency: float) -> float:
+    """Closed form of the ring-Allgather lowering: P-1 generations, each
+    forwarding an N-byte shard on the full-duplex NIC plus one hop."""
+    return (p - 1) * (n_bytes / b_link + latency)
+
+
+def analytic_ring_reduce_scatter_time(p: int, n_bytes: int, b_link: float,
+                                      latency: float) -> float:
+    """Closed form of the ring Reduce-Scatter lowering over an N-byte
+    per-rank buffer: P-1 generations of the N/P shard (reduction combines
+    at line rate)."""
+    return (p - 1) * (n_bytes / p / b_link + latency)
+
+
+def analytic_allreduce_time(p: int, n_bytes: int, b_link: float,
+                            latency: float, *, m: int | None = None,
+                            pool_rate: float | None = None,
+                            rnr_hop: float = 1.5e-6) -> float:
+    """Closed form of Allreduce = RS ∘ AG (core/sched_ir.build_allreduce):
+    ring Reduce-Scatter of the buffer, then an Allgather of the reduced
+    N/P shards — ``m=None`` the ring AG, ``m >= 1`` the paper's M-chain
+    multicast AG (with its RNR barrier and pool bound)."""
+    rs = analytic_ring_reduce_scatter_time(p, n_bytes, b_link, latency)
+    shard = max(n_bytes // p, 1)
+    if m:
+        ag = analytic_allgather_time(p, shard, b_link, latency, n_chains=m,
+                                     pool_rate=pool_rate, rnr_hop=rnr_hop)
+    else:
+        ag = analytic_ring_allgather_time(p, shard, b_link, latency)
+    return rs + ag
+
+
 def analytic_expected_rounds(path_loss: float, n_chunks: int,
                              target: float = 0.5) -> float:
     """Expected NACK/retransmission rounds until a receiver behind a path

@@ -1,0 +1,1334 @@
+"""Collective Schedule IR: one schedule graph, every fidelity.
+
+The paper's core contribution is an Allgather *schedule* — a round-robin
+composition of reliable Broadcasts (§IV-A, Appendix A). This module makes
+that schedule the system's central representation instead of rank arithmetic
+scattered across the engines: a ``Schedule`` is an explicit DAG of typed
+communication ops
+
+  Multicast(root, group, nbytes)   switch-replicated stream root -> group
+  Unicast(src, dst, nbytes)        point-to-point stream (RC transport)
+  Reduce(dst, srcs, nbytes, op)    payloads combined (op) on the way to dst:
+                                   a ring step is a single-source edge, an
+                                   in-network aggregation tree reduces every
+                                   source on the way up
+
+connected by *Activation* edges — the §IV-A chain signal ("when I finish
+multicasting I activate my chain successor") promoted to a first-class DAG
+edge. Builders construct schedules from the Appendix-A math in
+core/schedule.py (uneven chains included); ``execute()`` lowers ANY schedule
+onto the chosen fidelity:
+
+  fidelity="fluid"    the max-min fluid engine (core/engine.py), abstract
+                      NIC links or a routed core/topology.py fabric
+  fidelity="packet"   the MTU-granular reliable-multicast protocol engine
+                      (core/packet.py machinery) with per-Link loss, NACK
+                      aggregation and retransmission rounds; the DPA itself
+                      has scalar/event fidelities (``dpa_fidelity=``)
+  fidelity="analytic" the closed-form oracle (core/protocol.py analytic_*);
+                      returns a float time, the lower bound the property
+                      tests hold the engines against
+
+The legacy entry points (simulator.simulate_broadcast/simulate_allgather,
+packet.simulate_packet_allgather, engine.simulate_fsdp_step's flow
+construction) are thin facades over these builders + executors and reproduce
+the pre-IR results exactly at loss 0 (pinned by tests/test_sched_ir.py).
+
+Schedule generations are derived from the Activation DAG (topological
+layering), so "round r" is not a convention of the executor but a property
+of the graph; the §IV-A chain semantics is per-chain, while the engine
+lowerings apply the (slightly conservative) round-barrier execution the
+pre-IR engines used: a generation starts when the whole previous generation
+delivered.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import protocol
+from repro.core import schedule as seq
+from repro.core.engine import (
+    Engine,
+    FabricParams,
+    WorkerParams,
+    staging_rnr_mask,
+    worker_pool_completion,
+)
+
+FIDELITIES = ("analytic", "fluid", "packet")
+KINDS = ("broadcast", "allgather", "ring_allgather", "reduce_scatter",
+         "allreduce", "fsdp_step")
+
+
+# -------------------------------------------------------------- shared pieces
+# (moved here from simulator.py so every lowering — fluid, packet, ring —
+# shares one definition; simulator.py re-exports them for compatibility)
+
+
+@dataclass
+class PhaseBreakdown:
+    rnr_sync: float = 0.0
+    multicast: float = 0.0
+    reliability: float = 0.0
+    handshake: float = 0.0
+
+    def total(self) -> float:
+        return self.rnr_sync + self.multicast + self.reliability + self.handshake
+
+
+@dataclass
+class BcastResult:
+    completion: np.ndarray            # per-leaf completion time (s)
+    phases: PhaseBreakdown
+    delivered_fast: int
+    recovered: int
+    rnr_drops: int
+    bytes_fast: int
+    bytes_recovery: int
+    bytes_total: int                  # conservation: fast + recovery == total
+    link_bytes: dict[str, float] = field(default_factory=dict)
+    # ^ routed mode only: live per-fabric-link bytes from the same engine run
+
+    @property
+    def time(self) -> float:
+        return float(self.completion.max(initial=0.0))
+
+
+@dataclass
+class AllgatherResult:
+    time: float
+    phases: PhaseBreakdown
+    recovered: int
+    bytes_fast: int
+    bytes_recovery: int
+    bytes_total: int
+    per_rank_recv_tput: float         # (P-1)*N / time  (Fig. 11 metric)
+    link_bytes: dict[str, float] = field(default_factory=dict)
+    # ^ routed mode only: live per-fabric-link bytes from the same engine run
+
+
+def _chunking(n_bytes: int, mtu: int) -> tuple[int, int]:
+    n_chunks = max(-(-n_bytes // mtu), 1)
+    chunk = min(mtu, n_bytes) if n_bytes else mtu
+    return n_chunks, chunk
+
+
+def _rnr_barrier(p: int, fabric: FabricParams, workers: WorkerParams) -> float:
+    # RNR barrier: recursive doubling (§V-A)
+    rounds = int(np.ceil(np.log2(max(p, 2))))
+    return rounds * (fabric.latency + workers.rnr_barrier_hop)
+
+
+# ------------------------------------------------------------------- the ops
+
+
+@dataclass(frozen=True)
+class Multicast:
+    """Switch-replicated stream: ``root`` sends ``nbytes`` once, every other
+    member of ``group`` receives it (Insight 1)."""
+    root: int
+    group: tuple[int, ...]
+    nbytes: float
+
+    @property
+    def receivers(self) -> tuple[int, ...]:
+        return tuple(x for x in self.group if x != self.root)
+
+    @property
+    def payload_bytes(self) -> float:
+        """Receiver-side payload this op delivers (wire-conservation unit)."""
+        return self.nbytes * len(self.receivers)
+
+    def ranks(self):
+        return self.group
+
+
+@dataclass(frozen=True)
+class Unicast:
+    """Point-to-point stream on reliable (RC) transport."""
+    src: int
+    dst: int
+    nbytes: float
+
+    @property
+    def payload_bytes(self) -> float:
+        return self.nbytes
+
+    def ranks(self):
+        return (self.src, self.dst)
+
+
+@dataclass(frozen=True)
+class Reduce:
+    """Reduction op: each source's payload is combined (``op``) on its edge
+    toward ``dst``. A ring reduce-scatter step is a single-source edge; an
+    in-network aggregation tree (Insight 2's RS_inc) reduces every source on
+    the way up, so ``dst`` receives only the combined ``nbytes``."""
+    dst: int
+    srcs: tuple[int, ...]
+    nbytes: float
+    op: str = "sum"
+
+    @property
+    def payload_bytes(self) -> float:
+        # receiver-side, like Multicast: the sources' contributions are
+        # combined in-network, so dst receives only the reduced nbytes
+        return self.nbytes
+
+    def ranks(self):
+        return (self.dst, *self.srcs)
+
+
+Op = Multicast | Unicast | Reduce
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """A collective as an explicit op DAG. ``activation`` edges (i, j) are
+    op-index pairs: op j may start only after op i completed (the §IV-A
+    chain signal, phase barriers, prefetch chains)."""
+    kind: str
+    p: int
+    n_bytes: int                       # per-rank payload of the collective
+    ops: tuple[Op, ...]
+    activation: tuple[tuple[int, int], ...] = ()
+    meta: dict = field(default_factory=dict)
+
+    def rounds(self) -> list[list[int]]:
+        """Topological generations of the activation DAG (ASAP layering):
+        generation g holds every op whose longest activation chain from a
+        source has length g. Raises on a cycle — acyclicity is the IR's
+        structural invariant."""
+        n = len(self.ops)
+        succs: list[list[int]] = [[] for _ in range(n)]
+        indeg = [0] * n
+        for a, b in self.activation:
+            succs[a].append(b)
+            indeg[b] += 1
+        gen = [0] * n
+        q = deque(i for i in range(n) if indeg[i] == 0)
+        seen = 0
+        while q:
+            i = q.popleft()
+            seen += 1
+            for j in succs[i]:
+                gen[j] = max(gen[j], gen[i] + 1)
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    q.append(j)
+        assert seen == n, "activation edges must form a DAG"
+        out: list[list[int]] = [[] for _ in range(max(gen, default=-1) + 1)]
+        for i in range(n):
+            out[gen[i]].append(i)
+        return out
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds())
+
+
+def payload_bytes(sched: Schedule) -> float:
+    """Receiver-side payload the whole schedule delivers — the builder-side
+    conservation quantity the executor byte counters are tested against."""
+    return sum(op.payload_bytes for op in sched.ops)
+
+
+def validate(sched: Schedule) -> None:
+    """Structural invariants every builder must satisfy."""
+    assert sched.kind in KINDS, sched.kind
+    n = len(sched.ops)
+    for op in sched.ops:
+        for r in op.ranks():
+            assert 0 <= r < sched.p, (op, sched.p)
+        assert op.nbytes >= 0, op
+    for a, b in sched.activation:
+        assert 0 <= a < n and 0 <= b < n and a != b, (a, b)
+    rounds = sched.rounds()            # raises on cycle
+    targets = {b for _, b in sched.activation}
+    for g, idxs in enumerate(rounds[1:], start=1):
+        assert any(i in targets for i in idxs), \
+            f"generation {g} has no activation predecessor"
+    if sched.kind == "allgather":
+        roots = [op.root for op in sched.ops]
+        assert sorted(roots) == list(range(sched.p)), \
+            "every rank must broadcast exactly once"
+        m = sched.meta["n_chains"]
+        for r, idxs in enumerate(rounds):
+            assert tuple(sched.ops[i].root for i in idxs) == \
+                seq.active_group(r, sched.p, m), (r, m)
+
+
+# ------------------------------------------------------------------ builders
+
+
+def build_broadcast_tree(p: int, n_bytes: int, root: int = 0) -> Schedule:
+    """One reliable Broadcast: a single Multicast op rooted at ``root``."""
+    return Schedule("broadcast", p, n_bytes,
+                    (Multicast(root, tuple(range(p)), n_bytes),))
+
+
+def build_allgather(p: int, n_bytes: int, m: int = 1) -> Schedule:
+    """The paper's Allgather (Appendix A): R = ceil(P/M) generations of up
+    to M concurrent Multicasts; the §IV-A chain activation signal becomes
+    explicit edges between each chain member and its successor. Uneven
+    chains (M not dividing P) are supported — the last chains are shorter
+    and the final generations activate fewer roots."""
+    group = tuple(range(p))
+    ops: list[Op] = []
+    op_of_root: dict[int, int] = {}
+    for st in seq.allgather_schedule(p, m):
+        for root in st.roots:
+            op_of_root[root] = len(ops)
+            ops.append(Multicast(root, group, n_bytes))
+    act = tuple((op_of_root[f], op_of_root[t])
+                for f, t in seq.activation_edges(p, m))
+    return Schedule("allgather", p, n_bytes, tuple(ops), act,
+                    meta={"n_chains": m})
+
+
+def build_ring_allgather(p: int, n_bytes: int) -> Schedule:
+    """Classical ring Allgather: P-1 generations, each rank forwarding the
+    shard it just received to its right neighbour (RC unicasts)."""
+    ops: list[Op] = []
+    act: list[tuple[int, int]] = []
+    idx: dict[tuple[int, int], int] = {}
+    for s in range(p - 1):
+        for i in range(p):
+            idx[(s, i)] = len(ops)
+            ops.append(Unicast(i, (i + 1) % p, n_bytes))
+        if s:
+            act += [(idx[(s - 1, (i - 1) % p)], idx[(s, i)])
+                    for i in range(p)]
+    return Schedule("ring_allgather", p, n_bytes, tuple(ops), tuple(act))
+
+
+def build_ring_reduce_scatter(p: int, n_bytes: int) -> Schedule:
+    """Ring Reduce-Scatter over a per-rank buffer of ``n_bytes``: P-1
+    generations of single-source Reduce edges, each carrying the N/P shard
+    being accumulated around the ring."""
+    shard = n_bytes / p
+    ops: list[Op] = []
+    act: list[tuple[int, int]] = []
+    idx: dict[tuple[int, int], int] = {}
+    for s in range(p - 1):
+        for i in range(p):
+            idx[(s, i)] = len(ops)
+            ops.append(Reduce((i + 1) % p, (i,), shard))
+        if s:
+            act += [(idx[(s - 1, (i - 1) % p)], idx[(s, i)])
+                    for i in range(p)]
+    return Schedule("reduce_scatter", p, n_bytes, tuple(ops), tuple(act),
+                    meta={"shard_bytes": shard})
+
+
+def build_allreduce(p: int, n_bytes: int, m: int | None = None) -> Schedule:
+    """Allreduce = RS ∘ AG: a ring Reduce-Scatter of the ``n_bytes`` buffer
+    followed by an Allgather of the reduced N/P shards — ``m=None`` uses the
+    classical ring AG, ``m >= 1`` the paper's M-chain multicast AG. A full
+    activation barrier joins the phases (the executor runs them
+    back-to-back; the shard payload is rounded to whole bytes for the
+    packet-granular AG leg)."""
+    assert p >= 2, f"allreduce needs at least 2 ranks, got p={p}"
+    shard_int = max(n_bytes // p, 1)
+    rs = build_ring_reduce_scatter(p, n_bytes)
+    ag = (build_allgather(p, shard_int, m) if m
+          else build_ring_allgather(p, shard_int))
+    off = len(rs.ops)
+    act = list(rs.activation) + [(a + off, b + off) for a, b in ag.activation]
+    rs_last = rs.rounds()[-1]
+    ag_first = [i + off for i in ag.rounds()[0]]
+    act += [(a, b) for a in rs_last for b in ag_first]   # phase barrier
+    return Schedule("allreduce", p, n_bytes, rs.ops + ag.ops, tuple(act),
+                    meta={"m": m, "shard_bytes": shard_int,
+                          "n_rs_ops": off, "rs": rs, "ag": ag})
+
+
+def build_fsdp_step(*, p: int, n_layers: int = 32, layer_bytes: float = 256e6,
+                    policy: str = "mcast", n_chains: int = 2,
+                    **compute) -> Schedule:
+    """One FSDP training step as a schedule graph: per layer a forward AG
+    (prefetched), a backward AG and a backward RS, each in the op type the
+    policy puts on the wire —
+
+      naive   AG and RS both P2P rings (Unicast / single-source Reduce
+              edges carrying the full (P-1)/P gather bytes)
+      mcast   AG as P Multicasts of the 1/P shard (switch replication);
+              RS stays a ring of Reduce edges
+      split   AG Multicasts down + in-network aggregation Reduces up
+              (every source reduced toward dst — Insight 2's RS_inc)
+
+    Activation edges encode the per-rank prefetch chain (layer i+1's AG
+    activates after layer i's) and each layer's RS depending on its
+    backward AG. fsdp_submitters() lowers the per-layer op template onto an
+    Engine (abstract NIC links or routed fabric);
+    engine.simulate_fsdp_step interleaves the lowered flows with compute."""
+    assert policy in ("naive", "mcast", "split"), policy
+    assert p >= 2 and n_layers >= 1
+    gather = (p - 1) / p * layer_bytes
+    shard = layer_bytes / p
+    group = tuple(range(p))
+
+    def ag_ops() -> list[Op]:
+        if policy == "naive":
+            return [Unicast(i, (i + 1) % p, gather) for i in range(p)]
+        return [Multicast(i, group, shard) for i in range(p)]
+
+    def rs_ops() -> list[Op]:
+        if policy == "split":
+            return [Reduce(i, tuple(x for x in group if x != i), shard)
+                    for i in range(p)]
+        return [Reduce((i + 1) % p, (i,), gather) for i in range(p)]
+
+    ops: list[Op] = []
+    act: list[tuple[int, int]] = []
+    fwd: list[list[int]] = []
+    for layer in range(n_layers):
+        base = len(ops)
+        ops += ag_ops()
+        fwd.append(list(range(base, base + p)))
+        if layer:
+            act += [(fwd[layer - 1][i], fwd[layer][i]) for i in range(p)]
+    prev = fwd[-1]
+    for layer in range(n_layers - 1, -1, -1):
+        base = len(ops)
+        ops += ag_ops()
+        idx = list(range(base, base + p))
+        act += [(prev[i], idx[i]) for i in range(p)]
+        rbase = len(ops)
+        ops += rs_ops()
+        act += [(idx[i], rbase + i) for i in range(p)]
+        prev = idx
+    return Schedule("fsdp_step", p, int(layer_bytes), tuple(ops), tuple(act),
+                    meta=dict(policy=policy, n_layers=n_layers,
+                              layer_bytes=layer_bytes, n_chains=n_chains,
+                              gather_bytes=gather, shard_bytes=shard,
+                              compute=dict(compute)))
+
+
+# ----------------------------------------------------------- fluid lowerings
+
+
+def _fluid_broadcast(sched: Schedule, fabric: FabricParams,
+                     workers: WorkerParams, rng: np.random.Generator, *,
+                     topology=None, hosts=None) -> BcastResult:
+    """Fluid lowering of a single-Multicast schedule (the body that was
+    simulator.simulate_broadcast's fluid path, verbatim)."""
+    (op,) = sched.ops
+    p, n_bytes, root = sched.p, sched.n_bytes, op.root
+    n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
+    t_rnr = _rnr_barrier(p, fabric, workers)
+
+    eng = Engine()
+    if topology is not None:
+        hosts = list(hosts) if hosts is not None else list(range(p))
+        assert len(hosts) == p, (len(hosts), p)
+        topology.reset()
+        tree = topology.multicast_tree(hosts[root], hosts)
+        flow = eng.submit_tree(tree, n_chunks * chunk, t_start=t_rnr,
+                               tag="mcast")
+        hop_lat = [len(topology.route(hosts[root], hosts[leaf])) * fabric.latency
+                   for leaf in range(p)]
+    else:
+        # abstract mode: a single flow on the root's send link, one hop
+        eng.add_link("root.send", fabric.b_link)
+        flow = eng.submit("root.send", n_chunks * chunk, t_start=t_rnr)
+        hop_lat = [fabric.latency] * p
+    eng.run()
+    inject = flow.chunk_times(n_chunks, chunk)
+    service = chunk / workers.thread_tput
+
+    completion = np.zeros(p)
+    recovered_total = 0
+    rnr_total = 0
+    fast_total = 0
+    t_mcast_end = t_rnr
+    t_rel_end = 0.0
+
+    cutoff = t_rnr + protocol.cutoff_time(n_bytes, fabric.b_link, fabric.alpha)
+
+    for leaf in range(p):
+        if leaf == root:
+            completion[leaf] = inject[-1]
+            continue
+        delay = hop_lat[leaf] + rng.uniform(0.0, fabric.jitter, size=n_chunks)
+        dropped = rng.random(n_chunks) < fabric.p_drop
+        arrivals = np.sort((inject + delay)[~dropped])
+        done, rnr = worker_pool_completion(
+            arrivals, workers.n_recv_workers, service, workers.staging_chunks
+        )
+        rnr_total += rnr
+        fast = n_chunks - int(dropped.sum()) - rnr
+        fast_total += fast
+        t_fast = done[-1] if done.size else t_rnr
+        missing = int(dropped.sum()) + rnr
+        if missing:
+            # fetch ring (§III-C): wait for cutoff, then selective RDMA reads
+            # from the left neighbour (holder is >= left neighbour or root).
+            t0 = max(t_fast, cutoff)
+            t_fetch = t0 + missing * (2 * fabric.latency + chunk / fabric.b_link)
+            recovered_total += missing
+            completion[leaf] = t_fetch
+            t_rel_end = max(t_rel_end, t_fetch - t0)
+        else:
+            completion[leaf] = t_fast
+        t_mcast_end = max(t_mcast_end, t_fast)
+
+    # final handshake: send final to left, need final from right (§III-C)
+    shifted = np.roll(completion, -1)
+    completion = np.maximum(completion, shifted) + fabric.latency
+
+    phases = PhaseBreakdown(
+        rnr_sync=t_rnr,
+        multicast=t_mcast_end - t_rnr,
+        reliability=t_rel_end,
+        handshake=fabric.latency,
+    )
+    return BcastResult(
+        completion=completion,
+        phases=phases,
+        delivered_fast=fast_total,
+        recovered=recovered_total,
+        rnr_drops=rnr_total,
+        bytes_fast=fast_total * chunk,
+        bytes_recovery=recovered_total * chunk,
+        bytes_total=(p - 1) * n_chunks * chunk,
+        link_bytes=eng.link_bytes() if topology is not None else {},
+    )
+
+
+def _fluid_allgather(sched: Schedule, fabric: FabricParams,
+                     workers: WorkerParams, rng: np.random.Generator, *,
+                     topology=None, hosts=None) -> AllgatherResult:
+    """Fluid lowering of an Appendix-A allgather schedule: each activation
+    generation's Multicast roots inject concurrently; the leaf receive path
+    (link + worker pool) is the shared bottleneck; generations are chained
+    by the activation signal. (The body that was
+    simulator.simulate_allgather's fluid path, with the round structure now
+    read off the schedule DAG.)"""
+    p, n_bytes = sched.p, sched.n_bytes
+    generations = sched.rounds()
+    n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
+    service = chunk / workers.thread_tput
+
+    t_rnr = _rnr_barrier(p, fabric, workers)
+
+    eng = Engine()
+    if topology is not None:
+        hosts = list(hosts) if hosts is not None else list(range(p))
+        assert len(hosts) == p, (len(hosts), p)
+        topology.reset()
+    else:
+        eng.add_link("leaf.recv", fabric.b_link)
+
+    t = t_rnr
+    recovered_total = 0
+    fast_bytes = 0
+    rec_bytes = 0
+    mcast_time = 0.0
+    rel_time = 0.0
+    for round_ops in generations:
+        m = len(round_ops)
+        total_chunks = m * n_chunks
+        if topology is not None:
+            # Appendix A: round roots G^r multicast concurrently through the
+            # fabric; each tree flow's rate is min-share over its edges, so
+            # chains genuinely collide in the core and at every ejection port
+            roots = [hosts[sched.ops[i].root] for i in round_ops]
+            flows = [
+                eng.submit_tree(topology.multicast_tree(root, hosts),
+                                n_chunks * chunk, t_start=t, tag=f"chain{root}")
+                for root in roots
+            ]
+        else:
+            # m chain roots inject concurrently; the leaf's ejection link is
+            # the shared resource — m equal flows, each chain rate b_link/m
+            flows = [
+                eng.submit("leaf.recv", n_chunks * chunk, t_start=t,
+                           tag=f"chain{sched.ops[i].root}")
+                for i in round_ops
+            ]
+        eng.run()
+        arrive_spacing = np.sort(
+            np.concatenate([f.chunk_times(n_chunks, chunk) for f in flows])
+        )
+        delay = fabric.latency + rng.uniform(0.0, fabric.jitter, size=total_chunks)
+        dropped = rng.random(total_chunks) < fabric.p_drop
+        arrivals = np.sort((arrive_spacing + delay)[~dropped])
+        done, rnr = worker_pool_completion(
+            arrivals, workers.n_recv_workers, service, workers.staging_chunks
+        )
+        t_fast = done[-1] if done.size else t
+        missing = int(dropped.sum()) + rnr
+        cutoff = t + protocol.cutoff_time(m * n_bytes, fabric.b_link,
+                                          fabric.alpha)
+        t_round_end = t_fast
+        if missing:
+            t0 = max(t_fast, cutoff)
+            t_round_end = t0 + missing * (2 * fabric.latency + chunk / fabric.b_link)
+            rel_time += t_round_end - t0
+            recovered_total += missing
+        mcast_time += max(t_fast - t, 0.0)
+        fast_bytes += (total_chunks - missing) * chunk
+        rec_bytes += missing * chunk
+        # activation signal to the next root in every chain; the engine clock
+        # can only run ahead of t_round_end if every chunk was dropped
+        t = max(t_round_end + fabric.latency, eng.now)
+
+    t_done = t + fabric.latency  # final handshake
+    phases = PhaseBreakdown(
+        rnr_sync=t_rnr, multicast=mcast_time, reliability=rel_time,
+        handshake=fabric.latency,
+    )
+    total = (p - 1) * n_bytes
+    return AllgatherResult(
+        time=t_done,
+        phases=phases,
+        recovered=recovered_total,
+        bytes_fast=fast_bytes,
+        bytes_recovery=rec_bytes,
+        bytes_total=p * n_chunks * chunk,
+        per_rank_recv_tput=total / t_done,
+        link_bytes=eng.link_bytes() if topology is not None else {},
+    )
+
+
+# ------------------------------------------------------------- ring lowering
+
+
+@dataclass
+class RingCollectiveResult:
+    """Result of a ring schedule (ring_allgather / reduce_scatter):
+    generation-synchronous neighbour exchange on RC transport."""
+    time: float
+    phases: PhaseBreakdown
+    n_rounds: int
+    bytes_total: float                 # receiver payload (== payload_bytes)
+    bytes_recovery: float = 0.0        # packet fidelity: RC goodput inflation
+    link_bytes: dict[str, float] = field(default_factory=dict)
+
+
+def _fluid_ring(sched: Schedule, fabric: FabricParams,
+                workers: WorkerParams, rng: np.random.Generator, *,
+                topology=None, hosts=None) -> RingCollectiveResult:
+    """Fluid lowering of a ring schedule: each generation every rank
+    forwards its current shard to the right neighbour. Abstractly the NIC is
+    full duplex — one send + one receive flow on the representative rank per
+    generation; with a topology every op is a routed unicast and the
+    generations genuinely contend on shared fabric links. Reduction combines
+    at line rate (in-switch / SIMD), so Reduce edges cost their wire bytes."""
+    p = sched.p
+    generations = sched.rounds()
+    eng = Engine()
+    if topology is not None:
+        hosts = list(hosts) if hosts is not None else list(range(p))
+        assert len(hosts) == p, (len(hosts), p)
+        topology.reset()
+        route_cache: dict[tuple[int, int], list] = {}
+
+        def route_of(op: Op):
+            src = op.src if isinstance(op, Unicast) else op.srcs[0]
+            dst = op.dst
+            key = (src, dst)
+            if key not in route_cache:
+                route_cache[key] = topology.route(hosts[src], hosts[dst])
+            return route_cache[key]
+    else:
+        eng.add_link("ring.send", fabric.b_link)
+        eng.add_link("ring.recv", fabric.b_link)
+
+    t = 0.0
+    wire_time = 0.0
+    for round_ops in generations:
+        ops = [sched.ops[i] for i in round_ops]
+        for op in ops:
+            assert isinstance(op, (Unicast, Reduce)), op
+            if isinstance(op, Reduce):
+                assert len(op.srcs) == 1, \
+                    "ring lowering takes single-source Reduce edges"
+        if topology is not None:
+            flows = [eng.submit_route(route_of(op), op.nbytes, t_start=t,
+                                      tag=f"ring{i}")
+                     for i, op in enumerate(ops)]
+        else:
+            nbytes = ops[0].nbytes
+            flows = [eng.submit("ring.send", nbytes, t_start=t, tag="ring"),
+                     eng.submit("ring.recv", nbytes, t_start=t, tag="ring")]
+        eng.run()
+        t_end = max(f.t_end for f in flows)
+        wire_time += t_end - t
+        t = t_end + fabric.latency     # the shard must reach the neighbour
+    return RingCollectiveResult(
+        time=t,
+        phases=PhaseBreakdown(multicast=wire_time,
+                              handshake=len(generations) * fabric.latency),
+        n_rounds=len(generations),
+        bytes_total=payload_bytes(sched),
+        link_bytes=eng.link_bytes() if topology is not None else {},
+    )
+
+
+def _packet_ring(sched: Schedule, fabric: FabricParams,
+                 workers: WorkerParams, rng: np.random.Generator, *,
+                 topology=None, hosts=None, loss=None) -> RingCollectiveResult:
+    """Packet fidelity for ring schedules: RC transport retransmits in
+    hardware (go-back-N), so loss appears as deterministic goodput inflation
+    1/(1 - q_path) on the wire component — the same mean-field treatment the
+    FSDP "naive" overlay and protocol.analytic_ring_pipeline_bcast_time use.
+    At loss 0 this reproduces the fluid lowering exactly."""
+    from repro.core import packet as pk   # deferred: packet imports this module
+
+    base = _fluid_ring(sched, fabric, workers, rng, topology=topology,
+                       hosts=hosts)
+    template = pk.resolve_loss(loss, fabric)
+    if template is None:
+        return base
+    if topology is not None:
+        host_list = list(hosts) if hosts is not None else list(range(sched.p))
+        hops = [len(topology.route(host_list[op.src if isinstance(op, Unicast)
+                                             else op.srcs[0]],
+                                   host_list[op.dst]))
+                for op in (sched.ops[i] for i in sched.rounds()[0])]
+        path_len = max(sum(hops) / len(hops), 1.0)
+    else:
+        path_len = 1.0
+    inflate = pk.rc_goodput_inflation(template.mean_rate, path_len)
+    extra = base.phases.multicast * inflate
+    base.time += extra
+    base.phases.reliability = extra
+    base.bytes_recovery = base.bytes_total * inflate
+    return base
+
+
+# --------------------------------------------------------------- allreduce
+
+
+@dataclass
+class AllreduceResult:
+    """Allreduce = RS ∘ AG, phases run back-to-back (the activation barrier
+    of build_allreduce): per-phase results kept for inspection."""
+    time: float
+    rs_time: float
+    ag_time: float
+    bytes_total: float
+    rs: RingCollectiveResult
+    ag: object                         # AllgatherResult | RingCollectiveResult
+    link_bytes: dict[str, float] = field(default_factory=dict)
+
+
+def _exec_allreduce(sched: Schedule, fabric, workers, rng, *, fidelity,
+                    topology, hosts, loss, kw) -> AllreduceResult:
+    # the two phase sub-schedules are carried in meta by build_allreduce
+    # (their ops/edges also make up the merged DAG, for introspection)
+    rs = execute(sched.meta["rs"], fabric, workers, rng, fidelity=fidelity,
+                 topology=topology, hosts=hosts, loss=loss)
+    rs_links = dict(rs.link_bytes)
+    ag = execute(sched.meta["ag"], fabric, workers, rng, fidelity=fidelity,
+                 topology=topology, hosts=hosts, loss=loss, **kw)
+    merged = dict(rs_links)
+    for k, v in ag.link_bytes.items():
+        merged[k] = merged.get(k, 0.0) + v
+    return AllreduceResult(
+        time=rs.time + ag.time,
+        rs_time=rs.time,
+        ag_time=ag.time,
+        bytes_total=rs.bytes_total + ag.bytes_total,
+        rs=rs,
+        ag=ag,
+        link_bytes=merged,
+    )
+
+
+# --------------------------------------------------- packet-fidelity rounds
+
+
+class _PacketChainRun:
+    """Runtime state of one Multicast op (one chain root) in a packet-level
+    allgather generation: its tree flow, per-leaf root->leaf paths/models
+    and per-leaf missing bitmaps. Replaces packet.py's ad-hoc _ChainState —
+    the round/root structure now comes from the schedule's activation DAG.
+    Unlike the standalone Broadcast, delivery is NOT self-contained — all
+    chains of a generation share every leaf's worker pool, so the executor
+    merges arrivals across chains before the pool pass."""
+
+    __slots__ = ("root", "tree", "paths", "models", "flow", "inject",
+                 "masks", "missing", "retx", "wire", "rmasks")
+
+    def __init__(self, run_args, root: int, template,
+                 rng: np.random.Generator, shared_carriers, model_cache):
+        from repro.core import packet as pk   # deferred: import cycle
+
+        p, n_chunks, fabric, topology, host_list = run_args
+        self.root = root
+        if topology is not None:
+            self.tree = topology.multicast_tree(host_list[root], host_list)
+            names = {leaf: f"h{host_list[leaf]}" for leaf in range(p)
+                     if leaf != root}
+            by_name = pk.tree_paths(self.tree, f"h{host_list[root]}",
+                                    list(names.values()))
+            self.paths = {leaf: by_name[n] for leaf, n in names.items()}
+            # model_cache: one loss process per physical Link, shared by
+            # every chain crossing it and persistent across rounds
+            self.models = pk._link_models(
+                {names[leaf]: self.paths[leaf] for leaf in names}, template,
+                rng, cache=model_cache)
+        else:
+            # abstract: loss lives on each leaf's ejection carrier, shared
+            # by every chain (it is the same physical link); a chain sends
+            # nothing to its own root, so its carrier is NOT in the model
+            # set (sampling it would time-shift the shared loss process)
+            self.tree = None
+            self.paths = {leaf: [shared_carriers[leaf]] for leaf in range(p)
+                          if leaf != root}
+            self.models = {id(c): c.loss
+                           for path in self.paths.values() for c in path}
+        self.missing = {}                      # leaf -> bool mask over chunks
+        self.flow = None
+        self.retx = None                       # (flow, union, ...) per round
+        self.rmasks = None
+        self.wire = 0
+
+
+def _packet_allgather(sched: Schedule, fabric: FabricParams,
+                      workers: WorkerParams, rng: np.random.Generator, *,
+                      topology=None, hosts=None, loss=None,
+                      max_rounds: int | None = None,
+                      aggregate_nacks: bool = True,
+                      dpa_fidelity: str = "scalar", dpa=None):
+    """Packet-fidelity lowering of an allgather schedule: each activation
+    generation's Multicast roots run concurrent packet Broadcasts — fast
+    paths AND retransmission flows share one engine (recovery traffic
+    collides with data on the fabric), every leaf's worker pool serves the
+    MERGED arrival stream of all chains, and the next generation's
+    activation waits for every chain of this one to complete.
+    ``dpa_fidelity="event"`` gives every host a persistent event-level DPA
+    (core/dpa_engine.py); a chain root's NACK service and retransmit
+    posting then run on the SAME contexts that receive the other chains —
+    protocol work steals cycles from the receive datapath. (The round loop
+    that was packet.simulate_packet_allgather, with roots and round count
+    read off the schedule DAG.)"""
+    from repro.core import packet as pk   # deferred: packet imports this module
+    from repro.core.dpa_engine import (
+        DPA_FIDELITIES,
+        DpaEventPool,
+        resolve_event_params,
+    )
+
+    p, n_bytes = sched.p, sched.n_bytes
+    if max_rounds is None:
+        max_rounds = pk.DEFAULT_MAX_ROUNDS
+    assert dpa_fidelity in DPA_FIDELITIES, dpa_fidelity
+    assert dpa is None or dpa_fidelity == "event", \
+        "dpa= requires dpa_fidelity='event'"
+    generations = sched.rounds()
+    n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
+    service = chunk / workers.thread_tput
+    t_rnr = _rnr_barrier(p, fabric, workers)
+    template = pk.resolve_loss(loss, fabric)
+    if dpa_fidelity == "event":
+        ev_params = resolve_event_params(dpa, workers.n_recv_workers)
+        pools = {leaf: DpaEventPool(ev_params) for leaf in range(p)}
+    else:
+        pools = None
+    eng = Engine()
+    if topology is not None:
+        host_list = list(hosts) if hosts is not None else list(range(p))
+        assert len(host_list) == p, (len(host_list), p)
+        topology.reset()
+        shared_carriers = None
+        recv_link = None
+    else:
+        host_list = list(range(p))
+        recv_link = eng.add_link("leaf.recv", fabric.b_link)
+        shared_carriers = {leaf: pk._AbstractCarrier() for leaf in range(p)}
+        for leaf in range(p):
+            if template is not None:
+                shared_carriers[leaf].loss = template.fork(rng)
+    run_args = (p, n_chunks, fabric, topology, host_list)
+    # one loss process per physical fabric Link for the WHOLE allgather:
+    # chains sharing a cable share its (possibly bursty) channel state
+    model_cache: dict[int, object] = {}
+
+    def hop_lat(ch: _PacketChainRun, leaf: int) -> float:
+        if topology is None:
+            return fabric.latency
+        return len(ch.paths[leaf]) * fabric.latency
+
+    def pool_merged(entries, t_floor: float, leaf: int):
+        """Merge (chain, psns, arrivals) triples through ONE leaf pool pass
+        (the leaf's scalar queue, or its persistent event DPA); returns
+        (t_done, per-chain surviving psns after RNR)."""
+        if not entries:
+            return t_floor, {}, 0
+        arr = np.concatenate([e[2] for e in entries])
+        key = np.concatenate([np.full(e[2].shape[0], i)
+                              for i, e in enumerate(entries)])
+        psn = np.concatenate([e[1] for e in entries])
+        order = np.argsort(arr, kind="stable")
+        if pools is None:
+            done, _ = worker_pool_completion(
+                arr[order], workers.n_recv_workers, service,
+                workers.staging_chunks)
+        else:
+            done = pools[leaf].service_batch(arr[order], chunk)
+        rnr = staging_rnr_mask(done, arr[order], workers.staging_chunks)
+        got = {}
+        ko, po, ro = key[order], psn[order], rnr
+        for i, e in enumerate(entries):
+            sel = ko == i
+            got[e[0]] = (po[sel & ~ro], po[sel & ro])   # (delivered, rnr)
+        # max, not done[-1]: a persistent event pool's last-arriving item is
+        # not necessarily the last one to complete (busy-context backlog)
+        t_done = float(done.max()) if done.size else t_floor
+        n_rnr = int(rnr.sum())
+        return t_done, got, n_rnr
+
+    t = t_rnr
+    traces: list = []
+    mcast_time = 0.0
+    rel_time = 0.0
+    recovered_total = 0
+    rnr_total = 0
+    retx_wire = 0
+    fast_total = 0
+    undelivered = 0
+    completed = True
+    for round_ops in generations:
+        roots = [sched.ops[i].root for i in round_ops]
+        chains = [_PacketChainRun(run_args, root, template, rng,
+                                  shared_carriers, model_cache)
+                  for root in roots]
+        for ch in chains:
+            nbytes = n_chunks * chunk
+            if ch.tree is not None:
+                ch.flow = eng.submit_tree(ch.tree, nbytes, t_start=t,
+                                          tag=f"chain{host_list[ch.root]}")
+            else:
+                ch.flow = eng.submit(recv_link, nbytes, t_start=t,
+                                     tag=f"chain{ch.root}")
+        eng.run()
+        for ch in chains:
+            ch.inject = ch.flow.chunk_times(n_chunks, chunk)
+            ch.masks = pk._sample_link_round(ch.models, n_chunks)
+        cutoff = max(ch.flow.t_end for ch in chains) + fabric.alpha
+        # fast path: merged per-leaf pool over every chain's survivors
+        t_fast = t
+        leaf_done = np.full(p, t)
+        for leaf in range(p):
+            entries = []
+            for ch in chains:
+                if leaf == ch.root:
+                    continue
+                lost = pk._leaf_lost(ch.paths[leaf], ch.masks, n_chunks)
+                psns = np.nonzero(~lost)[0]
+                if lost.any():
+                    ch.missing[leaf] = lost.copy()
+                arr = (ch.inject[psns] + hop_lat(ch, leaf)
+                       + rng.uniform(0.0, fabric.jitter, size=psns.shape[0]))
+                entries.append((ch, psns, arr))
+            t_done, got, n_rnr = pool_merged(entries, t, leaf)
+            rnr_total += n_rnr
+            for ch in chains:
+                if ch in got:
+                    _, dropped = got[ch]
+                    if dropped.size:
+                        m = ch.missing.setdefault(
+                            leaf, np.zeros(n_chunks, dtype=bool))
+                        m[dropped] = True
+            leaf_done[leaf] = t_done
+            t_fast = max(t_fast, t_done)
+        mcast_time += max(t_fast - t, 0.0)
+        # interleaved recovery: every incomplete chain NACKs + retransmits
+        # concurrently; retx flows contend on the shared engine and the
+        # leaves' pools again serve the merged retransmission stream
+        t_round_end = t_fast
+        for _ in range(max_rounds):
+            live = [ch for ch in chains if ch.missing]
+            if not live:
+                break
+            for ch in live:
+                union = np.zeros(n_chunks, dtype=bool)
+                for lost in ch.missing.values():
+                    union |= lost
+                upos = np.nonzero(union)[0]
+                nackers = sorted(ch.missing)
+                t_send = [max(leaf_done[lf], cutoff) + hop_lat(ch, lf)
+                          for lf in nackers]
+                arrivals = (np.array([max(t_send)]) if aggregate_nacks
+                            else np.sort(np.array(t_send)))
+                if pools is None:
+                    t_root_done, _ = pk._pool_with_rnr_psns(
+                        arrivals, np.arange(arrivals.shape[0]), workers,
+                        pk._nack_service(n_chunks, workers, fabric.mtu))
+                else:
+                    # the chain root's DPA serves the NACKs — the same
+                    # contexts that receive every OTHER chain's stream
+                    wire = pk._nack_wire_bytes(n_chunks, fabric.mtu)
+                    t_root_done, _ = pools[ch.root].service_with_rnr(
+                        arrivals, np.arange(arrivals.shape[0]), wire,
+                        workers.staging_chunks, kind="nack",
+                        wire_bytes=wire)
+                t_retx = max(t_root_done, eng.now)
+                if pools is not None:
+                    pools[ch.root].service_batch(
+                        np.full(upos.size, t_retx), chunk, kind="retx")
+                if ch.tree is not None:
+                    members = [host_list[ch.root]] + [host_list[x]
+                                                      for x in nackers]
+                    rtree = topology.multicast_tree(host_list[ch.root],
+                                                    members)
+                    rflow = eng.submit_tree(
+                        rtree, upos.size * chunk, t_start=t_retx,
+                        tag=f"chain{host_list[ch.root]}.retx")
+                else:
+                    rflow = eng.submit(recv_link, upos.size * chunk,
+                                       t_start=t_retx,
+                                       tag=f"chain{ch.root}.retx")
+                ch.retx = (rflow, upos, nackers, arrivals)
+                ch.wire += int(upos.size) * chunk
+                retx_wire += int(upos.size) * chunk
+            eng.run()
+            cutoff = max(ch.retx[0].t_end for ch in live) + fabric.alpha
+            for ch in live:
+                # pruned-tree links only (see _BroadcastRun.deliver_retransmit)
+                ch.rmasks = pk._sample_link_round(
+                    pk._models_on_paths(ch.paths, ch.models,
+                                        sorted(ch.missing)),
+                    ch.retx[1].size)
+            chain_recovered = {id(ch): 0 for ch in live}
+            for leaf in range(p):
+                entries = []
+                for ch in live:
+                    if leaf not in ch.missing:
+                        continue
+                    rflow, upos, _, _ = ch.retx
+                    inject_r = rflow.chunk_times(upos.size, chunk)
+                    miss = np.nonzero(ch.missing[leaf])[0]
+                    pos = np.searchsorted(upos, miss)
+                    lost = pk._leaf_lost(ch.paths[leaf], ch.rmasks,
+                                         upos.size)[pos]
+                    got_pos, got_psn = pos[~lost], miss[~lost]
+                    arr = (inject_r[got_pos] + hop_lat(ch, leaf)
+                           + rng.uniform(0.0, fabric.jitter,
+                                         size=got_psn.shape[0]))
+                    entries.append((ch, got_psn, arr))
+                t_done, got, n_rnr = pool_merged(entries,
+                                                 float(leaf_done[leaf]), leaf)
+                rnr_total += n_rnr
+                for ch in live:
+                    if leaf not in ch.missing or ch not in got:
+                        continue
+                    delivered, _ = got[ch]
+                    ch.missing[leaf][delivered] = False
+                    recovered_total += delivered.shape[0]
+                    chain_recovered[id(ch)] += delivered.shape[0]
+                    if not ch.missing[leaf].any():
+                        del ch.missing[leaf]
+                if entries:
+                    leaf_done[leaf] = t_done
+                    t_round_end = max(t_round_end, t_done)
+            for ch in live:
+                rflow, upos, nackers, arrivals = ch.retx
+                traces.append(pk.RoundTrace(
+                    nack_leaves=len(nackers),
+                    root_nack_msgs=int(arrivals.shape[0]),
+                    union_chunks=int(upos.size),
+                    t_nack_root=float(arrivals.max()),
+                    t_retx_start=float(rflow.t_start),
+                    t_end=t_round_end,
+                    recovered=chain_recovered[id(ch)],
+                ))
+                ch.retx = None
+                ch.rmasks = None
+        completed &= not any(ch.missing for ch in chains)
+        undelivered += sum(int(m.sum()) for ch in chains
+                           for m in ch.missing.values())
+        rel_time += max(t_round_end - t_fast, 0.0)
+        fast_total += len(chains) * (p - 1) * n_chunks
+        # activation signal to the next generation's roots
+        t = max(t_round_end + fabric.latency, eng.now)
+    # fast = everything not recovered and not still missing (max_rounds can
+    # truncate recovery: completed=False, conservation shows the shortfall)
+    fast_total -= recovered_total + undelivered
+
+    t_done = t + fabric.latency  # final handshake
+    phases = PhaseBreakdown(
+        rnr_sync=t_rnr, multicast=mcast_time, reliability=rel_time,
+        handshake=fabric.latency,
+    )
+    return pk.PacketAllgatherResult(
+        time=t_done,
+        phases=phases,
+        recovered=recovered_total,
+        bytes_fast=fast_total * chunk,
+        bytes_recovery=recovered_total * chunk,
+        # ALL receivers counted (the fluid model tracks one representative
+        # leaf): p chains, each delivering n_chunks to p-1 leaves
+        bytes_total=p * (p - 1) * n_chunks * chunk,
+        per_rank_recv_tput=(p - 1) * n_bytes / t_done,
+        link_bytes=eng.link_bytes() if topology is not None else {},
+        rounds=traces,
+        rnr_drops=rnr_total,
+        retransmit_wire_bytes=retx_wire,
+        completed=completed,
+    )
+
+
+# ----------------------------------------------------------- FSDP lowering
+
+
+def fsdp_submitters(sched: Schedule, eng: Engine, fabric: FabricParams, *,
+                    topology=None, hosts=None):
+    """Lower the per-layer AG/RS op template of a build_fsdp_step schedule
+    onto an Engine: returns (submit_ag, submit_rs, ag_sync) closures the
+    FSDP timeline executor calls per layer. This replaces the per-policy
+    flow construction that used to live in engine.py
+    (_routed_fsdp_submitters + the abstract NIC branches): with a topology
+    every op becomes a routed unicast / multicast tree / aggregation tree
+    flow; abstractly the ops collapse onto the representative rank's NIC
+    links (naive: one shared half-duplex medium; mcast/split: full-duplex
+    send+recv). The caller owns topology.reset() (multi-job runs share one
+    fabric)."""
+    p = sched.p
+    meta = sched.meta
+    n_chains = meta["n_chains"]
+    # byte quantities come from meta (the builder's exact legacy
+    # expressions — bit-exactness pins depend on them); the op TEMPLATE of
+    # the first layer decides the policy's wire structure, so builder and
+    # lowering cannot silently diverge
+    gather_bytes, shard_bytes = meta["gather_bytes"], meta["shard_bytes"]
+    b = fabric.b_link
+    ag_template = sched.ops[:p]                    # layer 0's AG ops
+    rs_template = [op for op in sched.ops
+                   if isinstance(op, Reduce)][:p]  # first backward RS block
+    if isinstance(ag_template[0], Unicast):
+        policy = "naive"
+    elif len(rs_template[0].srcs) > 1:
+        policy = "split"
+    else:
+        policy = "mcast"
+    assert policy == meta["policy"], (policy, meta["policy"])
+
+    if topology is not None:
+        hosts = list(hosts) if hosts is not None else list(range(p))
+        assert len(hosts) == p, (len(hosts), p)
+
+        def submit_ring(routes, tag, nbytes, t):
+            return [eng.submit_route(r, nbytes, t_start=t, tag=tag)
+                    for r in routes]
+
+        if policy == "naive":
+            # both collectives as P2P rings in the same direction (the
+            # template's Unicast/Reduce edges): their flows share every
+            # host up/down link and the ECMP paths between them
+            ring = [topology.route(hosts[op.src], hosts[op.dst])
+                    for op in ag_template]
+            submit_ag = lambda t: submit_ring(ring, "ag", gather_bytes, t)  # noqa: E731
+            submit_rs = lambda t: submit_ring(ring, "rs", gather_bytes, t)  # noqa: E731
+            return submit_ag, submit_rs, (p - 1) * fabric.latency
+
+        mcast_trees = [topology.multicast_tree(hosts[op.root], hosts)
+                       for op in ag_template]
+
+        def submit_ag(t):
+            # every host multicasts its 1/P shard; switches replicate
+            return [eng.submit_tree(tree, shard_bytes, t_start=t, tag="ag")
+                    for tree in mcast_trees]
+
+        if policy == "mcast":
+            ring = [topology.route(hosts[op.srcs[0]], hosts[op.dst])
+                    for op in rs_template]
+            submit_rs = lambda t: submit_ring(ring, "rs", gather_bytes, t)  # noqa: E731
+        else:  # split: RS_inc — aggregation trees run opposite the AG trees
+            agg_trees = [topology.aggregation_tree(hosts[op.dst], hosts)
+                         for op in rs_template]
+
+            def submit_rs(t):
+                return [eng.submit_tree(tree, shard_bytes, t_start=t, tag="rs")
+                        for tree in agg_trees]
+
+        rounds = max(p // max(n_chains, 1), 1)
+        return submit_ag, submit_rs, rounds * fabric.latency
+
+    if policy == "naive":
+        eng.add_link("shared", b)
+
+        def submit_ag(t):
+            # ring AG: (p-1)/p*L sent + received, all through the shared medium
+            return [eng.submit("shared", 2 * gather_bytes, t_start=t, tag="ag")]
+
+        def submit_rs(t):
+            return [eng.submit("shared", 2 * gather_bytes, t_start=t, tag="rs")]
+
+        return submit_ag, submit_rs, (p - 1) * fabric.latency
+
+    # mcast / split share the multicast AG; they differ in the RS side
+    eng.add_link("send", b)
+    eng.add_link("recv", b)
+
+    def submit_ag(t):
+        # AG_mc: receive-bound (send share 1/p — cost_model.mc_inc_share)
+        return [eng.submit("send", shard_bytes, t_start=t, tag="ag"),
+                eng.submit("recv", gather_bytes, t_start=t, tag="ag")]
+
+    if policy == "mcast":
+        def submit_rs(t):
+            # ring RS: full gather bytes in both directions, so its
+            # receive stream contends with AG_mc on the ejection link
+            return [eng.submit("send", gather_bytes, t_start=t, tag="rs"),
+                    eng.submit("recv", gather_bytes, t_start=t, tag="rs")]
+    else:
+        def submit_rs(t):
+            # RS_inc: send-bound — the switch reduces in-network, the
+            # node receives only its own reduced shard
+            return [eng.submit("send", gather_bytes, t_start=t, tag="rs"),
+                    eng.submit("recv", shard_bytes, t_start=t, tag="rs")]
+
+    rounds = max(p // max(n_chains, 1), 1)
+    return submit_ag, submit_rs, rounds * fabric.latency
+
+
+# ------------------------------------------------------------ analytic path
+
+
+def _exec_analytic(sched: Schedule, fabric: FabricParams,
+                   workers: WorkerParams) -> float:
+    """Closed-form oracle per schedule kind (core/protocol.py analytic_*).
+    Returns a float: the lossless lower bound the engines are tested
+    against (analytic <= fluid <= packet)."""
+    b, lat = fabric.b_link, fabric.latency
+    pool = workers.n_recv_workers * workers.thread_tput
+    hop = workers.rnr_barrier_hop      # the lower-bound property must hold
+    p, n = sched.p, sched.n_bytes      # for the CALLER's worker pool too
+    if sched.kind == "broadcast":
+        return protocol.analytic_bcast_time(p, n, b, lat, pool_rate=pool,
+                                            rnr_hop=hop)
+    if sched.kind == "allgather":
+        return protocol.analytic_allgather_time(
+            p, n, b, lat, n_chains=sched.meta["n_chains"], pool_rate=pool,
+            rnr_hop=hop)
+    if sched.kind == "ring_allgather":
+        return protocol.analytic_ring_allgather_time(p, n, b, lat)
+    if sched.kind == "reduce_scatter":
+        return protocol.analytic_ring_reduce_scatter_time(p, n, b, lat)
+    if sched.kind == "allreduce":
+        return protocol.analytic_allreduce_time(
+            p, n, b, lat, m=sched.meta["m"], pool_rate=pool, rnr_hop=hop)
+    raise NotImplementedError(f"no analytic form for kind={sched.kind}")
+
+
+# -------------------------------------------------------------- the executor
+
+
+def execute(sched: Schedule, fabric: FabricParams | None = None,
+            workers: WorkerParams | None = None,
+            rng: np.random.Generator | None = None, *,
+            fidelity: str = "fluid", topology=None, hosts=None, loss=None,
+            **kw):
+    """Lower ``sched`` onto the chosen fidelity and run it. One entry point
+    for every schedule kind — the per-collective flow construction that used
+    to be duplicated across simulator.py / engine.py / packet.py lives in
+    the lowering functions above. Extra keyword arguments are
+    fidelity-specific (packet: max_rounds / aggregate_nacks / dpa_fidelity /
+    dpa; fsdp_step: the compute keywords of engine.simulate_fsdp_step)."""
+    assert fidelity in FIDELITIES, fidelity
+    fabric = fabric or FabricParams()
+    workers = workers or WorkerParams()
+    rng = rng if rng is not None else np.random.default_rng(0)
+
+    if sched.kind == "fsdp_step":
+        from repro.core import engine as engine_mod  # deferred: imports us
+
+        meta = sched.meta
+        assert fidelity in ("fluid", "packet"), \
+            "fsdp_step supports fluid/packet fidelities"
+        return engine_mod.simulate_fsdp_step(
+            n_layers=meta["n_layers"], layer_bytes=meta["layer_bytes"],
+            p=sched.p, fabric=fabric, policy=meta["policy"],
+            n_chains=meta["n_chains"], topology=topology, hosts=hosts,
+            fidelity=fidelity, loss=loss, rng=rng, workers=workers,
+            schedule=sched, **meta.get("compute", {}), **kw)
+
+    if fidelity == "analytic":
+        assert loss is None and not kw, \
+            "the analytic oracle is lossless and takes no engine options"
+        # same footgun guard as the fluid path: the closed forms know
+        # nothing about routed fabrics — silently ignoring topology= would
+        # let a caller believe the fabric was modeled
+        assert topology is None and hosts is None, \
+            "the analytic oracle has no routed mode (topology=/hosts=)"
+        return _exec_analytic(sched, fabric, workers)
+
+    if fidelity == "fluid":
+        assert loss is None, "loss models require fidelity='packet'"
+        # same footgun: dpa_fidelity=/dpa=/... silently ignored would let a
+        # caller believe the event DPA (or any packet option) was simulated
+        assert not kw, f"{sorted(kw)} require fidelity='packet'"
+        if sched.kind == "broadcast":
+            return _fluid_broadcast(sched, fabric, workers, rng,
+                                    topology=topology, hosts=hosts)
+        if sched.kind == "allgather":
+            return _fluid_allgather(sched, fabric, workers, rng,
+                                    topology=topology, hosts=hosts)
+        if sched.kind in ("ring_allgather", "reduce_scatter"):
+            return _fluid_ring(sched, fabric, workers, rng,
+                               topology=topology, hosts=hosts)
+        if sched.kind == "allreduce":
+            return _exec_allreduce(sched, fabric, workers, rng,
+                                   fidelity=fidelity, topology=topology,
+                                   hosts=hosts, loss=loss, kw=kw)
+        raise NotImplementedError(sched.kind)
+
+    # fidelity == "packet"
+    if sched.kind == "broadcast":
+        from repro.core import packet as pk  # deferred: packet imports us
+
+        return pk.simulate_packet_broadcast(
+            sched.p, sched.n_bytes, fabric, workers, rng, sched.ops[0].root,
+            topology=topology, hosts=hosts, loss=loss, **kw)
+    if sched.kind == "allgather":
+        return _packet_allgather(sched, fabric, workers, rng,
+                                 topology=topology, hosts=hosts, loss=loss,
+                                 **kw)
+    if sched.kind in ("ring_allgather", "reduce_scatter"):
+        assert not kw, \
+            f"{sorted(kw)} not supported for ring schedules (RC transport)"
+        return _packet_ring(sched, fabric, workers, rng, topology=topology,
+                            hosts=hosts, loss=loss)
+    if sched.kind == "allreduce":
+        return _exec_allreduce(sched, fabric, workers, rng,
+                               fidelity=fidelity, topology=topology,
+                               hosts=hosts, loss=loss, kw=kw)
+    raise NotImplementedError(sched.kind)
+
+
+# ----------------------------------------------------------------- autotune
+
+
+def autotune_chains(schedule_builder, topology=None, *, p: int,
+                    n_bytes: int, fabric: FabricParams | None = None,
+                    workers: WorkerParams | None = None,
+                    candidates=None, fidelity: str = "fluid",
+                    seed: int = 0) -> tuple[int, dict[int, float]]:
+    """Sweep the chain count M for ``schedule_builder(p, n_bytes, m)`` on a
+    given fabric and pick the fastest (the per-fabric incast-control knob of
+    §IV-A: full parallelism on flat fabrics, fewer chains when the fabric or
+    the leaf pool is the bottleneck). Returns (best_m, {m: time}).
+    Candidates default to the divisors of P (uneven chains are legal too —
+    pass them explicitly)."""
+    fabric = fabric or FabricParams(jitter=0.0)
+    workers = workers or WorkerParams(n_recv_workers=8)
+    if candidates is None:
+        candidates = [m for m in range(1, p + 1) if p % m == 0]
+    times: dict[int, float] = {}
+    for m in candidates:
+        if topology is not None:
+            topology.reset()
+        sched = schedule_builder(p, n_bytes, m)
+        res = execute(sched, fabric, workers, np.random.default_rng(seed),
+                      fidelity=fidelity, topology=topology)
+        times[m] = res if isinstance(res, float) else res.time
+    best = min(times, key=lambda m: (times[m], m))
+    return best, times

@@ -1,10 +1,15 @@
 """Distributed Broadcast sequencer (paper §IV-A + Appendix A).
 
 The Allgather schedule is a round-robin composition of Broadcasts: the P
-participants are split into M parallel *broadcast chains* of length R = P/M.
-At schedule step i the active root group is
+participants are split into M parallel *broadcast chains*. When M divides P
+every chain has length R = P/M and at schedule step i the active root group is
 
     G^i = { P_i, P_{R+i}, P_{2R+i}, ..., P_{(M-1)R+i} }        (Appendix A)
+
+When M does not divide P the schedule generalizes with UNEVEN chains: the
+first P mod M chains carry ceil(P/M) ranks, the rest carry floor(P/M) (the
+last chains are shorter), so the step count is R = ceil(P/M) and the last
+steps activate fewer than M roots — every rank still broadcasts exactly once.
 
 Within a chain, members broadcast one-by-one (the activation signal travels
 along the chain); across chains everything is concurrent. M controls the
@@ -13,6 +18,10 @@ the analogue of "parallel multicast trees" is the set of ring directions, so
 the performance-optimal choice intra-pod is full parallelism (see
 core/collectives.py), while the faithful general-M schedule is used on the
 switched pod axis.
+
+This module is the pure rank arithmetic; the explicit schedule GRAPH (typed
+Multicast/Unicast/Reduce ops + Activation edges) that the engines execute is
+built from it by core/sched_ir.py.
 """
 from __future__ import annotations
 
@@ -26,31 +35,65 @@ class BroadcastStep:
     roots: tuple[int, ...]          # active broadcasting processes G^i
 
 
+def n_rounds(p: int, m: int) -> int:
+    """Schedule length R = ceil(P/M) (== P/M when M | P)."""
+    _check(p, m)
+    return -(-p // m)
+
+
+def chain_lengths(p: int, m: int) -> tuple[int, ...]:
+    """Ranks per chain: the first P mod M chains take the extra rank, so the
+    last chains are the shorter ones (even split when M | P)."""
+    _check(p, m)
+    r, rem = divmod(p, m)
+    return (r + 1,) * rem + (r,) * (m - rem)
+
+
+def _check(p: int, m: int) -> None:
+    if not 1 <= m <= p:
+        raise ValueError(f"need 1 <= M={m} <= P={p}")
+
+
+def _chain_starts(p: int, m: int) -> tuple[int, ...]:
+    starts, off = [], 0
+    for ln in chain_lengths(p, m):
+        starts.append(off)
+        off += ln
+    return tuple(starts)
+
+
 def chain_of(rank: int, p: int, m: int) -> int:
-    """Which chain a rank belongs to: chain m holds ranks [m*R, (m+1)*R)."""
-    r = p // m
-    return rank // r
+    """Which chain a rank belongs to: chain c holds the contiguous block
+    [start_c, start_c + len_c)."""
+    assert 0 <= rank < p, (rank, p)
+    starts = _chain_starts(p, m)
+    for c in range(m - 1, -1, -1):
+        if rank >= starts[c]:
+            return c
+    raise AssertionError(rank)
 
 
 def chain_members(m_idx: int, p: int, m: int) -> tuple[int, ...]:
-    r = p // m
-    return tuple(range(m_idx * r, (m_idx + 1) * r))
+    start = _chain_starts(p, m)[m_idx]
+    return tuple(range(start, start + chain_lengths(p, m)[m_idx]))
 
 
 def active_group(step: int, p: int, m: int) -> tuple[int, ...]:
-    """G^step per Appendix A."""
-    if p % m:
-        raise ValueError(f"P={p} must be divisible by M={m}")
-    r = p // m
+    """G^step per Appendix A, generalized to uneven chains: the step-th
+    member of every chain still that long. For M | P this is exactly
+    { step + j*R : j < M }."""
+    r = n_rounds(p, m)
     if not 0 <= step < r:
         raise ValueError(f"step {step} out of range [0, {r})")
-    return tuple(step + j * r for j in range(m))
+    starts = _chain_starts(p, m)
+    lens = chain_lengths(p, m)
+    return tuple(starts[c] + step for c in range(m) if lens[c] > step)
 
 
 def allgather_schedule(p: int, m: int) -> list[BroadcastStep]:
     """The full R-step schedule; every rank roots exactly once."""
-    r = p // m
-    return [BroadcastStep(i, active_group(i, p, m)) for i in range(r)]
+    return [BroadcastStep(i, active_group(i, p, m))
+            for i in range(n_rounds(p, m))]
 
 
 def activation_edges(p: int, m: int) -> list[tuple[int, int]]:
@@ -78,20 +121,29 @@ def subgroup_assignment(n_subgroups: int, buffer_len: int) -> list[tuple[int, in
 def worker_split(n_subgroups: int, n_participants: int) -> tuple[int, int]:
     """Send/receive worker allocation (§IV-C discrepancy rule): the receive
     path handles (P-1)x the send-path bytes, so receive workers scale with
-    subgroups while one send worker serves all send queues (paper example:
-    1 send worker / 4 recv workers at 16 procs, 4 subgroups)."""
-    return 1, n_subgroups
+    the multicast subgroup count — but never beyond the P-1 peers that can
+    be concurrently sending (extra workers past that would idle). One send
+    worker serves all send queues. Paper example: 16 procs, 4 subgroups ->
+    1 send worker / 4 receive workers."""
+    assert n_subgroups >= 1 and n_participants >= 1, (n_subgroups,
+                                                     n_participants)
+    return 1, max(min(n_subgroups, n_participants - 1), 1)
 
 
 def validate_schedule(p: int, m: int) -> None:
-    """Invariants the hypothesis tests rely on."""
+    """Invariants the hypothesis tests rely on (uneven chains included)."""
     sched = allgather_schedule(p, m)
-    r = p // m
+    r = n_rounds(p, m)
+    lens = chain_lengths(p, m)
     assert len(sched) == r
+    assert sum(lens) == p
+    assert max(lens) - min(lens) <= 1           # last chains at most 1 shorter
     seen: set[int] = set()
     for st in sched:
-        assert len(st.roots) == m
-        # one root per chain in every step
-        assert {chain_of(x, p, m) for x in st.roots} == set(range(m))
+        live = {c for c in range(m) if lens[c] > st.index}
+        assert len(st.roots) == len(live)
+        # one root per still-active chain in every step
+        assert {chain_of(x, p, m) for x in st.roots} == live
+        assert not (set(st.roots) & seen)
         seen.update(st.roots)
     assert seen == set(range(p)), "every rank must broadcast exactly once"

@@ -1,5 +1,13 @@
-"""Discrete-event timing simulator for the reliable multicast Broadcast /
-Allgather protocol (paper §III/§IV/§VI).
+"""Protocol-level timing simulators (paper §III/§IV/§VI) — facade layer.
+
+``simulate_broadcast`` and ``simulate_allgather`` are thin facades over the
+Collective Schedule IR (core/sched_ir.py): each call builds the explicit
+schedule graph (``build_broadcast_tree`` / ``build_allgather`` — typed
+Multicast ops + §IV-A Activation edges) and hands it to ``sched_ir.execute``,
+which lowers it onto the chosen fidelity. The per-collective flow
+construction that used to live in this module IS the IR's fluid lowering
+now; the facades reproduce the pre-IR results exactly (pinned by
+tests/test_sched_ir.py).
 
 Models, per chunk: root injection at send-link rate, fabric latency + adaptive
 -routing jitter (out-of-order delivery), Bernoulli fabric drops, the leaf
@@ -7,11 +15,6 @@ worker pool (CPU or DPA threads; service = chunk/thread_tput), staging-ring
 occupancy (RNR drops), cutoff timer, fetch-ring recovery, RNR barrier and the
 final ring handshake. Produces the phase breakdown of Fig. 10, the throughput
 curves of Fig. 11 and the drop-recovery behaviour the property tests verify.
-
-The bandwidth timing (root injection, per-round leaf ingest under M concurrent
-chains) runs on the shared fluid engine (core/engine.py); the leaf receive
-queue uses its vectorized worker pool. FabricParams / WorkerParams live in
-engine.py and are re-exported here for backwards compatibility.
 
 Both simulators take an optional ``topology=`` (core/topology.py FatTree /
 Torus2D): ranks are then placed on real hosts (``hosts=`` ids, default
@@ -26,29 +29,30 @@ agree on line rate.
 
 Both simulators also take ``fidelity=``:
 
-  "fluid"  (default) this module's model: drops are an aggregate Bernoulli
+  "fluid"  (default) the fluid lowering: drops are an aggregate Bernoulli
            thinning of the arrival stream and recovery is the closed-form
            fetch-ring term — fast, but the reliability protocol itself is
            not exercised.
-  "packet" the core/packet.py engine: MTU packets, per-Link loss models
-           (``loss=`` — i.i.d. rate, or a packet.LossModel such as
-           GilbertElliottLoss), per-receiver packed bitmaps, NACK
-           aggregation and multicast retransmission rounds on the DPA
-           worker pool. At loss 0 it reproduces the fluid times exactly
-           (tests/test_packet.py pins the equivalence). The packet engine's
-           DPA itself has two fidelities (``dpa_fidelity="scalar"|"event"``,
-           forwarded): the scalar worker-pool rate, or the event-level
-           progress-engine simulator of core/dpa_engine.py (per-CQE
-           compute/stall cycles, per-core caps, LLC occupancy, protocol
-           work stealing receive cycles).
+  "packet" the packet lowering (core/packet.py machinery): MTU packets,
+           per-Link loss models (``loss=`` — i.i.d. rate, or a
+           packet.LossModel such as GilbertElliottLoss), per-receiver packed
+           bitmaps, NACK aggregation and multicast retransmission rounds on
+           the DPA worker pool. At loss 0 it reproduces the fluid times
+           exactly (tests/test_packet.py pins the equivalence). The packet
+           engine's DPA itself has two fidelities
+           (``dpa_fidelity="scalar"|"event"``, forwarded): the scalar
+           worker-pool rate, or the event-level progress-engine simulator of
+           core/dpa_engine.py (per-CQE compute/stall cycles, per-core caps,
+           LLC occupancy, protocol work stealing receive cycles).
+
+``n_chains`` no longer has to divide P: the Appendix-A schedule generalizes
+to uneven chains (the last chains are shorter — core/schedule.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-
 import numpy as np
 
-from repro.core import protocol
+from repro.core import sched_ir
 from repro.core.engine import (  # noqa: F401  (re-exported public API)
     Engine,
     FabricParams,
@@ -56,49 +60,15 @@ from repro.core.engine import (  # noqa: F401  (re-exported public API)
     worker_pool_completion,
     workers_from_dpa,
 )
+from repro.core.sched_ir import (  # noqa: F401  (re-exported public API)
+    AllgatherResult,
+    BcastResult,
+    PhaseBreakdown,
+    _chunking,
+    _rnr_barrier,
+)
 
 FIDELITIES = ("fluid", "packet")
-
-
-@dataclass
-class PhaseBreakdown:
-    rnr_sync: float = 0.0
-    multicast: float = 0.0
-    reliability: float = 0.0
-    handshake: float = 0.0
-
-    def total(self) -> float:
-        return self.rnr_sync + self.multicast + self.reliability + self.handshake
-
-
-@dataclass
-class BcastResult:
-    completion: np.ndarray            # per-leaf completion time (s)
-    phases: PhaseBreakdown
-    delivered_fast: int
-    recovered: int
-    rnr_drops: int
-    bytes_fast: int
-    bytes_recovery: int
-    bytes_total: int                  # conservation: fast + recovery == total
-    link_bytes: dict[str, float] = field(default_factory=dict)
-    # ^ routed mode only: live per-fabric-link bytes from the same engine run
-
-    @property
-    def time(self) -> float:
-        return float(self.completion.max(initial=0.0))
-
-
-def _chunking(n_bytes: int, mtu: int) -> tuple[int, int]:
-    n_chunks = max(-(-n_bytes // mtu), 1)
-    chunk = min(mtu, n_bytes) if n_bytes else mtu
-    return n_chunks, chunk
-
-
-def _rnr_barrier(p: int, fabric: FabricParams, workers: WorkerParams) -> float:
-    # RNR barrier: recursive doubling (§V-A)
-    rounds = int(np.ceil(np.log2(max(p, 2))))
-    return rounds * (fabric.latency + workers.rnr_barrier_hop)
 
 
 def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
@@ -106,117 +76,20 @@ def simulate_broadcast(p: int, n_bytes: int, fabric: FabricParams,
                        root: int = 0, *, topology=None, hosts=None,
                        fidelity: str = "fluid", loss=None,
                        **packet_kw) -> BcastResult:
-    """Reliable multicast Broadcast. Without ``topology`` the datapath is the
-    abstract root-injection link of the original model; with a
-    core/topology.py Topology the root's stream is ONE multicast tree flow
-    whose rate is set by the most-contended fabric link (switch replication),
-    per-leaf latency scales with routed hop count, and result.link_bytes
-    carries the per-link switch-port traffic of the same engine run.
-    ``fidelity="packet"`` replays the run at MTU granularity with per-Link
-    loss injection and NACK/retransmission recovery (core/packet.py)."""
+    """Reliable multicast Broadcast: build_broadcast_tree + execute.
+    Without ``topology`` the datapath is the abstract root-injection link of
+    the original model; with a core/topology.py Topology the root's stream
+    is ONE multicast tree flow whose rate is set by the most-contended
+    fabric link (switch replication), per-leaf latency scales with routed
+    hop count, and result.link_bytes carries the per-link switch-port
+    traffic of the same engine run. ``fidelity="packet"`` replays the run at
+    MTU granularity with per-Link loss injection and NACK/retransmission
+    recovery."""
     assert fidelity in FIDELITIES, fidelity
-    if fidelity == "packet":
-        from repro.core import packet  # deferred: packet imports this module
-
-        return packet.simulate_packet_broadcast(
-            p, n_bytes, fabric, workers, rng, root, topology=topology,
-            hosts=hosts, loss=loss, **packet_kw)
-    assert loss is None, "loss models require fidelity='packet'"
-    # same footgun: dpa_fidelity=/dpa=/... silently ignored would let a
-    # caller believe the event DPA (or any packet option) was simulated
-    assert not packet_kw, \
-        f"{sorted(packet_kw)} require fidelity='packet'"
-    n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
-    t_rnr = _rnr_barrier(p, fabric, workers)
-
-    eng = Engine()
-    if topology is not None:
-        hosts = list(hosts) if hosts is not None else list(range(p))
-        assert len(hosts) == p, (len(hosts), p)
-        topology.reset()
-        tree = topology.multicast_tree(hosts[root], hosts)
-        flow = eng.submit_tree(tree, n_chunks * chunk, t_start=t_rnr, tag="mcast")
-        hop_lat = [len(topology.route(hosts[root], hosts[leaf])) * fabric.latency
-                   for leaf in range(p)]
-    else:
-        # abstract mode: a single flow on the root's send link, one hop
-        eng.add_link("root.send", fabric.b_link)
-        flow = eng.submit("root.send", n_chunks * chunk, t_start=t_rnr)
-        hop_lat = [fabric.latency] * p
-    eng.run()
-    inject = flow.chunk_times(n_chunks, chunk)
-    service = chunk / workers.thread_tput
-
-    completion = np.zeros(p)
-    recovered_total = 0
-    rnr_total = 0
-    fast_total = 0
-    t_mcast_end = t_rnr
-    t_rel_end = 0.0
-
-    cutoff = t_rnr + protocol.cutoff_time(n_bytes, fabric.b_link, fabric.alpha)
-
-    for leaf in range(p):
-        if leaf == root:
-            completion[leaf] = inject[-1]
-            continue
-        delay = hop_lat[leaf] + rng.uniform(0.0, fabric.jitter, size=n_chunks)
-        dropped = rng.random(n_chunks) < fabric.p_drop
-        arrivals = np.sort((inject + delay)[~dropped])
-        done, rnr = worker_pool_completion(
-            arrivals, workers.n_recv_workers, service, workers.staging_chunks
-        )
-        rnr_total += rnr
-        fast = n_chunks - int(dropped.sum()) - rnr
-        fast_total += fast
-        t_fast = done[-1] if done.size else t_rnr
-        missing = int(dropped.sum()) + rnr
-        if missing:
-            # fetch ring (§III-C): wait for cutoff, then selective RDMA reads
-            # from the left neighbour (holder is >= left neighbour or root).
-            t0 = max(t_fast, cutoff)
-            t_fetch = t0 + missing * (2 * fabric.latency + chunk / fabric.b_link)
-            recovered_total += missing
-            completion[leaf] = t_fetch
-            t_rel_end = max(t_rel_end, t_fetch - t0)
-        else:
-            completion[leaf] = t_fast
-        t_mcast_end = max(t_mcast_end, t_fast)
-
-    # final handshake: send final to left, need final from right (§III-C)
-    shifted = np.roll(completion, -1)
-    completion = np.maximum(completion, shifted) + fabric.latency
-
-    phases = PhaseBreakdown(
-        rnr_sync=t_rnr,
-        multicast=t_mcast_end - t_rnr,
-        reliability=t_rel_end,
-        handshake=fabric.latency,
-    )
-    return BcastResult(
-        completion=completion,
-        phases=phases,
-        delivered_fast=fast_total,
-        recovered=recovered_total,
-        rnr_drops=rnr_total,
-        bytes_fast=fast_total * chunk,
-        bytes_recovery=recovered_total * chunk,
-        bytes_total=(p - 1) * n_chunks * chunk,
-        link_bytes=eng.link_bytes() if topology is not None else {},
-    )
-
-
-@dataclass
-class AllgatherResult:
-    time: float
-    phases: PhaseBreakdown
-    recovered: int
-    bytes_fast: int
-    bytes_recovery: int
-    bytes_total: int
-    per_rank_recv_tput: float         # (P-1)*N / time  (Fig. 11 metric)
-    link_bytes: dict[str, float] = field(default_factory=dict)
-    # ^ routed mode only: live per-fabric-link bytes from the same engine run
+    sched = sched_ir.build_broadcast_tree(p, n_bytes, root)
+    return sched_ir.execute(sched, fabric, workers, rng, fidelity=fidelity,
+                            topology=topology, hosts=hosts, loss=loss,
+                            **packet_kw)
 
 
 def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
@@ -224,114 +97,24 @@ def simulate_allgather(p: int, n_bytes: int, fabric: FabricParams,
                        n_chains: int = 1, *, topology=None,
                        hosts=None, fidelity: str = "fluid", loss=None,
                        **packet_kw) -> AllgatherResult:
-    """Allgather = R sequential rounds of M concurrent Broadcasts (§IV-A).
-    Within a round the M chain roots multicast concurrently; the leaf receive
-    path (link + worker pool) is the shared bottleneck — modeled as M flows
-    contending for the leaf's ejection link in the fluid engine; rounds are
-    chained by the activation signal.
+    """Allgather = R generations of up to M concurrent Broadcasts (§IV-A):
+    build_allgather + execute. Within a generation the chain roots multicast
+    concurrently; the leaf receive path (link + worker pool) is the shared
+    bottleneck; generations are chained by the Activation edges of the
+    schedule graph.
 
-    With ``topology=`` the M chains are real multicast tree flows rooted at
-    the Appendix-A round roots G^r = {r, R+r, 2R+r, ...} placed on fabric
-    hosts: they collide on shared edge/agg/core links and on every leaf's
-    ejection link, and result.link_bytes returns the same run's switch-port
-    byte counters (the Fig. 12 measurement, no static pass).
-    ``fidelity="packet"`` replays the rounds at MTU granularity with
-    per-Link loss and per-chain NACK/retransmission recovery
-    (core/packet.py)."""
+    With ``topology=`` the chains are real multicast tree flows rooted at
+    the Appendix-A round roots placed on fabric hosts: they collide on
+    shared edge/agg/core links and on every leaf's ejection link, and
+    result.link_bytes returns the same run's switch-port byte counters (the
+    Fig. 12 measurement, no static pass). ``fidelity="packet"`` replays the
+    generations at MTU granularity with per-Link loss and per-chain
+    NACK/retransmission recovery."""
     assert fidelity in FIDELITIES, fidelity
-    if fidelity == "packet":
-        from repro.core import packet  # deferred: packet imports this module
-
-        return packet.simulate_packet_allgather(
-            p, n_bytes, fabric, workers, rng, n_chains, topology=topology,
-            hosts=hosts, loss=loss, **packet_kw)
-    assert loss is None, "loss models require fidelity='packet'"
-    assert not packet_kw, \
-        f"{sorted(packet_kw)} require fidelity='packet'"
-    assert p % n_chains == 0
-    rounds = p // n_chains
-    n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
-    service = chunk / workers.thread_tput
-
-    t_rnr = _rnr_barrier(p, fabric, workers)
-
-    eng = Engine()
-    if topology is not None:
-        hosts = list(hosts) if hosts is not None else list(range(p))
-        assert len(hosts) == p, (len(hosts), p)
-        topology.reset()
-    else:
-        eng.add_link("leaf.recv", fabric.b_link)
-
-    t = t_rnr
-    recovered_total = 0
-    fast_bytes = 0
-    rec_bytes = 0
-    mcast_time = 0.0
-    rel_time = 0.0
-    for r in range(rounds):
-        m = n_chains
-        total_chunks = m * n_chunks
-        if topology is not None:
-            # Appendix A: round roots G^r multicast concurrently through the
-            # fabric; each tree flow's rate is min-share over its edges, so
-            # chains genuinely collide in the core and at every ejection port
-            roots = [hosts[i] for i in range(p) if i % rounds == r]
-            flows = [
-                eng.submit_tree(topology.multicast_tree(root, hosts),
-                                n_chunks * chunk, t_start=t, tag=f"chain{root}")
-                for root in roots
-            ]
-        else:
-            # m chain roots inject concurrently; the leaf's ejection link is
-            # the shared resource — m equal flows, each chain rate b_link/m
-            flows = [
-                eng.submit("leaf.recv", n_chunks * chunk, t_start=t, tag=f"chain{c}")
-                for c in range(m)
-            ]
-        eng.run()
-        arrive_spacing = np.sort(
-            np.concatenate([f.chunk_times(n_chunks, chunk) for f in flows])
-        )
-        delay = fabric.latency + rng.uniform(0.0, fabric.jitter, size=total_chunks)
-        dropped = rng.random(total_chunks) < fabric.p_drop
-        arrivals = np.sort((arrive_spacing + delay)[~dropped])
-        done, rnr = worker_pool_completion(
-            arrivals, workers.n_recv_workers, service, workers.staging_chunks
-        )
-        t_fast = done[-1] if done.size else t
-        missing = int(dropped.sum()) + rnr
-        cutoff = t + protocol.cutoff_time(m * n_bytes, fabric.b_link,
-                                          fabric.alpha)
-        t_round_end = t_fast
-        if missing:
-            t0 = max(t_fast, cutoff)
-            t_round_end = t0 + missing * (2 * fabric.latency + chunk / fabric.b_link)
-            rel_time += t_round_end - t0
-            recovered_total += missing
-        mcast_time += max(t_fast - t, 0.0)
-        fast_bytes += (total_chunks - missing) * chunk
-        rec_bytes += missing * chunk
-        # activation signal to the next root in every chain; the engine clock
-        # can only run ahead of t_round_end if every chunk was dropped
-        t = max(t_round_end + fabric.latency, eng.now)
-
-    t_done = t + fabric.latency  # final handshake
-    phases = PhaseBreakdown(
-        rnr_sync=t_rnr, multicast=mcast_time, reliability=rel_time,
-        handshake=fabric.latency,
-    )
-    total = (p - 1) * n_bytes
-    return AllgatherResult(
-        time=t_done,
-        phases=phases,
-        recovered=recovered_total,
-        bytes_fast=fast_bytes,
-        bytes_recovery=rec_bytes,
-        bytes_total=p * n_chunks * chunk,
-        per_rank_recv_tput=total / t_done,
-        link_bytes=eng.link_bytes() if topology is not None else {},
-    )
+    sched = sched_ir.build_allgather(p, n_bytes, n_chains)
+    return sched_ir.execute(sched, fabric, workers, rng, fidelity=fidelity,
+                            topology=topology, hosts=hosts, loss=loss,
+                            **packet_kw)
 
 
 def sweep_phase_breakdown(sizes: list[int], nodes: list[int],

@@ -1,0 +1,384 @@
+"""Collective Schedule IR: structural properties of the op DAG, the
+builder->executor byte conservation per fidelity, the cross-fidelity
+metamorphic ordering for the NEW collectives (reduce-scatter, allreduce),
+and the acceptance pins that the facade entry points reproduce the
+pre-refactor engine results exactly at loss 0."""
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core import protocol, sched_ir
+from repro.core import schedule as seq
+from repro.core.engine import simulate_fsdp_step
+from repro.core.sched_ir import (
+    FabricParams,
+    WorkerParams,
+    build_allgather,
+    build_allreduce,
+    build_broadcast_tree,
+    build_fsdp_step,
+    build_ring_allgather,
+    build_ring_reduce_scatter,
+    execute,
+    payload_bytes,
+)
+from repro.core.simulator import (
+    _chunking,
+    simulate_allgather,
+    simulate_broadcast,
+)
+from repro.core.topology import FatTree
+
+FAB = FabricParams(jitter=0.0)
+WK = WorkerParams(n_recv_workers=8)
+
+
+def pm_pairs():
+    """(P, M) pairs INCLUDING uneven chains (M does not divide P)."""
+    return st.integers(2, 48).flatmap(
+        lambda p: st.integers(1, p).map(lambda m: (p, m))
+    )
+
+
+# ------------------------------------------------------------- IR structure
+
+
+@given(pm_pairs())
+@settings(max_examples=60, deadline=None)
+def test_allgather_every_rank_roots_exactly_once(pm):
+    p, m = pm
+    sched = build_allgather(p, 1 << 14, m)
+    sched_ir.validate(sched)                 # roots-once + rounds==Appendix A
+    assert sorted(op.root for op in sched.ops) == list(range(p))
+    gens = sched.rounds()
+    assert len(gens) == seq.n_rounds(p, m)
+    assert len(gens[0]) == m                 # every chain starts in round 0
+
+
+@given(pm_pairs())
+@settings(max_examples=40, deadline=None)
+def test_activation_dag_matches_chain_signal(pm):
+    """The Activation edges ARE the §IV-A chain signal: one edge per
+    non-head chain member, from its predecessor's op."""
+    p, m = pm
+    sched = build_allgather(p, 1 << 14, m)
+    assert len(sched.activation) == p - m
+    for a, b in sched.activation:
+        fa, fb = sched.ops[a].root, sched.ops[b].root
+        assert seq.chain_of(fa, p, m) == seq.chain_of(fb, p, m)
+        assert fb == fa + 1
+
+
+def test_rounds_rejects_cycles():
+    sched = sched_ir.Schedule(
+        "allgather", 2, 64,
+        (sched_ir.Multicast(0, (0, 1), 64), sched_ir.Multicast(1, (0, 1), 64)),
+        activation=((0, 1), (1, 0)))
+    with pytest.raises(AssertionError):
+        sched.rounds()
+
+
+@pytest.mark.parametrize("build", [
+    lambda p: build_broadcast_tree(p, 1 << 14),
+    lambda p: build_allgather(p, 1 << 14, 4),
+    lambda p: build_ring_allgather(p, 1 << 14),
+    lambda p: build_ring_reduce_scatter(p, 1 << 16),
+    lambda p: build_allreduce(p, 1 << 16, m=p),
+    lambda p: build_allreduce(p, 1 << 16),
+    lambda p: build_fsdp_step(p=p, n_layers=3, layer_bytes=1e6,
+                              policy="split"),
+])
+def test_builders_validate(build):
+    sched = build(8)
+    sched_ir.validate(sched)
+
+
+def test_fsdp_builder_op_shapes():
+    p, n_layers = 8, 3
+    for policy, ag_t, rs_t in [("naive", sched_ir.Unicast, sched_ir.Reduce),
+                               ("mcast", sched_ir.Multicast, sched_ir.Reduce),
+                               ("split", sched_ir.Multicast, sched_ir.Reduce)]:
+        sched = build_fsdp_step(p=p, n_layers=n_layers, layer_bytes=8e6,
+                                policy=policy)
+        # forward AG per layer + backward AG + RS per layer, p ops each
+        assert len(sched.ops) == 3 * p * n_layers
+        ags = [op for op in sched.ops if isinstance(op, ag_t)]
+        rss = [op for op in sched.ops if isinstance(op, sched_ir.Reduce)]
+        assert len(ags) >= 2 * p * n_layers and len(rss) == p * n_layers
+        if policy == "split":     # in-network aggregation: every src reduced
+            assert all(len(op.srcs) == p - 1 for op in rss)
+        else:                     # ring step: single-source Reduce edges
+            assert all(len(op.srcs) == 1 for op in rss)
+
+
+# -------------------------------------------------------- byte conservation
+
+
+@pytest.mark.parametrize("p,m", [(8, 2), (16, 4), (6, 4)])
+def test_allgather_packet_bytes_conserve_builder_to_executor(p, m):
+    """Builder-side payload (chunk-rounded) == packet executor bytes_total,
+    and fast + recovery == total on completion."""
+    n = 1 << 18
+    sched = build_allgather(p, n, m)
+    r = execute(sched, FAB, WK, np.random.default_rng(0), fidelity="packet")
+    n_chunks, chunk = _chunking(n, FAB.mtu)
+    expect = sum((len(op.group) - 1) * n_chunks * chunk for op in sched.ops)
+    assert r.bytes_total == expect == p * (p - 1) * n_chunks * chunk
+    assert r.bytes_fast + r.bytes_recovery == r.bytes_total
+
+
+def test_ring_routed_bytes_conserve_builder_to_executor():
+    """Routed ring lowering: every host's fabric uplink carries exactly its
+    schedule ops' payload — total injected == payload_bytes(schedule)."""
+    p, n = 16, 1 << 18
+    topo = FatTree(k=8, n_hosts=p, b_host=FAB.b_link)
+    sched = build_ring_reduce_scatter(p, n)
+    r = execute(sched, FAB, WK, np.random.default_rng(0), topology=topo)
+    uplinks = {k: v for k, v in r.link_bytes.items()
+               if k.startswith("h") and v}
+    assert sum(uplinks.values()) == pytest.approx(payload_bytes(sched),
+                                                  rel=1e-9)
+    assert r.bytes_total == pytest.approx(payload_bytes(sched))
+
+
+def test_allreduce_bytes_compose_rs_and_ag():
+    p, n = 8, 1 << 20
+    r = execute(build_allreduce(p, n, m=p), FAB, WK,
+                np.random.default_rng(0))
+    assert r.bytes_total == r.rs.bytes_total + r.ag.bytes_total
+    assert r.time == r.rs_time + r.ag_time
+
+
+# ------------------------------------- cross-fidelity metamorphic ordering
+# (mirrors test_packet.py's grid, for the NEW reduce-scatter / allreduce)
+
+
+@pytest.mark.parametrize("p", [4, 16])
+@pytest.mark.parametrize("loss", [0.0, 1e-3, 1e-2])
+@pytest.mark.parametrize("n_bytes", [1 << 17, 1 << 20])
+def test_reduce_scatter_fidelity_ordering(p, loss, n_bytes):
+    """analytic <= fluid <= packet for the ring reduce-scatter, with the
+    packet loss-0 leg reproducing the fluid lowering exactly."""
+    sched = build_ring_reduce_scatter(p, n_bytes)
+    ana = execute(sched, FAB, WK, fidelity="analytic")
+    assert ana == protocol.analytic_ring_reduce_scatter_time(
+        p, n_bytes, FAB.b_link, FAB.latency)
+    fluid = execute(sched, FAB, WK, np.random.default_rng(0))
+    pkt0 = execute(sched, FAB, WK, np.random.default_rng(0),
+                   fidelity="packet")
+    pkt = execute(sched, FAB, WK, np.random.default_rng(0),
+                  fidelity="packet", loss=loss)
+    assert ana <= fluid.time * (1.0 + 1e-12)
+    assert fluid.time == pkt0.time                   # loss-0 leg is EXACT
+    assert fluid.time <= pkt.time * (1.0 + 1e-12)
+    if loss > 0.0:
+        assert pkt.time > fluid.time                 # loss only adds time
+        assert pkt.bytes_recovery > 0
+
+
+@pytest.mark.parametrize("p", [4, 16])
+@pytest.mark.parametrize("loss", [0.0, 1e-3, 1e-2])
+@pytest.mark.parametrize("n_bytes", [1 << 17, 1 << 20])
+@pytest.mark.parametrize("m", [None, "full"])
+def test_allreduce_fidelity_ordering(p, loss, n_bytes, m):
+    """analytic <= fluid <= packet for Allreduce = RS∘AG, both the ring-AG
+    and the paper's multicast-AG composition; the multicast AG leg runs the
+    real NACK/retransmission protocol engine under loss."""
+    m = p if m == "full" else None
+    sched = build_allreduce(p, n_bytes, m=m)
+    ana = execute(sched, FAB, WK, fidelity="analytic")
+    fluid = execute(sched, FAB, WK, np.random.default_rng(0))
+    pkt0 = execute(sched, FAB, WK, np.random.default_rng(0),
+                   fidelity="packet")
+    pkt = execute(sched, FAB, WK, np.random.default_rng(0),
+                  fidelity="packet", loss=loss)
+    assert ana <= fluid.time * (1.0 + 1e-12)
+    assert fluid.time == pytest.approx(pkt0.time, rel=1e-12)
+    assert fluid.time <= pkt.time * (1.0 + 1e-12)
+    shard_chunks = max(n_bytes // p // 4096, 1)
+    if m is not None and loss * p * (p - 1) * shard_chunks > 20:
+        assert pkt.ag.recovered > 0     # the AG leg exercised real recovery
+
+
+# --------------------------------------------------------- uneven chains
+
+
+@pytest.mark.parametrize("p,m", [(6, 4), (10, 3), (7, 2)])
+def test_uneven_chains_all_fidelities(p, m):
+    """M need not divide P: the last chains are shorter, the engines agree
+    to float tolerance (per-leaf vs merged pool summation order), and the
+    packet run completes + conserves."""
+    n = 1 << 16
+    fl = simulate_allgather(p, n, FAB, WK, np.random.default_rng(0),
+                            n_chains=m)
+    pk = simulate_allgather(p, n, FAB, WK, np.random.default_rng(0),
+                            n_chains=m, fidelity="packet")
+    assert fl.time == pytest.approx(pk.time, rel=1e-9)
+    assert pk.completed
+    assert pk.bytes_fast + pk.bytes_recovery == pk.bytes_total
+    # more chains => fewer activation generations => no slower (same bytes)
+    full = simulate_allgather(p, n, FAB, WK, np.random.default_rng(0),
+                              n_chains=p)
+    assert full.time <= fl.time * (1.0 + 1e-12)
+
+
+def test_uneven_chains_round_structure():
+    sched = build_allgather(6, 1 << 14, 4)       # chains (2, 2, 1, 1)
+    gens = sched.rounds()
+    assert [len(g) for g in gens] == [4, 2]
+    assert [sched.ops[i].root for i in gens[0]] == [0, 2, 4, 5]
+    assert [sched.ops[i].root for i in gens[1]] == [1, 3]
+
+
+# ------------------------------------------------- facade acceptance pins
+# Pre-refactor engine outputs, captured at the seed commit (PR 4). The IR
+# facades must reproduce them EXACTLY — same arithmetic, same rng draws.
+
+
+def test_facades_reproduce_prerefactor_times_exactly():
+    wk = WorkerParams(n_recv_workers=8)
+    fab0 = FabricParams(jitter=0.0)
+    fabj = FabricParams()                        # default jitter: rng order
+    cases = [
+        (simulate_broadcast(8, 1 << 20, fab0, wk, np.random.default_rng(0)),
+         5.717663562800481e-05),
+        (simulate_broadcast(8, 1 << 20, fab0, wk, np.random.default_rng(0),
+                            fidelity="packet"), 5.717663562800481e-05),
+        (simulate_allgather(16, 1 << 18, fab0, wk, np.random.default_rng(0),
+                            n_chains=4), 0.0002027065425120192),
+        (simulate_allgather(16, 1 << 18, fab0, wk, np.random.default_rng(0),
+                            n_chains=4, fidelity="packet"),
+         0.0002027065425120192),
+        (simulate_broadcast(8, 1 << 20, fabj, wk, np.random.default_rng(5)),
+         5.815140294963682e-05),
+        (simulate_broadcast(8, 1 << 20, FabricParams(p_drop=0.01), wk,
+                            np.random.default_rng(5)),
+         0.00012942607999999998),
+        (simulate_allgather(16, 1 << 18, fabj, wk, np.random.default_rng(5),
+                            n_chains=4), 0.00020617006355919465),
+        (simulate_allgather(16, 1 << 18, fabj, wk, np.random.default_rng(5),
+                            n_chains=4, fidelity="packet", loss=0.02),
+         0.0006192941191779647),
+        (simulate_broadcast(16, 1 << 20, fabj, wk, np.random.default_rng(5),
+                            fidelity="packet", loss=0.02),
+         0.00017734423415138832),
+    ]
+    for i, (res, expect) in enumerate(cases):
+        assert float(res.time) == expect, (i, res.time, expect)
+
+
+def test_facades_reproduce_prerefactor_routed_times_exactly():
+    wk = WorkerParams(n_recv_workers=8)
+    fab = FabricParams(jitter=0.0)
+    topo = FatTree(k=8, n_hosts=16, b_host=fab.b_link)
+    t = simulate_allgather(16, 1 << 18, fab, wk, np.random.default_rng(0),
+                           n_chains=16, topology=topo).time
+    assert float(t) == 0.00017875359125600957
+    topo = FatTree(k=8, n_hosts=16, b_host=fab.b_link)
+    t = simulate_allgather(16, 1 << 18, fab, wk, np.random.default_rng(7),
+                           n_chains=8, topology=topo, fidelity="packet",
+                           loss=0.01).time
+    assert float(t) == 0.00046639386498387257
+
+
+def test_fsdp_facade_reproduces_prerefactor_exactly():
+    expect = {
+        "naive": (0.06037144, 0.7394688614351421),
+        "mcast": (0.03172288, 0.5041862529505519),
+        "split": (0.026276479999999998, 0.40141754146674136),
+    }
+    for policy, (t, bub) in expect.items():
+        r = simulate_fsdp_step(n_layers=4, layer_bytes=64e6, p=16,
+                               policy=policy)
+        assert (r.step_time, r.bubble_fraction) == (t, bub), policy
+    routed = {
+        "naive": 0.031792879999999996,
+        "mcast": 0.030412159999999997,
+        "split": 0.026276479999999994,
+    }
+    topo = FatTree(k=8, n_hosts=16, b_host=FabricParams().b_link)
+    for policy, t in routed.items():
+        topo.reset()
+        r = simulate_fsdp_step(n_layers=4, layer_bytes=64e6, p=16,
+                               policy=policy, topology=topo)
+        assert r.step_time == t, policy
+    r = simulate_fsdp_step(n_layers=4, layer_bytes=64e6, p=16,
+                           policy="mcast", fidelity="packet", loss=0.005,
+                           rng=np.random.default_rng(2))
+    assert r.step_time == 0.03233466152988904
+
+
+# ------------------------------------------------------------- autotune
+
+
+def test_autotune_chains_prefers_full_parallelism_on_flat_fabric():
+    best, times = sched_ir.autotune_chains(
+        build_allgather, p=16, n_bytes=1 << 18, fabric=FAB, workers=WK)
+    assert best == 16                            # flat: more chains, less sync
+    assert set(times) == {1, 2, 4, 8, 16}        # divisors of P
+    assert times[16] <= min(times.values()) + 1e-18
+
+
+def test_autotune_chains_routed_and_analytic():
+    topo = FatTree(k=8, n_hosts=16, b_host=FAB.b_link)
+    best, times = sched_ir.autotune_chains(
+        build_allgather, topo, p=16, n_bytes=1 << 18, fabric=FAB,
+        workers=WK, candidates=(2, 4, 16))
+    assert best in (2, 4, 16) and len(times) == 3
+    best_a, _ = sched_ir.autotune_chains(
+        build_allgather, p=16, n_bytes=1 << 18, fabric=FAB, workers=WK,
+        fidelity="analytic")
+    assert best_a == 16                          # fewer activation rounds
+
+
+# --------------------------------------------------------- executor guards
+
+
+def test_execute_fsdp_schedule_matches_entry_point():
+    """execute(build_fsdp_step(...)) hands the built graph to the timeline
+    executor — identical result to calling simulate_fsdp_step directly."""
+    sched = build_fsdp_step(p=16, n_layers=4, layer_bytes=64e6,
+                            policy="split")
+    r = sched_ir.execute(sched, FabricParams(), WorkerParams())
+    d = simulate_fsdp_step(n_layers=4, layer_bytes=64e6, p=16,
+                           policy="split")
+    assert (r.step_time, r.bubble_fraction) == (d.step_time,
+                                                d.bubble_fraction)
+
+
+def test_analytic_respects_caller_worker_params():
+    """The analytic oracle must stay a lower bound for the CALLER's worker
+    pool too (rnr_barrier_hop forwarded, not the default)."""
+    wk = WorkerParams(n_recv_workers=8, rnr_barrier_hop=0.0)
+    for sched in (build_broadcast_tree(16, 1 << 12),
+                  build_allgather(16, 1 << 12, 4),
+                  build_allreduce(16, 1 << 16, m=16)):
+        ana = execute(sched, FAB, wk, fidelity="analytic")
+        fl = execute(sched, FAB, wk, np.random.default_rng(0))
+        assert ana <= fl.time * (1.0 + 1e-12), sched.kind
+
+
+def test_analytic_rejects_topology():
+    topo = FatTree(k=8, n_hosts=4, b_host=FAB.b_link)
+    with pytest.raises(AssertionError):
+        execute(build_broadcast_tree(4, 1 << 14), FAB, WK,
+                fidelity="analytic", topology=topo)
+
+
+def test_execute_rejects_bad_inputs():
+    sched = build_broadcast_tree(4, 1 << 14)
+    with pytest.raises(AssertionError):
+        execute(sched, FAB, WK, fidelity="quantum")
+    with pytest.raises(AssertionError):
+        execute(sched, FAB, WK, np.random.default_rng(0), loss=0.1)  # fluid
+    with pytest.raises(AssertionError):
+        execute(sched, FAB, WK, fidelity="analytic", loss=0.1)
+    with pytest.raises(AssertionError):
+        execute(build_ring_reduce_scatter(4, 1 << 14), FAB, WK,
+                np.random.default_rng(0), fidelity="packet",
+                dpa_fidelity="event")            # RC rings have no DPA path

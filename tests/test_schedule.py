@@ -14,11 +14,32 @@ def pm_pairs():
     )
 
 
+def pm_pairs_uneven():
+    """(P, M) with no divisibility constraint — uneven chains included."""
+    return st.integers(1, 96).flatmap(
+        lambda p: st.integers(1, p).map(lambda m: (p, m))
+    )
+
+
 @given(pm_pairs())
 @settings(max_examples=100, deadline=None)
 def test_schedule_invariants(pm):
     p, m = pm
     schedule.validate_schedule(p, m)
+
+
+@given(pm_pairs_uneven())
+@settings(max_examples=100, deadline=None)
+def test_schedule_invariants_uneven(pm):
+    """M need not divide P: last chains shorter, every rank roots once."""
+    p, m = pm
+    schedule.validate_schedule(p, m)
+    lens = schedule.chain_lengths(p, m)
+    assert lens == tuple(sorted(lens, reverse=True))   # last chains shorter
+    # chains partition [0, P) contiguously
+    members = [schedule.chain_members(c, p, m) for c in range(m)]
+    flat = [x for ms in members for x in ms]
+    assert flat == list(range(p))
 
 
 @given(pm_pairs())
@@ -61,3 +82,32 @@ def test_worker_split_paper_example():
     """§IV-C: 16 procs, 4 subgroups -> 1 send worker, 4 receive workers."""
     s, r = schedule.worker_split(4, 16)
     assert (s, r) == (1, 4)
+
+
+def test_worker_split_discrepancy_rule_caps_at_peers():
+    """§IV-C discrepancy rule: receive workers = min(subgroups, P-1) — at
+    most P-1 peers can be sending concurrently, so workers beyond that
+    would idle; the send path always keeps exactly one worker."""
+    assert schedule.worker_split(8, 4) == (1, 3)    # capped by P-1
+    assert schedule.worker_split(4, 2) == (1, 1)    # single peer
+    assert schedule.worker_split(1, 16) == (1, 1)
+    assert schedule.worker_split(16, 16) == (1, 15)
+    assert schedule.worker_split(3, 1) == (1, 1)    # degenerate P=1
+
+
+@given(st.integers(1, 64), st.integers(1, 256))
+@settings(max_examples=60, deadline=None)
+def test_worker_split_properties(n_sub, p):
+    s, r = schedule.worker_split(n_sub, p)
+    assert s == 1
+    assert 1 <= r <= max(min(n_sub, p - 1), 1)
+
+
+def test_uneven_active_group_example():
+    """P=6, M=4: chains (0,1) (2,3) (4) (5); step 0 activates all four
+    chain heads, step 1 only the two chains still that long."""
+    assert schedule.chain_lengths(6, 4) == (2, 2, 1, 1)
+    assert schedule.active_group(0, 6, 4) == (0, 2, 4, 5)
+    assert schedule.active_group(1, 6, 4) == (1, 3)
+    assert schedule.n_rounds(6, 4) == 2
+    assert schedule.activation_edges(6, 4) == [(0, 1), (2, 3)]
