@@ -375,6 +375,95 @@ def protocol_loss_sweep_smoke():
         loss_grid=(1e-3, 1e-2, 3e-2, 1e-1, 3e-1))
 
 
+def packet_scale_sweep(grid=((512, 1 << 26), (2048, 1 << 26), (10000, GIB)),
+                       ref_grid=((512, 1 << 26), (2048, 1 << 26)),
+                       big=(10000, GIB), ag_point=(512, 1 << 20, 4),
+                       min_big_speedup=20.0):
+    """Simulator-throughput benchmark: wall-clock of the packet-fidelity
+    engine itself vs host count, vectorized batch engine (default) against
+    the per-leaf reference oracle. Lossless jitter-0 fabric with an 8-thread
+    pool (pool rate > wire rate, so no staging RNR) — both engines replay
+    the identical protocol and must return identical results; the lossy /
+    RNR / multi-chain grid is pinned bit-exact by
+    tests/test_packet_vectorized.py. Wall-clock rows (``*_wall_s`` /
+    ``*_speedup``) are machine-dependent: benchmarks/run.py carries them in
+    BENCH_smoke.json's ``wall_clock`` section and scripts/bench_gate.py
+    reports their drift informationally — they are never gated."""
+    fab = FabricParams(jitter=0.0)
+    wk = WorkerParams(n_recv_workers=8)
+    rows = []
+    vec_wall = {}
+
+    def timed(fn, *args, **kw):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        return r, time.perf_counter() - t0
+
+    for p, n in grid:
+        r, w = timed(simulate_broadcast, p, n, fab, wk,
+                     np.random.default_rng(0), fidelity="packet",
+                     engine="vectorized")
+        assert r.completed, (p, n)
+        vec_wall[p] = w
+        rows.append((f"pscale.P{p}.vec_wall_s", round(w, 4),
+                     f"bcast {n >> 20} MiB, vectorized engine"))
+    # reference oracle at the small/mid points: identical results, and the
+    # measured per-leaf wall-clock the batch engine is judged against
+    for p, n in ref_grid:
+        rr, w = timed(simulate_broadcast, p, n, fab, wk,
+                      np.random.default_rng(0), fidelity="packet",
+                      engine="reference")
+        rv = simulate_broadcast(p, n, fab, wk, np.random.default_rng(0),
+                                fidelity="packet", engine="vectorized")
+        assert (rr.time, rr.completed, rr.bytes_total, rr.bytes_recovery) \
+            == (rv.time, rv.completed, rv.bytes_total, rv.bytes_recovery)
+        rows.append((f"pscale.P{p}.ref_wall_s", round(w, 4),
+                     f"bcast {n >> 20} MiB, per-leaf reference"))
+        rows.append((f"pscale.P{p}.ref_vs_vec_speedup",
+                     round(w / max(vec_wall[p], 1e-9), 1),
+                     "reference / vectorized wall-clock"))
+    # the 10k-host headline: full reference run, recorded + floor-asserted
+    if big is not None:
+        p, n = big
+        rr, w = timed(simulate_broadcast, p, n, fab, wk,
+                      np.random.default_rng(0), fidelity="packet",
+                      engine="reference")
+        assert rr.completed, (p, n)
+        speedup = w / max(vec_wall[p], 1e-9)
+        rows.append((f"pscale.P{p}.ref_wall_s", round(w, 4),
+                     f"bcast {n >> 20} MiB, per-leaf reference"))
+        rows.append((f"pscale.P{p}.ref_vs_vec_speedup", round(speedup, 1),
+                     f"floor {min_big_speedup:g}x"))
+        assert speedup >= min_big_speedup, (speedup, w, vec_wall[p])
+    # allgather point: same contract on the multi-chain path
+    p, n, m = ag_point
+    ra, wv = timed(simulate_allgather, p, n, fab, wk,
+                   np.random.default_rng(0), m, fidelity="packet",
+                   engine="vectorized")
+    rf, wr = timed(simulate_allgather, p, n, fab, wk,
+                   np.random.default_rng(0), m, fidelity="packet",
+                   engine="reference")
+    assert ra.completed and (ra.time, ra.bytes_total, ra.bytes_recovery) \
+        == (rf.time, rf.bytes_total, rf.bytes_recovery)
+    rows.append((f"pscale.AG.P{p}.vec_wall_s", round(wv, 4),
+                 f"allgather {n >> 20} MiB x{m} chains, vectorized"))
+    rows.append((f"pscale.AG.P{p}.ref_wall_s", round(wr, 4),
+                 f"allgather {n >> 20} MiB x{m} chains, reference"))
+    rows.append((f"pscale.AG.P{p}.ref_vs_vec_speedup",
+                 round(wr / max(wv, 1e-9), 1),
+                 "reference / vectorized wall-clock"))
+    return rows
+
+
+def packet_scale_sweep_smoke():
+    """CI-sized packet_scale_sweep: keeps the acceptance-gating 10k-host /
+    1 GiB reference-vs-vectorized speedup (the one long row, ~2 min of
+    reference wall-clock) but trims the mid-scale reference points."""
+    return packet_scale_sweep(grid=((512, 1 << 26), (10000, GIB)),
+                              ref_grid=((512, 1 << 26),),
+                              ag_point=(256, 1 << 20, 4))
+
+
 def dpa_scaling_sweep(thread_grid=(1, 2, 4, 8, 16)):
     """Figs 13/14/16 + §VII-d on the EVENT-level DPA progress engine
     (core/dpa_engine.py): thread-scaling and saturation measured by driving
@@ -614,7 +703,8 @@ ALL = [
     fig11_throughput_188, fig12_traffic_savings, table1_datapath,
     fig13_14_thread_scaling, fig15_chunk_sizes, fig16_tbit,
     appendix_b_speedup, dpa_scaling_sweep, fsdp_contention_sweep,
-    fabric_sweep, protocol_loss_sweep, multi_job_contention,
+    fabric_sweep, protocol_loss_sweep, packet_scale_sweep,
+    multi_job_contention,
     schedule_ir_sweep, measured_protocol_micro, measured_jax_collectives,
 ]
 
@@ -624,6 +714,9 @@ ALL = [
 # the packet-protocol loss sweep (constant-time recovery + unicast
 # crossover), the event-level DPA scaling sweep (Figs 13/14/16 + offload
 # economics), the multi-job contention scenario and the schedule-IR
-# allreduce-vs-ring sweep (ring/mcast time + fabric-byte ratios, autotune)
+# allreduce-vs-ring sweep (ring/mcast time + fabric-byte ratios, autotune),
+# and the packet-engine scale sweep (vectorized-vs-reference wall-clock,
+# including the 10k-host / 1 GiB speedup floor)
 SMOKE = [fsdp_contention_sweep, fabric_sweep_smoke, protocol_loss_sweep_smoke,
-         dpa_scaling_smoke, multi_job_contention, schedule_ir_sweep]
+         dpa_scaling_smoke, multi_job_contention, schedule_ir_sweep,
+         packet_scale_sweep_smoke]

@@ -11,6 +11,9 @@ every derived RATIO metric (bubble fractions, slowdown/reduction factors,
 the protocol loss-crossover). Ratios are deterministic model outputs —
 machine-independent — so scripts/bench_gate.py diffs them against the
 committed ``benchmarks/baseline_smoke.json`` and fails CI on regression.
+Machine-dependent wall-clock rows (``*_wall_s`` / ``*_speedup`` from
+packet_scale_sweep) land in the report's ``wall_clock`` section instead:
+bench_gate prints their drift informationally but never fails on them.
 """
 from __future__ import annotations
 
@@ -30,9 +33,18 @@ from benchmarks import paper_figs, roofline  # noqa: E402
 #: ratios (and the crossover loss rate), never wall-clock measurements
 RATIO_SUFFIXES = ("_x", ".bubble_frac", ".crossover_loss")
 
+#: machine-dependent wall-clock rows (packet_scale_sweep's engine timings
+#: and speedups): carried in BENCH_smoke.json under "wall_clock" so drift is
+#: visible, reported informationally by scripts/bench_gate.py, never gated
+WALL_SUFFIXES = ("_wall_s", "_speedup")
+
 
 def is_ratio_row(name: str) -> bool:
     return name.endswith(RATIO_SUFFIXES)
+
+
+def is_wall_row(name: str) -> bool:
+    return name.endswith(WALL_SUFFIXES)
 
 
 def main() -> None:
@@ -55,7 +67,7 @@ def main() -> None:
 
     print("name,value,derived")
     failures = 0
-    report = {"scenarios": {}, "ratios": {}}
+    report = {"scenarios": {}, "ratios": {}, "wall_clock": {}}
     for fn in benches:
         t0 = time.perf_counter()
         n_rows = 0
@@ -68,6 +80,10 @@ def main() -> None:
                     # null sentinel: inf/nan are not valid strict JSON and
                     # must never reach the committed baseline as `Infinity`
                     report["ratios"][name] = v if math.isfinite(v) else None
+                elif is_wall_row(name):
+                    v = float(value)
+                    report["wall_clock"][name] = (v if math.isfinite(v)
+                                                  else None)
         except AssertionError as e:
             failures += 1
             print(f"{fn.__name__},FAILED,{e}")

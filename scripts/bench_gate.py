@@ -6,7 +6,10 @@ The gated metrics (benchmarks/run.py RATIO_SUFFIXES) are deterministic model
 outputs — bubble fractions, traffic-reduction and slowdown factors, the
 protocol loss-crossover — not wall-clock, so they are machine-independent
 and the tolerance only absorbs intentional-model-change review, never timer
-noise. Wall times are carried in the report for humans but never gated.
+noise. Wall times are carried in the report for humans but never gated: the
+``wall_clock`` section (packet_scale_sweep's engine timings and speedups)
+and per-scenario wall_s are printed as an informational drift report when a
+baseline carries reference values, and never affect the exit code.
 
     python scripts/bench_gate.py                       # gate current vs baseline
     python scripts/bench_gate.py --update              # bless current as baseline
@@ -76,6 +79,28 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
     return problems
 
 
+def wall_report(baseline: dict, current: dict) -> list[str]:
+    """Informational wall-clock lines — printed, never gated. Covers the
+    report's ``wall_clock`` rows (engine timings / speedups from
+    packet_scale_sweep); drift vs baseline is shown when the baseline file
+    happens to carry wall_clock values (the blessed baseline normally does
+    not — wall-clock is machine-dependent by design)."""
+    base = baseline.get("wall_clock", {}) or {}
+    cur = current.get("wall_clock", {}) or {}
+    lines = []
+    for name in sorted(cur):
+        c = cur[name]
+        if name in base and base[name] and c:
+            rel = (float(c) - float(base[name])) / max(abs(float(base[name])),
+                                                       1e-9)
+            lines.append(f"{name}: {c:g} ({rel:+.0%} vs baseline "
+                         f"{base[name]:g})")
+        else:
+            lines.append(f"{name}: {c:g}" if c is not None
+                         else f"{name}: null")
+    return lines
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
@@ -108,6 +133,12 @@ def main() -> int:
     baseline, current = load(args.baseline), load(args.current)
     problems = compare(baseline, current, args.tolerance)
     n = len(current.get("ratios", {}))
+    walls = wall_report(baseline, current)
+    if walls:
+        print(f"bench_gate: wall-clock (informational, {len(walls)} rows, "
+              f"never gated):")
+        for w in walls:
+            print(f"  {w}")
     if problems:
         print(f"bench_gate: FAIL ({len(problems)} problem(s), {n} ratios "
               f"checked at {args.tolerance*100:.0f}% tolerance)")

@@ -512,6 +512,40 @@ def worker_pool_completion(arrivals: np.ndarray, n_workers: int,
     return done, rnr
 
 
+def worker_pool_completion_rows(arrivals: np.ndarray, n_workers: int,
+                                service: float, staging: int,
+                                ) -> tuple[np.ndarray, np.ndarray]:
+    """Row-batched twin of worker_pool_completion + staging_rnr_mask: one
+    pool pass over R stacked arrival rows at once (the vectorized packet
+    engine's coalesced per-leaf DPA pass). ``arrivals`` is (R, n), each row
+    sorted; ragged rows are padded at the END with +inf. Returns
+    (done (R, n), rnr_mask (R, n)); padded columns come back +inf / False.
+
+    Bit-exact per row with the 1-D functions on the real prefix: a chunk's
+    residue class is its absolute position mod W and its within-class index
+    is position // W — both independent of the row length — and the
+    maximum.accumulate runs left-to-right, so trailing +inf padding cannot
+    reach any real entry. The same float ops run in the same order as the
+    1-D pass (tests/test_engine.py pins the equivalence)."""
+    assert arrivals.ndim == 2, arrivals.shape
+    n = arrivals.shape[1]
+    if n == 0:
+        return np.empty_like(arrivals), np.zeros(arrivals.shape, dtype=bool)
+    done = np.empty_like(arrivals)
+    w = max(int(n_workers), 1)
+    for r in range(min(w, n)):
+        idx = np.arange(r, n, w)
+        i = np.arange(idx.size, dtype=float)
+        shifted = arrivals[:, idx] - i * service
+        done[:, idx] = (np.maximum.accumulate(shifted, axis=1)
+                        + (i + 1.0) * service)
+    mask = np.zeros(arrivals.shape, dtype=bool)
+    if n > staging:
+        # inf padding self-cancels: inf > inf and real > inf are both False
+        mask[:, staging:] = done[:, : n - staging] > arrivals[:, staging:]
+    return done, mask
+
+
 # ----------------------------------------------------- FSDP contention model
 
 

@@ -82,15 +82,26 @@ from repro.core.engine import (
     WorkerParams,
     staging_rnr_mask,
     worker_pool_completion,
+    worker_pool_completion_rows,
 )
 from repro.core.sched_ir import PhaseBreakdown, _chunking, _rnr_barrier
 from repro.kernels.bitmap_np import (  # jax-free: the packet wire format
     bitmap_pack_np,
+    bitmap_pack_rows_np,
     bitmap_popcount_np,
     bitmap_unpack_np,
 )
 
 DEFAULT_MAX_ROUNDS = 64
+
+# Packet-round executors: "vectorized" is the batch engine (default),
+# "reference" the per-leaf loop it is pinned bit-exact against
+# (tests/test_packet_vectorized.py).
+ENGINES = ("vectorized", "reference")
+
+# Batched pool passes process leaves in blocks of at most this many matrix
+# elements (rows x padded row length) to bound peak memory.
+_BLOCK_ELEMS = 1 << 24
 
 
 # ------------------------------------------------------------------ loss models
@@ -326,6 +337,31 @@ def _leaf_lost(path: list, masks: dict[int, np.ndarray], n: int) -> np.ndarray:
     return lost
 
 
+def _stacked_lost(paths: dict, masks: dict[int, np.ndarray], leaves,
+                  n: int) -> np.ndarray:
+    """Batch twin of per-leaf ``_leaf_lost``: stack the per-link masks into a
+    (links x chunks) matrix and OR along every leaf's path one tree LEVEL at
+    a time (one fancy-indexed gather per depth instead of p python loops).
+    Returns (len(leaves), n) bool rows, row k == _leaf_lost(paths[leaves[k]]).
+    """
+    row_of: dict[int, int] = {}
+    rows = []
+    for lid, m in masks.items():
+        row_of[lid] = len(rows)
+        rows.append(m)
+    mat = (np.stack(rows) if rows
+           else np.zeros((0, n), dtype=bool))
+    lost = np.zeros((len(leaves), n), dtype=bool)
+    depth = max((len(paths[lf]) for lf in leaves), default=0)
+    for d in range(depth):
+        sel = np.array([k for k, lf in enumerate(leaves)
+                        if len(paths[lf]) > d], dtype=np.intp)
+        idx = np.array([row_of[id(paths[lf][d])] for lf in leaves
+                        if len(paths[lf]) > d], dtype=np.intp)
+        lost[sel] |= mat[idx]
+    return lost
+
+
 def _models_on_paths(paths: dict, models: dict[int, LossModel | None],
                      leaves) -> dict[int, LossModel | None]:
     """Subset of ``models`` on the given leaves' paths — the links a pruned
@@ -476,21 +512,15 @@ class _BroadcastRun:
                 for path in (self.paths[leaf] for leaf in sorted(self.paths))
                 for c in path
             }
-        self.leaves = {
-            leaf: _LeafState(
-                self.n_chunks,
-                (len(self.paths[leaf]) if topology is not None else 1)
-                * fabric.latency,
-            )
-            for leaf in sorted(self.paths)
-        }
+        self.leaf_ids = sorted(self.paths)
+        self._init_leaf_states()
         if dpa_fidelity == "event":
             # one DPA progress engine per NIC, persistent across rounds:
             # NACK service and retransmit posting run on the root's contexts
             # (cycle theft from its receive datapath — visible in the
             # Allgather, where every root also receives)
             params = resolve_event_params(dpa, workers.n_recv_workers)
-            self.pools = {leaf: DpaEventPool(params) for leaf in self.leaves}
+            self.pools = {leaf: DpaEventPool(params) for leaf in self.leaf_ids}
             self.root_pool = DpaEventPool(params)
         else:
             self.pools = None
@@ -505,8 +535,18 @@ class _BroadcastRun:
         self._cutoff = 0.0
         # arrival-ordered delivered PSNs per leaf (kernels/chunk_reassembly
         # replay: the staging-ring scatter order), kept only on request
-        self.delivery = ({leaf: [] for leaf in self.leaves}
+        self.delivery = ({leaf: [] for leaf in self.leaf_ids}
                          if collect_delivery else None)
+
+    def _hop_of(self, leaf: int) -> float:
+        return (len(self.paths[leaf]) if self.topology is not None else 1) \
+            * self.fabric.latency
+
+    def _init_leaf_states(self) -> None:
+        """Per-receiver protocol state. The vectorized engine overrides this
+        with an array-of-leaves layout (no per-leaf bool bitmaps)."""
+        self.leaves = {leaf: _LeafState(self.n_chunks, self._hop_of(leaf))
+                       for leaf in self.leaf_ids}
 
     def _leaf_pool_pass(self, leaf: int, arrivals: np.ndarray,
                         psns: np.ndarray):
@@ -583,8 +623,6 @@ class _BroadcastRun:
         for leaf in nackers:
             agg_words |= ~self.leaves[leaf].packed()
         union = np.nonzero(bitmap_unpack_np(agg_words, self.n_chunks))[0]
-        assert union.size > 0
-        fab, wk = self.fabric, self.workers
         # NACK ascent: a leaf declares loss at the cutoff timer (or when its
         # pool drained, whichever is later) and sends its bitmap up the tree
         t_send = {leaf: max(self.leaves[leaf].t_done, self._cutoff)
@@ -594,6 +632,15 @@ class _BroadcastRun:
             arrivals = np.array([max(t_send.values())])
         else:
             arrivals = np.sort(np.array([t_send[leaf] for leaf in nackers]))
+        return self._submit_retransmit(union, nackers, arrivals)
+
+    def _submit_retransmit(self, union: np.ndarray, nackers: list[int],
+                           arrivals: np.ndarray):
+        """Root side of one recovery round (engine-independent): serve the
+        NACK arrivals on the root DPA, then inject the pruned retransmit
+        flow. Returns the meta tuple for deliver_retransmit()."""
+        assert union.size > 0
+        fab, wk = self.fabric, self.workers
         if self.root_pool is None:
             t_root_done, _ = _pool_with_rnr_psns(
                 arrivals, np.arange(arrivals.shape[0]), wk,
@@ -679,6 +726,285 @@ class _BroadcastRun:
         }
 
 
+class _VecBroadcastRun(_BroadcastRun):
+    """Batch twin of _BroadcastRun (``engine="vectorized"``, the default):
+    the same protocol, state machine and RNG stream, executed with array
+    batches instead of per-leaf python loops. Pinned BIT-exact against the
+    reference by tests/test_packet_vectorized.py. The layout (DESIGN.md §9):
+
+      - loss: one (links x chunks) mask matrix per round, OR-ed along paths
+        one tree level at a time (_stacked_lost) — the per-LINK sample order
+        is unchanged, so Gilbert–Elliott chain state advances identically.
+      - pool: leaves are padded to a (block x max_row) arrival matrix and
+        served by ONE worker_pool_completion_rows call (+inf END padding is
+        invisible to the residue-class recurrence and the RNR rule).
+      - jitter: per-leaf ``rng.uniform`` calls become one sized draw per
+        block; numpy's uniform fills are stream-splittable, so the draws
+        are bitwise those of the per-leaf loop. At jitter == 0.0 every draw
+        returns exactly 0.0, so the vectorized engine ELIDES them: outputs
+        are unchanged, only the caller-visible final rng state differs from
+        the reference (the documented RNG-order contract).
+      - NACK union: per-leaf missing sets scatter into a bool matrix, pack
+        via bitmap_pack_rows_np, and OR-reduce across rows — the same u32
+        wire words the reference builds leaf by leaf.
+      - bookkeeping: no per-leaf bool bitmaps (O(p·chunks) memory); missing
+        PSNs live in a dict of sorted index arrays, absent means complete.
+    """
+
+    def _init_leaf_states(self) -> None:
+        self.leaves = None                  # array-of-leaves layout instead
+        ids = self.leaf_ids
+        self._ids = np.array(ids, dtype=np.intp)
+        self._pos = {leaf: k for k, leaf in enumerate(ids)}
+        self.hop = np.array([self._hop_of(leaf) for leaf in ids])
+        self._tdone = np.zeros(len(ids))
+        self.missing: dict[int, np.ndarray] = {}   # leaf -> sorted PSNs
+        self._lossless = all(m is None for m in self.models.values())
+        # All template forks happen in __init__, so after construction the
+        # shared rng feeds ONLY jitter draws; at jitter==0 each returns
+        # exactly 0.0 and x + 0.0 == x bitwise for the (positive) times —
+        # eliding them cannot change any output.
+        self._skip_jitter = self.fabric.jitter == 0.0
+
+    def _draw_jitter(self, total: int) -> np.ndarray | None:
+        if self._skip_jitter:
+            return None
+        return self.rng.uniform(0.0, self.fabric.jitter, size=total)
+
+    def _pool_rows(self, leaves, counts, psn_flat, arr_flat):
+        """Coalesced pool pass for a block of leaves: pad the ragged
+        (arrival, psn) runs to a matrix, sort rows by arrival (the
+        reference's per-leaf stable argsort), and run ONE
+        worker_pool_completion_rows call — or, at dpa_fidelity="event", the
+        per-leaf stateful pools in reference order. Returns (t_last (B,)
+        with NaN for empty rows, per-row rnr PSN list, psn matrix in
+        arrival order)."""
+        B = len(leaves)
+        counts = np.asarray(counts, dtype=np.intp)
+        total = int(counts.sum())
+        maxc = int(counts.max()) if B else 0
+        if B and total == B * maxc:
+            # dense block (lossless rounds): every row is full, so the
+            # row-major flats ARE the matrix -- skip the scatter-pad
+            arr_pad = arr_flat.reshape(B, maxc)
+            psn_pad = psn_flat.reshape(B, maxc)
+        else:
+            starts = np.cumsum(counts) - counts
+            rows = np.repeat(np.arange(B, dtype=np.intp), counts)
+            within = (np.arange(total, dtype=np.intp)
+                      - np.repeat(starts, counts))
+            arr_pad = np.full((B, maxc), np.inf)
+            psn_pad = np.full((B, maxc), -1, dtype=np.intp)
+            arr_pad[rows, within] = arr_flat
+            psn_pad[rows, within] = psn_flat
+        if not self._skip_jitter:
+            order = np.argsort(arr_pad, axis=1, kind="stable")
+            arr_pad = np.take_along_axis(arr_pad, order, axis=1)
+            psn_pad = np.take_along_axis(psn_pad, order, axis=1)
+        # else: rows are already arrival-sorted (injection times are
+        # nondecreasing in PSN and each row's PSNs ascend), and the
+        # reference's stable argsort of a sorted row is the identity
+        t_last = np.full(B, np.nan)
+        if self.pools is None:
+            done, rnr_mask = worker_pool_completion_rows(
+                arr_pad, self.workers.n_recv_workers, self.service,
+                self.workers.staging_chunks)
+            nz = counts > 0
+            t_last[nz] = done[np.nonzero(nz)[0], counts[nz] - 1]
+            if rnr_mask.any():
+                rnr_list = [psn_pad[k, rnr_mask[k]] for k in range(B)]
+            else:
+                rnr_list = [psn_pad[:1, :0].reshape(0)] * B
+            return t_last, rnr_list, psn_pad
+        rnr_list = []
+        for k, leaf in enumerate(leaves):
+            c = int(counts[k])
+            tl, rp = self.pools[leaf].service_with_rnr(
+                arr_pad[k, :c], psn_pad[k, :c], self.chunk,
+                self.workers.staging_chunks)
+            if tl is not None:
+                t_last[k] = tl
+            rnr_list.append(rp)
+        return t_last, rnr_list, psn_pad
+
+    def deliver_fast(self) -> None:
+        inject = self.flow.chunk_times(self.n_chunks, self.chunk)
+        self._cutoff = self.flow.t_end + self.fabric.alpha
+        masks = _sample_link_round(self.models, self.n_chunks)
+        n, ids = self.n_chunks, self.leaf_ids
+        if self._lossless and self._skip_jitter and self.pools is None:
+            # dedup fast path: no loss, no jitter, memoryless pool -> every
+            # leaf at the same hop latency sees the IDENTICAL arrival row;
+            # one pool pass per distinct hop, fanned out to the group
+            psns = np.arange(n)
+            for h in np.unique(self.hop):
+                sel = np.nonzero(self.hop == h)[0]
+                t_last, rnr_psns = _pool_with_rnr_psns(
+                    inject + h, psns, self.workers, self.service)
+                got = psns
+                if self.delivery is not None and rnr_psns.size:
+                    got = psns[~np.isin(psns, rnr_psns)]
+                for k in sel:
+                    leaf = ids[k]
+                    self.rnr_total += rnr_psns.shape[0]
+                    if rnr_psns.size:
+                        self.missing[leaf] = rnr_psns
+                    if self.delivery is not None:
+                        self.delivery[leaf].append(got)
+                self._tdone[sel] = t_last
+                self.completion[self._ids[sel]] = t_last
+                self.t_fast_end = max(self.t_fast_end, t_last)
+        else:
+            lost_all = (None if self._lossless
+                        else _stacked_lost(self.paths, masks, ids, n))
+            blk = max(1, _BLOCK_ELEMS // max(n, 1))
+            for s0 in range(0, len(ids), blk):
+                s1 = min(s0 + blk, len(ids))
+                sub = ids[s0:s1]
+                if lost_all is None:
+                    lost = None
+                    counts = np.full(len(sub), n, dtype=np.intp)
+                    psn_flat = np.tile(np.arange(n), len(sub))
+                else:
+                    lost = lost_all[s0:s1]
+                    rows, psn_flat = np.nonzero(~lost)
+                    counts = np.bincount(rows, minlength=len(sub))
+                base = inject[psn_flat] + np.repeat(self.hop[s0:s1], counts)
+                jit = self._draw_jitter(base.shape[0])
+                if jit is not None:
+                    base = base + jit
+                t_last, rnr_list, psn_pad = self._pool_rows(
+                    sub, counts, psn_flat, base)
+                tdone = np.where(np.isnan(t_last), self.t_start, t_last)
+                self._tdone[s0:s1] = tdone
+                self.completion[self._ids[s0:s1]] = tdone
+                self.t_fast_end = max(self.t_fast_end, float(tdone.max()))
+                for k, leaf in enumerate(sub):
+                    rnr_psns = rnr_list[k]
+                    self.rnr_total += rnr_psns.shape[0]
+                    if lost is None:
+                        miss = rnr_psns if rnr_psns.size else None
+                    else:
+                        lost_cols = np.nonzero(lost[k])[0]
+                        if rnr_psns.size:
+                            miss = np.sort(
+                                np.concatenate([lost_cols, rnr_psns]))
+                        else:
+                            miss = lost_cols if lost_cols.size else None
+                    if miss is not None:
+                        self.missing[leaf] = miss
+                    if self.delivery is not None:
+                        self._record_delivery(
+                            leaf, psn_pad[k, :counts[k]], rnr_psns)
+        self.completion[self.root] = self.flow.t_end
+        self.t_fast_end = max(self.t_fast_end, self.flow.t_end)
+
+    def incomplete(self) -> list[int]:
+        return sorted(self.missing)
+
+    def plan_retransmit(self):
+        nackers = self.incomplete()
+        if not nackers:
+            return None
+        n = self.n_chunks
+        # union of missing: scatter the per-leaf missing sets into rows,
+        # pack every row to the u32 NACK wire format in one batched call,
+        # OR-reduce across rows (what the switches do hop by hop)
+        flags = np.zeros((len(nackers), n + ((-n) % 32)), dtype=bool)
+        for k, leaf in enumerate(nackers):
+            flags[k, self.missing[leaf]] = True
+        agg_words = np.bitwise_or.reduce(bitmap_pack_rows_np(flags), axis=0)
+        union = np.nonzero(bitmap_unpack_np(agg_words, n))[0]
+        idx = np.array([self._pos[leaf] for leaf in nackers], dtype=np.intp)
+        t_send = np.maximum(self._tdone[idx], self._cutoff) + self.hop[idx]
+        if self.aggregate:
+            arrivals = np.array([t_send.max()])
+        else:
+            arrivals = np.sort(t_send)
+        return self._submit_retransmit(union, nackers, arrivals)
+
+    def deliver_retransmit(self, meta) -> None:
+        flow, union, nackers, arrivals, t_root_done = meta
+        u = union.size
+        inject = flow.chunk_times(u, self.chunk)
+        pruned = _models_on_paths(self.paths, self.models, nackers)
+        masks = _sample_link_round(pruned, u)
+        lost_all = (_stacked_lost(self.paths, masks, nackers, u)
+                    if any(m is not None for m in pruned.values()) else None)
+        recovered_round = 0
+        t_round_end = t_root_done
+        blk = max(1, _BLOCK_ELEMS // max(u, 1))
+        for s0 in range(0, len(nackers), blk):
+            s1 = min(s0 + blk, len(nackers))
+            sub = nackers[s0:s1]
+            miss_list = [self.missing[leaf] for leaf in sub]
+            sizes = np.array([m.size for m in miss_list], dtype=np.intp)
+            miss_flat = np.concatenate(miss_list)
+            rows = np.repeat(np.arange(len(sub), dtype=np.intp), sizes)
+            pos_flat = np.searchsorted(union, miss_flat)    # union ⊇ miss
+            self.duplicates += int(len(sub) * u - miss_flat.size)
+            if lost_all is None:
+                keep = np.ones(miss_flat.shape[0], dtype=bool)
+            else:
+                keep = ~lost_all[s0:s1][rows, pos_flat]
+            got_counts = np.bincount(rows[keep], minlength=len(sub))
+            idx = np.array([self._pos[leaf] for leaf in sub], dtype=np.intp)
+            base = (inject[pos_flat[keep]]
+                    + np.repeat(self.hop[idx], got_counts))
+            jit = self._draw_jitter(base.shape[0])
+            if jit is not None:
+                base = base + jit
+            t_last, rnr_list, psn_pad = self._pool_rows(
+                sub, got_counts, miss_flat[keep], base)
+            still = miss_flat[~keep]
+            still_sizes = np.bincount(rows[~keep], minlength=len(sub))
+            still_rows = np.split(still, np.cumsum(still_sizes)[:-1])
+            for k, leaf in enumerate(sub):
+                rnr_psns = rnr_list[k]
+                self.rnr_total += rnr_psns.shape[0]
+                recovered_round += int(got_counts[k]) - rnr_psns.shape[0]
+                if self.delivery is not None:
+                    self._record_delivery(
+                        leaf, psn_pad[k, :got_counts[k]], rnr_psns)
+                st_lost = still_rows[k]
+                if rnr_psns.size:
+                    nxt = np.sort(np.concatenate([st_lost, rnr_psns]))
+                elif st_lost.size:
+                    nxt = st_lost
+                else:
+                    nxt = None
+                if nxt is None:
+                    del self.missing[leaf]
+                else:
+                    self.missing[leaf] = nxt
+                if not np.isnan(t_last[k]):
+                    tl = float(t_last[k])
+                    self._tdone[idx[k]] = tl
+                    self.completion[leaf] = tl
+                    t_round_end = max(t_round_end, tl)
+        self._cutoff = flow.t_end + self.fabric.alpha
+        self.t_rel_end = max(self.t_rel_end, t_round_end)
+        self.rounds.append(RoundTrace(
+            nack_leaves=len(nackers),
+            root_nack_msgs=int(arrivals.shape[0]),
+            union_chunks=int(union.size),
+            t_nack_root=float(arrivals.max()),
+            t_retx_start=float(flow.t_start),
+            t_end=t_round_end,
+            recovered=recovered_round,
+        ))
+        self.retransmit_wire += int(union.size) * self.chunk
+
+    def stats(self) -> dict:
+        n_total = (self.p - 1) * self.n_chunks
+        recovered = sum(tr.recovered for tr in self.rounds)
+        return {
+            "delivered_fast": n_total - recovered
+            - sum(m.size for m in self.missing.values()),
+            "recovered": recovered,
+        }
+
+
 class _AbstractCarrier:
     """Loss carrier for the no-topology mode: stands in for the single
     abstract hop between the root's send link and one leaf."""
@@ -694,7 +1020,8 @@ def simulate_packet_broadcast(
         rng: np.random.Generator, root: int = 0, *, topology=None,
         hosts=None, loss=None, max_rounds: int = DEFAULT_MAX_ROUNDS,
         aggregate_nacks: bool = True, collect_delivery: bool = False,
-        dpa_fidelity: str = "scalar", dpa=None) -> PacketBcastResult:
+        dpa_fidelity: str = "scalar", dpa=None,
+        engine: str = "vectorized") -> PacketBcastResult:
     """Packet-fidelity reliable Broadcast (the ``fidelity="packet"`` backend
     of simulator.simulate_broadcast — see the module docstring for the
     protocol model). At ``loss=None``/``p_drop=0`` it reproduces the fluid
@@ -702,16 +1029,20 @@ def simulate_packet_broadcast(
     draw different samples from the same distribution).
     ``dpa_fidelity="event"`` swaps the scalar worker pool for the
     event-level DPA progress engine of core/dpa_engine.py (``dpa=``
-    supplies its EventDpaParams / DpaConfig)."""
+    supplies its EventDpaParams / DpaConfig). ``engine="vectorized"``
+    (default) runs the batched round executor; ``engine="reference"`` the
+    per-leaf loop it is pinned bit-exact against."""
+    assert engine in ENGINES, engine
+    cls = _VecBroadcastRun if engine == "vectorized" else _BroadcastRun
     t_rnr = _rnr_barrier(p, fabric, workers)
     eng = Engine()
     if topology is not None:
         topology.reset()
-    run = _BroadcastRun(p, n_bytes, fabric, workers, rng, root, eng,
-                        topology=topology, hosts=hosts, loss=loss,
-                        aggregate_nacks=aggregate_nacks,
-                        collect_delivery=collect_delivery,
-                        dpa_fidelity=dpa_fidelity, dpa=dpa)
+    run = cls(p, n_bytes, fabric, workers, rng, root, eng,
+              topology=topology, hosts=hosts, loss=loss,
+              aggregate_nacks=aggregate_nacks,
+              collect_delivery=collect_delivery,
+              dpa_fidelity=dpa_fidelity, dpa=dpa)
     run.submit_fast(t_rnr)
     eng.run()
     run.deliver_fast()
@@ -783,7 +1114,7 @@ def simulate_packet_allgather(
         rng: np.random.Generator, n_chains: int = 1, *, topology=None,
         hosts=None, loss=None, max_rounds: int = DEFAULT_MAX_ROUNDS,
         aggregate_nacks: bool = True, dpa_fidelity: str = "scalar",
-        dpa=None) -> PacketAllgatherResult:
+        dpa=None, engine: str = "vectorized") -> PacketAllgatherResult:
     """Packet-fidelity Allgather: a facade over the Collective Schedule IR.
     Builds the Appendix-A schedule graph (typed Multicast ops + Activation
     edges, uneven chains supported) and executes it at packet fidelity —
@@ -800,7 +1131,8 @@ def simulate_packet_allgather(
                             topology=topology, hosts=hosts, loss=loss,
                             max_rounds=max_rounds,
                             aggregate_nacks=aggregate_nacks,
-                            dpa_fidelity=dpa_fidelity, dpa=dpa)
+                            dpa_fidelity=dpa_fidelity, dpa=dpa,
+                            engine=engine)
 
 
 # --------------------------------------------- FSDP overlay (closed timing)

@@ -56,6 +56,7 @@ from repro.core.engine import (
     WorkerParams,
     staging_rnr_mask,
     worker_pool_completion,
+    worker_pool_completion_rows,
 )
 
 FIDELITIES = ("analytic", "fluid", "packet")
@@ -796,7 +797,8 @@ def _packet_allgather(sched: Schedule, fabric: FabricParams,
                       topology=None, hosts=None, loss=None,
                       max_rounds: int | None = None,
                       aggregate_nacks: bool = True,
-                      dpa_fidelity: str = "scalar", dpa=None):
+                      dpa_fidelity: str = "scalar", dpa=None,
+                      engine: str = "vectorized"):
     """Packet-fidelity lowering of an allgather schedule: each activation
     generation's Multicast roots run concurrent packet Broadcasts — fast
     paths AND retransmission flows share one engine (recovery traffic
@@ -819,6 +821,8 @@ def _packet_allgather(sched: Schedule, fabric: FabricParams,
     p, n_bytes = sched.p, sched.n_bytes
     if max_rounds is None:
         max_rounds = pk.DEFAULT_MAX_ROUNDS
+    assert engine in pk.ENGINES, engine
+    vec = engine == "vectorized"
     assert dpa_fidelity in DPA_FIDELITIES, dpa_fidelity
     assert dpa is None or dpa_fidelity == "event", \
         "dpa= requires dpa_fidelity='event'"
@@ -885,6 +889,105 @@ def _packet_allgather(sched: Schedule, fabric: FabricParams,
         n_rnr = int(rnr.sum())
         return t_done, got, n_rnr
 
+    # ---- vectorized-engine machinery (engine="vectorized"; DESIGN.md §9).
+    # Jitter elision: at jitter==0 every per-(leaf,chain) draw returns
+    # exactly 0.0 and x + 0.0 == x bitwise for the (positive) arrival
+    # times, so the draws can be skipped outright — but ONLY when nothing
+    # later reads the shared rng: with a routed topology AND a loss
+    # template, later generations fork per-link models from the same rng,
+    # so the (all-zero) draws are still consumed, as one batch. numpy's
+    # uniform fills are stream-splittable: one sized draw is bitwise the
+    # concatenation of the reference's per-(leaf,chain) draws, and size-0
+    # draws do not advance the stream.
+    skip_jitter = vec and fabric.jitter == 0.0 and (
+        topology is None or template is None)
+
+    def draw_jitter(total: int):
+        if skip_jitter:
+            return None
+        return rng.uniform(0.0, fabric.jitter, size=total)
+
+    def _cat(parts, dtype=None):
+        if not parts:
+            return np.empty(0, dtype=(dtype or float))
+        return np.concatenate(parts)
+
+    def pool_merged_rows(counts, arr_flat, key_flat, psn_flat, key_of,
+                         t_floors, padded=False):
+        """Batched pool_merged over a block of leaves (scalar pool only):
+        pad the ragged per-leaf merged rows to one matrix, row-sort by
+        arrival, run ONE worker_pool_completion_rows pass, and split the
+        results back into pool_merged's (t_done, got, n_rnr) per leaf.
+        ``key_of[k]`` maps row k's integer chain keys to chain objects.
+        With ``padded=True`` the three flats are already (B, maxc) matrices
+        whose sentinel entries (+inf arrival / -1 key / -1 psn) may sit
+        mid-row (a chain's slot at its own root leaf): the sort check below
+        sees the +inf descent and reorders them past the real prefix, and
+        ``counts`` stays the REAL per-row entry count."""
+        B = len(counts)
+        counts = np.asarray(counts, dtype=np.intp)
+        if padded:
+            arr_pad, key_pad, psn_pad = arr_flat, key_flat, psn_flat
+            maxc = arr_pad.shape[1]
+            total = int(counts.sum())
+            rows_full = True                   # sentinels already in place
+        else:
+            total = int(counts.sum())
+            maxc = int(counts.max()) if B else 0
+            rows_full = bool(B) and total == B * maxc
+        if rows_full and not padded:
+            # dense block (lossless rounds): every row is full, so the
+            # row-major flats ARE the matrix — skip the scatter-pad
+            arr_pad = arr_flat.reshape(B, maxc)
+            key_pad = key_flat.reshape(B, maxc)
+            psn_pad = psn_flat.reshape(B, maxc)
+        elif not padded:
+            starts = np.cumsum(counts) - counts
+            rows = np.repeat(np.arange(B, dtype=np.intp), counts)
+            within = (np.arange(total, dtype=np.intp)
+                      - np.repeat(starts, counts))
+            arr_pad = np.full((B, maxc), np.inf)
+            key_pad = np.full((B, maxc), -1, dtype=np.intp)
+            psn_pad = np.full((B, maxc), -1, dtype=np.intp)
+            arr_pad[rows, within] = arr_flat
+            key_pad[rows, within] = key_flat
+            psn_pad[rows, within] = psn_flat
+        # stable row argsort == the reference's per-leaf argsort; elide it
+        # when every row is already nondecreasing (single chain, no
+        # jitter: a stable argsort of a sorted row is the identity)
+        if total and bool(np.any(arr_pad[:, 1:] < arr_pad[:, :-1])):
+            order = np.argsort(arr_pad, axis=1, kind="stable")
+            arr_pad = np.take_along_axis(arr_pad, order, axis=1)
+            key_pad = np.take_along_axis(key_pad, order, axis=1)
+            psn_pad = np.take_along_axis(psn_pad, order, axis=1)
+        done, rnr_mask = worker_pool_completion_rows(
+            arr_pad, workers.n_recv_workers, service, workers.staging_chunks)
+        # row-batched epilogue: per-row t_done (max over the real prefix —
+        # the -inf fill never wins for a nonempty row) and RNR totals; the
+        # per-chain got split is only materialised for rows that actually
+        # dropped something (got=None == "every submitted PSN delivered")
+        nrnr = rnr_mask.sum(axis=1)
+        if maxc:
+            tdone = np.max(np.where(np.arange(maxc)[None, :]
+                                    < counts[:, None], done, -np.inf),
+                           axis=1)
+        out = []
+        for k in range(B):
+            c = int(counts[k])
+            if c == 0:
+                out.append((t_floors[k], {}, 0))
+                continue
+            if not nrnr[k]:
+                out.append((float(tdone[k]), None, 0))
+                continue
+            ro, ko, po = rnr_mask[k, :c], key_pad[k, :c], psn_pad[k, :c]
+            got = {}
+            for ky, ch in key_of[k].items():
+                sel = ko == ky
+                got[ch] = (po[sel & ~ro], po[sel & ro])
+            out.append((float(tdone[k]), got, int(nrnr[k])))
+        return out
+
     t = t_rnr
     traces: list = []
     mcast_time = 0.0
@@ -916,29 +1019,194 @@ def _packet_allgather(sched: Schedule, fabric: FabricParams,
         # fast path: merged per-leaf pool over every chain's survivors
         t_fast = t
         leaf_done = np.full(p, t)
-        for leaf in range(p):
-            entries = []
+        if vec:
+            # pass 1 (rng-free: masks are presampled): per-chain batched
+            # loss rows, then per-(leaf, chain) surviving PSNs leaf-major
+            psn_all = np.arange(n_chunks)
+            chain_lost = []
             for ch in chains:
-                if leaf == ch.root:
+                if any(m is not None for m in ch.models.values()):
+                    lv = sorted(ch.paths)
+                    chain_lost.append(
+                        (pk._stacked_lost(ch.paths, ch.masks, lv, n_chunks),
+                         {lf: k for k, lf in enumerate(lv)}))
+                else:
+                    chain_lost.append(None)
+            m = len(chains)
+            dense = pools is None and all(cl is None for cl in chain_lost)
+            if dense:
+                # lossless scalar-pool generation: every (leaf, chain!=root)
+                # pair receives the full PSN range, so the whole block's
+                # merged rows are one broadcasted (leaves, chains, chunks)
+                # tensor — no per-(leaf, chain) python at all. Each chain
+                # skips exactly its root leaf, hence the jitter total.
+                jall = draw_jitter((p * m - m) * n_chunks)
+            else:
+                ent = {}
+                sizes = []
+                for leaf in range(p):
+                    for ci, ch in enumerate(chains):
+                        if leaf == ch.root:
+                            continue
+                        cl = chain_lost[ci]
+                        if cl is None:
+                            psns = psn_all
+                        else:
+                            row = cl[0][cl[1][leaf]]
+                            psns = np.nonzero(~row)[0]
+                            if psns.shape[0] < n_chunks:
+                                ch.missing[leaf] = row.copy()
+                        ent[leaf, ci] = psns
+                        sizes.append(psns.shape[0])
+                jall = draw_jitter(int(np.sum(sizes, dtype=np.int64)))
+            jpos = 0
+            blk = max(1, pk._BLOCK_ELEMS
+                      // max(n_chunks * len(chains), 1))
+            inj = np.stack([ch.inject for ch in chains]) if dense else None
+            for b0 in range(0, p, blk):
+                b1 = min(b0 + blk, p)
+                leaves_blk = range(b0, b1)
+                if dense:
+                    bp = b1 - b0
+                    hop = np.empty((bp, m))
+                    valid = np.ones((bp, m), dtype=bool)
+                    for ci, ch in enumerate(chains):
+                        # a chain has no path to its own root; that slot is
+                        # masked out (sentinel / valid=False) below
+                        hop[:, ci] = [hop_lat(ch, lf) if lf != ch.root
+                                      else 0.0 for lf in leaves_blk]
+                        if b0 <= ch.root < b1:
+                            valid[ch.root - b0, ci] = False
+                    # inject + hop in the reference's operand order (the
+                    # add is bitwise order-independent, but keep it legible)
+                    arr3 = inj[None, :, :] + hop[:, :, None]
+                    counts = valid.sum(axis=1) * n_chunks
+                    key_of = [{ci: chains[ci] for ci in range(m)
+                               if chains[ci].root != leaf}
+                              for leaf in leaves_blk]
+                    if jall is None:
+                        # no jitter draws to line up per entry: hand the
+                        # broadcasted tensor over as pre-padded matrices,
+                        # each chain's own-root slot turned into sentinels
+                        key_pat = np.repeat(np.arange(m, dtype=np.intp),
+                                            n_chunks)
+                        psn_pat = np.tile(psn_all, m)
+                        key_mat = np.broadcast_to(key_pat,
+                                                  (bp, m * n_chunks))
+                        psn_mat = np.broadcast_to(psn_pat,
+                                                  (bp, m * n_chunks))
+                        if not valid.all():
+                            key_mat = key_mat.copy()
+                            psn_mat = psn_mat.copy()
+                            for ci, ch in enumerate(chains):
+                                if b0 <= ch.root < b1:
+                                    sl = slice(ci * n_chunks,
+                                               (ci + 1) * n_chunks)
+                                    arr3[ch.root - b0, ci, :] = np.inf
+                                    key_mat[ch.root - b0, sl] = -1
+                                    psn_mat[ch.root - b0, sl] = -1
+                        res = pool_merged_rows(
+                            counts, arr3.reshape(bp, m * n_chunks),
+                            key_mat, psn_mat, key_of, [t] * bp,
+                            padded=True)
+                    else:
+                        arr_flat = arr3[valid].reshape(-1)
+                        arr_flat = arr_flat + jall[jpos:jpos
+                                                   + arr_flat.size]
+                        jpos += arr_flat.size
+                        nv = int(valid.sum())
+                        psn_flat = np.tile(psn_all, nv)
+                        key_flat = np.repeat(
+                            np.tile(np.arange(m, dtype=np.intp),
+                                    bp)[valid.reshape(-1)], n_chunks)
+                        res = pool_merged_rows(counts, arr_flat, key_flat,
+                                               psn_flat, key_of, [t] * bp)
+                    for leaf, (t_done, got, n_rnr) in zip(leaves_blk, res):
+                        rnr_total += n_rnr
+                        if got:
+                            for ch in chains:
+                                if ch in got:
+                                    _, dropped = got[ch]
+                                    if dropped.size:
+                                        mm = ch.missing.setdefault(
+                                            leaf,
+                                            np.zeros(n_chunks, dtype=bool))
+                                        mm[dropped] = True
+                        leaf_done[leaf] = t_done
+                        t_fast = max(t_fast, t_done)
                     continue
-                lost = pk._leaf_lost(ch.paths[leaf], ch.masks, n_chunks)
-                psns = np.nonzero(~lost)[0]
-                if lost.any():
-                    ch.missing[leaf] = lost.copy()
-                arr = (ch.inject[psns] + hop_lat(ch, leaf)
-                       + rng.uniform(0.0, fabric.jitter, size=psns.shape[0]))
-                entries.append((ch, psns, arr))
-            t_done, got, n_rnr = pool_merged(entries, t, leaf)
-            rnr_total += n_rnr
-            for ch in chains:
-                if ch in got:
-                    _, dropped = got[ch]
-                    if dropped.size:
-                        m = ch.missing.setdefault(
-                            leaf, np.zeros(n_chunks, dtype=bool))
-                        m[dropped] = True
-            leaf_done[leaf] = t_done
-            t_fast = max(t_fast, t_done)
+                counts, key_of = [], []
+                arrs, keys, psns_f = [], [], []
+                ev_entries = []
+                for leaf in leaves_blk:
+                    c, kd, ev = 0, {}, []
+                    for ci, ch in enumerate(chains):
+                        if leaf == ch.root:
+                            continue
+                        psns = ent.pop((leaf, ci))
+                        a = ch.inject[psns] + hop_lat(ch, leaf)
+                        if jall is not None:
+                            a = a + jall[jpos:jpos + psns.shape[0]]
+                            jpos += psns.shape[0]
+                        if pools is None:
+                            arrs.append(a)
+                            psns_f.append(psns)
+                            keys.append(np.full(psns.shape[0], ci,
+                                                dtype=np.intp))
+                            kd[ci] = ch
+                            c += psns.shape[0]
+                        else:
+                            ev.append((ch, psns, a))
+                    if pools is None:
+                        counts.append(c)
+                        key_of.append(kd)
+                    else:
+                        ev_entries.append(ev)
+                if pools is None:
+                    res = pool_merged_rows(
+                        counts, _cat(arrs), _cat(keys, np.intp),
+                        _cat(psns_f, np.intp), key_of,
+                        [t] * len(counts))
+                else:
+                    res = [pool_merged(ev, t, leaf)
+                           for leaf, ev in zip(leaves_blk, ev_entries)]
+                for leaf, (t_done, got, n_rnr) in zip(leaves_blk, res):
+                    rnr_total += n_rnr
+                    if got:
+                        for ch in chains:
+                            if ch in got:
+                                _, dropped = got[ch]
+                                if dropped.size:
+                                    mm = ch.missing.setdefault(
+                                        leaf, np.zeros(n_chunks, dtype=bool))
+                                    mm[dropped] = True
+                    leaf_done[leaf] = t_done
+                    t_fast = max(t_fast, t_done)
+        else:
+            for leaf in range(p):
+                entries = []
+                for ch in chains:
+                    if leaf == ch.root:
+                        continue
+                    lost = pk._leaf_lost(ch.paths[leaf], ch.masks, n_chunks)
+                    psns = np.nonzero(~lost)[0]
+                    if lost.any():
+                        ch.missing[leaf] = lost.copy()
+                    arr = (ch.inject[psns] + hop_lat(ch, leaf)
+                           + rng.uniform(0.0, fabric.jitter,
+                                         size=psns.shape[0]))
+                    entries.append((ch, psns, arr))
+                t_done, got, n_rnr = pool_merged(entries, t, leaf)
+                rnr_total += n_rnr
+                for ch in chains:
+                    if ch in got:
+                        _, dropped = got[ch]
+                        if dropped.size:
+                            m = ch.missing.setdefault(
+                                leaf, np.zeros(n_chunks, dtype=bool))
+                            m[dropped] = True
+                leaf_done[leaf] = t_done
+                t_fast = max(t_fast, t_done)
         mcast_time += max(t_fast - t, 0.0)
         # interleaved recovery: every incomplete chain NACKs + retransmits
         # concurrently; retx flows contend on the shared engine and the
@@ -998,37 +1266,133 @@ def _packet_allgather(sched: Schedule, fabric: FabricParams,
                                         sorted(ch.missing)),
                     ch.retx[1].size)
             chain_recovered = {id(ch): 0 for ch in live}
-            for leaf in range(p):
-                entries = []
+            if vec:
+                # per chain: retransmit injection times ONCE (the reference
+                # recomputes them per leaf — equal values) and one batched
+                # loss-row matrix over its nackers
+                linfo = []
                 for ch in live:
-                    if leaf not in ch.missing:
-                        continue
                     rflow, upos, _, _ = ch.retx
-                    inject_r = rflow.chunk_times(upos.size, chunk)
-                    miss = np.nonzero(ch.missing[leaf])[0]
-                    pos = np.searchsorted(upos, miss)
-                    lost = pk._leaf_lost(ch.paths[leaf], ch.rmasks,
-                                         upos.size)[pos]
-                    got_pos, got_psn = pos[~lost], miss[~lost]
-                    arr = (inject_r[got_pos] + hop_lat(ch, leaf)
-                           + rng.uniform(0.0, fabric.jitter,
-                                         size=got_psn.shape[0]))
-                    entries.append((ch, got_psn, arr))
-                t_done, got, n_rnr = pool_merged(entries,
-                                                 float(leaf_done[leaf]), leaf)
-                rnr_total += n_rnr
-                for ch in live:
-                    if leaf not in ch.missing or ch not in got:
-                        continue
-                    delivered, _ = got[ch]
-                    ch.missing[leaf][delivered] = False
-                    recovered_total += delivered.shape[0]
-                    chain_recovered[id(ch)] += delivered.shape[0]
-                    if not ch.missing[leaf].any():
-                        del ch.missing[leaf]
-                if entries:
-                    leaf_done[leaf] = t_done
-                    t_round_end = max(t_round_end, t_done)
+                    nk = sorted(ch.missing)
+                    lm = None
+                    if any(ch.models[id(lk)] is not None
+                           for lf in nk for lk in ch.paths[lf]):
+                        lm = (pk._stacked_lost(ch.paths, ch.rmasks, nk,
+                                               upos.size),
+                              {lf: k for k, lf in enumerate(nk)})
+                    linfo.append((rflow.chunk_times(upos.size, chunk),
+                                  upos, lm))
+                rleaves = sorted({lf for ch in live for lf in ch.missing})
+                ent = {}
+                sizes = []
+                for leaf in rleaves:
+                    for li, ch in enumerate(live):
+                        if leaf not in ch.missing:
+                            continue
+                        inject_r, upos, lm = linfo[li]
+                        miss = np.nonzero(ch.missing[leaf])[0]
+                        pos = np.searchsorted(upos, miss)   # upos ⊇ miss
+                        if lm is None:
+                            got_pos, got_psn = pos, miss
+                        else:
+                            la = lm[0][lm[1][leaf], pos]
+                            got_pos, got_psn = pos[~la], miss[~la]
+                        ent[leaf, li] = (got_psn,
+                                         inject_r[got_pos]
+                                         + hop_lat(ch, leaf))
+                        sizes.append(got_psn.shape[0])
+                jall = draw_jitter(int(np.sum(sizes, dtype=np.int64)))
+                jpos = 0
+                u_max = max((info[1].size for info in linfo), default=0)
+                blk = max(1, pk._BLOCK_ELEMS // max(u_max * len(live), 1))
+                for b0 in range(0, len(rleaves), blk):
+                    leaves_blk = rleaves[b0:b0 + blk]
+                    counts, key_of, t_floors = [], [], []
+                    arrs, keys, psns_f = [], [], []
+                    ev_entries, subms = [], []
+                    for leaf in leaves_blk:
+                        c, kd, ev, sd = 0, {}, [], {}
+                        for li, ch in enumerate(live):
+                            if (leaf, li) not in ent:
+                                continue
+                            got_psn, a = ent.pop((leaf, li))
+                            if jall is not None:
+                                a = a + jall[jpos:jpos + got_psn.shape[0]]
+                                jpos += got_psn.shape[0]
+                            if pools is None:
+                                arrs.append(a)
+                                psns_f.append(got_psn)
+                                keys.append(np.full(got_psn.shape[0], li,
+                                                    dtype=np.intp))
+                                kd[li] = ch
+                                sd[ch] = got_psn
+                                c += got_psn.shape[0]
+                            else:
+                                ev.append((ch, got_psn, a))
+                        subms.append(sd)
+                        if pools is None:
+                            counts.append(c)
+                            key_of.append(kd)
+                            t_floors.append(float(leaf_done[leaf]))
+                        else:
+                            ev_entries.append(ev)
+                    if pools is None:
+                        res = pool_merged_rows(
+                            counts, _cat(arrs), _cat(keys, np.intp),
+                            _cat(psns_f, np.intp), key_of, t_floors)
+                    else:
+                        res = [pool_merged(ev, float(leaf_done[leaf]), leaf)
+                               for leaf, ev in zip(leaves_blk, ev_entries)]
+                    for leaf, (t_done, got, n_rnr), sd in zip(
+                            leaves_blk, res, subms):
+                        rnr_total += n_rnr
+                        # got=None: nothing hit RNR, so every chain's
+                        # delivered set is exactly the PSNs it submitted
+                        g = sd if got is None else got
+                        for ch in live:
+                            if leaf not in ch.missing or ch not in g:
+                                continue
+                            delivered = (g[ch] if got is None
+                                         else got[ch][0])
+                            ch.missing[leaf][delivered] = False
+                            recovered_total += delivered.shape[0]
+                            chain_recovered[id(ch)] += delivered.shape[0]
+                            if not ch.missing[leaf].any():
+                                del ch.missing[leaf]
+                        leaf_done[leaf] = t_done
+                        t_round_end = max(t_round_end, t_done)
+            else:
+                for leaf in range(p):
+                    entries = []
+                    for ch in live:
+                        if leaf not in ch.missing:
+                            continue
+                        rflow, upos, _, _ = ch.retx
+                        inject_r = rflow.chunk_times(upos.size, chunk)
+                        miss = np.nonzero(ch.missing[leaf])[0]
+                        pos = np.searchsorted(upos, miss)
+                        lost = pk._leaf_lost(ch.paths[leaf], ch.rmasks,
+                                             upos.size)[pos]
+                        got_pos, got_psn = pos[~lost], miss[~lost]
+                        arr = (inject_r[got_pos] + hop_lat(ch, leaf)
+                               + rng.uniform(0.0, fabric.jitter,
+                                             size=got_psn.shape[0]))
+                        entries.append((ch, got_psn, arr))
+                    t_done, got, n_rnr = pool_merged(
+                        entries, float(leaf_done[leaf]), leaf)
+                    rnr_total += n_rnr
+                    for ch in live:
+                        if leaf not in ch.missing or ch not in got:
+                            continue
+                        delivered, _ = got[ch]
+                        ch.missing[leaf][delivered] = False
+                        recovered_total += delivered.shape[0]
+                        chain_recovered[id(ch)] += delivered.shape[0]
+                        if not ch.missing[leaf].any():
+                            del ch.missing[leaf]
+                    if entries:
+                        leaf_done[leaf] = t_done
+                        t_round_end = max(t_round_end, t_done)
             for ch in live:
                 rflow, upos, nackers, arrivals = ch.retx
                 traces.append(pk.RoundTrace(
@@ -1232,7 +1596,9 @@ def execute(sched: Schedule, fabric: FabricParams | None = None,
     to be duplicated across simulator.py / engine.py / packet.py lives in
     the lowering functions above. Extra keyword arguments are
     fidelity-specific (packet: max_rounds / aggregate_nacks / dpa_fidelity /
-    dpa; fsdp_step: the compute keywords of engine.simulate_fsdp_step)."""
+    dpa, plus engine="vectorized"|"reference" selecting the batched packet
+    executor or the per-leaf oracle it is pinned bit-exact against;
+    fsdp_step: the compute keywords of engine.simulate_fsdp_step)."""
     assert fidelity in FIDELITIES, fidelity
     fabric = fabric or FabricParams()
     workers = workers or WorkerParams()

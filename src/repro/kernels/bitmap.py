@@ -24,7 +24,9 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.bitmap_np import (  # noqa: F401  (re-exported twins)
     bitmap_pack_np,
+    bitmap_pack_rows_np,
     bitmap_popcount_np,
+    bitmap_popcount_rows_np,
     bitmap_unpack_np,
 )
 

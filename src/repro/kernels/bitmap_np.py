@@ -35,3 +35,27 @@ def bitmap_popcount_np(words: np.ndarray) -> int:
     if hasattr(np, "bitwise_count"):          # numpy >= 2.0
         return int(np.bitwise_count(w).sum())
     return int(bitmap_unpack_np(w).sum())
+
+
+def bitmap_pack_rows_np(flags: np.ndarray) -> np.ndarray:
+    """Row-batched bitmap_pack_np: flags (r, n) 0/1 with n % 32 == 0 ->
+    packed (r, n/32) uint32 — each row bit-identical to bitmap_pack_np of
+    that row (the vectorized packet engine packs every leaf's NACK bitmap
+    in one call and OR-reduces the rows for the aggregated union)."""
+    f = np.asarray(flags, dtype=np.uint32)
+    assert f.ndim == 2 and f.shape[1] % 32 == 0, f.shape
+    f = f.reshape(f.shape[0], -1, 32)
+    shifts = np.arange(32, dtype=np.uint32)
+    return np.bitwise_or.reduce(f << shifts, axis=2).astype(np.uint32)
+
+
+def bitmap_popcount_rows_np(words: np.ndarray) -> np.ndarray:
+    """Per-row set-bit counts over packed (r, w) uint32 rows — each entry
+    equals bitmap_popcount_np of that row."""
+    w = np.asarray(words, dtype=np.uint32)
+    assert w.ndim == 2, w.shape
+    if hasattr(np, "bitwise_count"):          # numpy >= 2.0
+        return np.bitwise_count(w).sum(axis=1).astype(np.int64)
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = ((w[:, :, None] >> shifts) & 1).astype(np.int64)
+    return bits.sum(axis=(1, 2))

@@ -464,14 +464,31 @@ def test_gilbert_elliott_chain_state_persists_across_replays(rate, burst,
 def test_packet_hot_path_is_jax_free():
     """The packet engine's wire-format bitmaps come from the jax-free
     kernels/bitmap_np.py twins: importing the simulator/protocol/packet
-    stack must never pull in jax (the CI smoke benchmarks depend on it)."""
+    stack must never pull in jax (the CI smoke benchmarks depend on it).
+    Runs BOTH engines end to end — the vectorized default's batched
+    bitmap/pool imports (and the PEP 562 lazy kernels re-exports) must not
+    regress the jax-free guarantee either."""
     import subprocess
     import sys
 
-    code = ("import sys\n"
-            "import repro.core.packet, repro.core.simulator\n"
-            "import repro.core.protocol, repro.kernels.bitmap_np\n"
-            "assert 'jax' not in sys.modules, 'jax leaked into the hot path'\n")
+    code = (
+        "import sys\n"
+        "import numpy as np\n"
+        "from repro.core.packet import (simulate_packet_broadcast,\n"
+        "                               simulate_packet_allgather)\n"
+        "from repro.core.engine import FabricParams, WorkerParams\n"
+        "import repro.core.protocol, repro.kernels.bitmap_np\n"
+        "fab, wk = FabricParams(), WorkerParams(n_recv_workers=8)\n"
+        "for eng in ('vectorized', 'reference'):\n"
+        "    r = simulate_packet_broadcast(8, 1 << 16, fab, wk,\n"
+        "                                  np.random.default_rng(0),\n"
+        "                                  loss=0.02, engine=eng)\n"
+        "    assert r.completed\n"
+        "    a = simulate_packet_allgather(4, 1 << 15, fab, wk,\n"
+        "                                  np.random.default_rng(0), 2,\n"
+        "                                  loss=0.02, engine=eng)\n"
+        "    assert a.completed\n"
+        "assert 'jax' not in sys.modules, 'jax leaked into the hot path'\n")
     res = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True)
     assert res.returncode == 0, res.stderr[-2000:]

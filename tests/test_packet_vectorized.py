@@ -1,0 +1,374 @@
+"""Differential harness pinning the vectorized packet engine bit-exact
+against the per-leaf reference (core/packet.py engine="vectorized" vs
+"reference", and the same knob through sched_ir.execute for allgather).
+
+ZERO tolerance everywhere: the batch engine is a pure re-execution strategy
+— same protocol, same RNG stream (modulo the documented jitter-elision
+contract at jitter == 0), same floats in the same order — so every field of
+every result, every per-round trace, and the staging-ring delivery order
+must match EXACTLY. Property suites run through tests/_hypothesis_shim.py
+(or real hypothesis when installed); REPRO_TEST_SEED salts the sample sets.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    FabricParams,
+    WorkerParams,
+    worker_pool_completion,
+    worker_pool_completion_rows,
+)
+from repro.core.packet import (
+    GilbertElliottLoss,
+    attach_loss,
+    simulate_packet_allgather,
+    simulate_packet_broadcast,
+)
+from repro.core.topology import FatTree
+from repro.kernels.bitmap_np import (
+    bitmap_pack_np,
+    bitmap_pack_rows_np,
+    bitmap_popcount_np,
+    bitmap_popcount_rows_np,
+)
+
+try:
+    import hypothesis.strategies as hyp_st
+    from hypothesis import given as hyp_given, settings as hyp_settings
+except ImportError:
+    from _hypothesis_shim import (given as hyp_given,
+                                  settings as hyp_settings,
+                                  strategies as hyp_st)
+
+FAB = FabricParams(jitter=0.0)
+FABJ = FabricParams()                      # default jitter 1e-6
+WK = WorkerParams(n_recv_workers=8)        # pool rate > wire rate: no RNR
+WK1 = WorkerParams()                       # 1 worker: RNR-prone
+
+
+def assert_bcast_equal(a, b, ctx=""):
+    """Every observable of PacketBcastResult, exactly."""
+    np.testing.assert_array_equal(a.completion, b.completion, err_msg=ctx)
+    assert a.phases == b.phases, ctx
+    assert (a.delivered_fast, a.recovered, a.rnr_drops) == \
+        (b.delivered_fast, b.recovered, b.rnr_drops), ctx
+    assert (a.bytes_fast, a.bytes_recovery, a.bytes_total) == \
+        (b.bytes_fast, b.bytes_recovery, b.bytes_total), ctx
+    assert (a.retransmit_wire_bytes, a.duplicates, a.completed) == \
+        (b.retransmit_wire_bytes, b.duplicates, b.completed), ctx
+    assert a.link_bytes == b.link_bytes, ctx
+    assert len(a.rounds) == len(b.rounds), ctx
+    for ta, tb in zip(a.rounds, b.rounds):
+        assert ta == tb, (ctx, ta, tb)
+    assert sorted(a.delivery_order) == sorted(b.delivery_order), ctx
+    for leaf in a.delivery_order:
+        np.testing.assert_array_equal(a.delivery_order[leaf],
+                                      b.delivery_order[leaf],
+                                      err_msg=f"{ctx} leaf={leaf}")
+
+
+def assert_ag_equal(a, b, ctx=""):
+    """Every observable of PacketAllgatherResult, exactly."""
+    assert (a.time, a.completed) == (b.time, b.completed), ctx
+    assert a.phases == b.phases, ctx
+    assert (a.recovered, a.rnr_drops, a.retransmit_wire_bytes) == \
+        (b.recovered, b.rnr_drops, b.retransmit_wire_bytes), ctx
+    assert (a.bytes_fast, a.bytes_recovery, a.bytes_total) == \
+        (b.bytes_fast, b.bytes_recovery, b.bytes_total), ctx
+    assert a.per_rank_recv_tput == b.per_rank_recv_tput, ctx
+    assert a.link_bytes == b.link_bytes, ctx
+    assert len(a.rounds) == len(b.rounds), ctx
+    for ta, tb in zip(a.rounds, b.rounds):
+        assert ta == tb, (ctx, ta, tb)
+
+
+def run_bcast(engine, p, n, fab, wk, seed, **kw):
+    return simulate_packet_broadcast(p, n, fab, wk,
+                                     np.random.default_rng(seed), **kw,
+                                     engine=engine)
+
+
+# ------------------------------------------------- broadcast differential grid
+
+
+GE = GilbertElliottLoss.from_rate(0.01, mean_burst=8.0)
+
+BCAST_GRID = [
+    # (p, n_bytes, fab, wk, loss, routed, seed)
+    (4, 1 << 16, FAB, WK, None, False, 0),
+    (4, 1 << 16, FABJ, WK, 0.02, False, 1),
+    (16, 1 << 18, FAB, WK, 0.01, False, 0),
+    (16, 1 << 18, FABJ, WK, None, False, 2),
+    (16, 1 << 18, FABJ, WK1, 0.01, False, 3),       # RNR + loss + jitter
+    (16, 1 << 18, FAB, WK, GE, False, 0),           # bursty chains
+    (16, 1 << 17, FABJ, WK, 0.01, True, 1),         # routed FatTree
+    (64, 1 << 18, FAB, WK, 0.005, True, 0),
+    (64, 1 << 18, FABJ, WK1, GE, False, 4),
+    (512, 1 << 18, FAB, WK, 0.002, False, 0),
+]
+
+
+@pytest.mark.parametrize("p,n,fab,wk,loss,routed,seed", BCAST_GRID)
+def test_broadcast_vectorized_matches_reference(p, n, fab, wk, loss,
+                                                routed, seed):
+    topo = (FatTree(k=8 if p <= 64 else 32, n_hosts=p, b_host=fab.b_link)
+            if routed else None)
+    kw = dict(topology=topo, loss=loss, collect_delivery=True)
+    a = run_bcast("vectorized", p, n, fab, wk, seed, **kw)
+    b = run_bcast("reference", p, n, fab, wk, seed, **kw)
+    assert_bcast_equal(a, b, ctx=f"p={p} loss={loss} routed={routed}")
+
+
+def test_broadcast_unaggregated_nacks_match():
+    for seed in (0, 1):
+        a = run_bcast("vectorized", 16, 1 << 18, FABJ, WK, seed, loss=0.02,
+                      aggregate_nacks=False, collect_delivery=True)
+        b = run_bcast("reference", 16, 1 << 18, FABJ, WK, seed, loss=0.02,
+                      aggregate_nacks=False, collect_delivery=True)
+        assert_bcast_equal(a, b, ctx=f"noagg seed={seed}")
+
+
+def test_broadcast_event_dpa_fidelity_matches():
+    """dpa_fidelity="event": the vectorized engine must drive the stateful
+    per-leaf DpaEventPools in the reference's sequential order."""
+    for seed, loss in ((0, 0.02), (1, None)):
+        a = run_bcast("vectorized", 16, 1 << 18, FABJ, WK, seed, loss=loss,
+                      dpa_fidelity="event", collect_delivery=True)
+        b = run_bcast("reference", 16, 1 << 18, FABJ, WK, seed, loss=loss,
+                      dpa_fidelity="event", collect_delivery=True)
+        assert_bcast_equal(a, b, ctx=f"event seed={seed} loss={loss}")
+
+
+def test_broadcast_heavy_loss_multi_round_matches():
+    """Many recovery rounds + staging overflow: the retransmit/NACK union
+    and still-lost bookkeeping must agree round by round."""
+    a = run_bcast("vectorized", 32, 1 << 18, FABJ, WK1, 5, loss=0.2,
+                  collect_delivery=True)
+    b = run_bcast("reference", 32, 1 << 18, FABJ, WK1, 5, loss=0.2,
+                  collect_delivery=True)
+    assert len(a.rounds) >= 2
+    assert_bcast_equal(a, b, ctx="heavy loss")
+
+
+def test_broadcast_delivery_replays_identically_through_reassembly():
+    """The staging order both engines hand to kernels/chunk_reassembly.py is
+    the same array, so the replayed scatter is the same buffer (checked
+    jax-free here: the scatter is a pure permutation replay)."""
+    mtu = 128
+    fab = FabricParams(jitter=0.0, mtu=mtu)
+    a = run_bcast("vectorized", 8, 64 * mtu, fab, WK, 11, loss=0.05,
+                  collect_delivery=True)
+    b = run_bcast("reference", 8, 64 * mtu, fab, WK, 11, loss=0.05,
+                  collect_delivery=True)
+    assert a.completed and a.recovered > 0
+    src = np.arange(64 * mtu, dtype=np.uint8).reshape(64, mtu)
+    for leaf, order in a.delivery_order.items():
+        np.testing.assert_array_equal(order, b.delivery_order[leaf])
+        assert sorted(order.tolist()) == list(range(64))   # exactly-once
+        user = np.zeros_like(src)
+        user[order] = src[order]                           # scatter replay
+        np.testing.assert_array_equal(user, src)
+
+
+# ------------------------------------------------- allgather differential grid
+
+
+AG_GRID = [
+    # (p, n_bytes, m, fab, wk, loss, routed, seed)
+    (4, 1 << 16, 1, FAB, WK, None, False, 0),
+    (8, 1 << 17, 2, FABJ, WK, None, False, 1),
+    (16, 1 << 17, 2, FAB, WK, 0.01, False, 0),
+    (16, 1 << 17, 4, FABJ, WK1, 0.01, False, 2),    # RNR + loss
+    (16, 1 << 17, 2, FABJ, WK, GE, False, 0),
+    (16, 1 << 16, 2, FABJ, WK, 0.005, True, 1),     # routed FatTree
+    (16, 1 << 16, 4, FAB, WK1, None, False, 3),     # RNR at jitter 0
+]
+
+
+@pytest.mark.parametrize("p,n,m,fab,wk,loss,routed,seed", AG_GRID)
+def test_allgather_vectorized_matches_reference(p, n, m, fab, wk, loss,
+                                                routed, seed):
+    topo = FatTree(k=8, n_hosts=p, b_host=fab.b_link) if routed else None
+    res = {}
+    for eng in ("vectorized", "reference"):
+        res[eng] = simulate_packet_allgather(
+            p, n, fab, wk, np.random.default_rng(seed), m, topology=topo,
+            loss=loss, engine=eng)
+    assert_ag_equal(res["vectorized"], res["reference"],
+                    ctx=f"p={p} m={m} loss={loss} routed={routed}")
+
+
+def test_allgather_event_dpa_fidelity_matches():
+    for seed in (0, 1):
+        res = {}
+        for eng in ("vectorized", "reference"):
+            res[eng] = simulate_packet_allgather(
+                8, 1 << 16, FABJ, WK, np.random.default_rng(seed), 2,
+                loss=0.02, dpa_fidelity="event", engine=eng)
+        assert_ag_equal(res["vectorized"], res["reference"],
+                        ctx=f"event seed={seed}")
+
+
+# ----------------------------------------------------- property suites (shim)
+
+
+@hyp_settings(max_examples=12, deadline=None)
+@hyp_given(hyp_st.integers(4, 48), hyp_st.floats(0.0, 0.08),
+           hyp_st.booleans(), hyp_st.booleans(),
+           hyp_st.integers(0, 2**31 - 1))
+def test_property_vectorized_equals_reference(p, rate, jitter, burst, seed):
+    """The headline property: over random (p, loss rate, model family,
+    jitter, seed) configurations the two engines are indistinguishable."""
+    fab = FABJ if jitter else FAB
+    loss = None
+    if rate > 1e-4:
+        loss = (GilbertElliottLoss.from_rate(rate, mean_burst=6.0)
+                if burst else rate)
+    a = run_bcast("vectorized", p, 1 << 17, fab, WK, seed, loss=loss,
+                  collect_delivery=True)
+    b = run_bcast("reference", p, 1 << 17, fab, WK, seed, loss=loss,
+                  collect_delivery=True)
+    assert_bcast_equal(a, b, ctx=f"p={p} rate={rate:g} burst={burst}")
+
+
+@hyp_settings(max_examples=10, deadline=None)
+@hyp_given(hyp_st.integers(4, 32), hyp_st.floats(0.005, 0.1),
+           hyp_st.integers(0, 2**31 - 1))
+def test_property_exactly_once_conservation(p, rate, seed):
+    """Every leaf receives every chunk EXACTLY once across the fast path
+    and all recovery rounds (no duplicate deliveries to the user buffer,
+    no holes), and fast + recovered counts conserve chunks."""
+    n = 1 << 17
+    r = run_bcast("vectorized", p, n, FABJ, WK, seed, loss=rate,
+                  collect_delivery=True)
+    assert r.completed
+    n_chunks = -(-n // FABJ.mtu)
+    for leaf, order in r.delivery_order.items():
+        assert sorted(order.tolist()) == list(range(n_chunks)), leaf
+    assert r.delivered_fast + r.recovered == (p - 1) * n_chunks
+
+
+@hyp_settings(max_examples=10, deadline=None)
+@hyp_given(hyp_st.integers(4, 32), hyp_st.floats(0.002, 0.04),
+           hyp_st.floats(2.0, 8.0), hyp_st.integers(0, 2**31 - 1))
+def test_property_recovery_monotone_in_loss(p, rate, mult, seed):
+    """Coupled monotonicity: Bernoulli drops are sampled as u < rate from
+    the same forked stream, so with identical seeds the drop sets are
+    NESTED in the rate — recovery can only do more work, never less, and
+    the lossless run's reliability phase is exactly zero."""
+    r0 = run_bcast("vectorized", p, 1 << 17, FAB, WK, seed, loss=None)
+    r1 = run_bcast("vectorized", p, 1 << 17, FAB, WK, seed, loss=rate)
+    r2 = run_bcast("vectorized", p, 1 << 17, FAB, WK, seed,
+                   loss=min(rate * mult, 0.3))
+    assert r0.phases.reliability == 0.0
+    assert r1.recovered <= r2.recovered
+    assert r1.phases.reliability <= r2.phases.reliability + 1e-15
+    assert r0.time <= r1.time <= r2.time + 1e-15
+
+
+@hyp_settings(max_examples=8, deadline=None)
+@hyp_given(hyp_st.floats(0.01, 0.08), hyp_st.floats(2.0, 16.0),
+           hyp_st.integers(0, 2**31 - 1))
+def test_property_ge_chain_state_advances_identically(rate, burst, seed):
+    """Gilbert-Elliott statefulness under the batch engine: after a run on
+    an attach_loss-armed fabric, every armed link's chain rng state and
+    good/bad phase must equal the reference's — the vectorized mask
+    batching samples the same per-link draws in the same order."""
+    template = GilbertElliottLoss.from_rate(rate, mean_burst=burst)
+    p, n = 8, 1 << 17
+
+    def run(engine):
+        topo = FatTree(k=8, n_hosts=p, b_host=FAB.b_link)
+        attach_loss(topo, template, np.random.default_rng(13))
+        r = simulate_packet_broadcast(
+            p, n, FAB, WK, np.random.default_rng(seed), topology=topo,
+            engine=engine)
+        return r, {name: link.loss for name, link in topo.links().items()}
+
+    ra, ma = run("vectorized")
+    rb, mb = run("reference")
+    assert_bcast_equal(ra, rb, ctx="armed fabric")
+    assert sorted(ma) == sorted(mb)
+    advanced = 0
+    for name in ma:
+        sa, sb = ma[name]._rng.bit_generator.state, \
+            mb[name]._rng.bit_generator.state
+        assert sa == sb, name
+        assert ma[name]._bad == mb[name]._bad, name
+        advanced += ma[name]._rng.bit_generator.state != \
+            GilbertElliottLoss.from_rate(rate, mean_burst=burst).fork(
+                np.random.default_rng(0))._rng.bit_generator.state
+    assert advanced, "no chain advanced"
+
+
+# ------------------------------------------------ batched-primitive twins
+
+
+@hyp_settings(max_examples=20, deadline=None)
+@hyp_given(hyp_st.integers(1, 12), hyp_st.integers(0, 40),
+           hyp_st.integers(1, 8), hyp_st.integers(1, 64),
+           hyp_st.integers(0, 2**31 - 1))
+def test_pool_rows_twin_matches_scalar(rows, maxn, n_workers, staging,
+                                       seed):
+    """worker_pool_completion_rows == per-row worker_pool_completion on the
+    real prefix (ragged rows, +inf END padding, empty rows included)."""
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, maxn + 1, size=rows)
+    width = int(counts.max()) if rows else 0
+    arr = np.full((rows, width), np.inf)
+    for k, c in enumerate(counts):
+        arr[k, :c] = np.sort(rng.uniform(0.0, 1e-3, size=c))
+    service = float(rng.uniform(1e-7, 1e-5))
+    done, mask = worker_pool_completion_rows(arr, n_workers, service,
+                                             staging)
+    for k, c in enumerate(counts):
+        d1, rnr1 = worker_pool_completion(arr[k, :c], n_workers, service,
+                                          staging)
+        np.testing.assert_array_equal(done[k, :c], d1, err_msg=str(k))
+        assert int(mask[k, :c].sum()) == rnr1, k
+        assert not mask[k, c:].any(), k
+        assert np.all(np.isinf(done[k, c:])), k
+
+
+@hyp_settings(max_examples=20, deadline=None)
+@hyp_given(hyp_st.integers(1, 8), hyp_st.integers(1, 12),
+           hyp_st.integers(0, 2**31 - 1))
+def test_bitmap_rows_twins_match_scalar(rows, words, seed):
+    """bitmap_pack_rows_np / bitmap_popcount_rows_np == the 1-D twins row
+    by row, on the exact u32 wire words the NACK aggregation ORs."""
+    rng = np.random.default_rng(seed)
+    flags = rng.integers(0, 2, size=(rows, words * 32)).astype(bool)
+    packed = bitmap_pack_rows_np(flags)
+    pops = bitmap_popcount_rows_np(packed)
+    for k in range(rows):
+        np.testing.assert_array_equal(
+            packed[k], bitmap_pack_np(flags[k].astype(np.uint32)))
+        assert pops[k] == bitmap_popcount_np(packed[k])
+        assert pops[k] == int(flags[k].sum())
+
+
+# ------------------------------------------------------------ scale anchors
+
+
+def test_vectorized_512_hosts_fast_and_exact():
+    """Mid-scale anchor that runs in the fast tier: 512 hosts, both
+    engines, full equality (the 10k case is slow-marked below)."""
+    a = run_bcast("vectorized", 512, 1 << 22, FAB, WK, 0, loss=0.001)
+    b = run_bcast("reference", 512, 1 << 22, FAB, WK, 0, loss=0.001)
+    assert a.completed
+    assert_bcast_equal(a, b, ctx="512-host anchor")
+
+
+@pytest.mark.slow
+def test_vectorized_10k_hosts_1gib_single_digit_seconds():
+    """The tentpole scale target: 10k hosts at 1 GiB completes in
+    single-digit seconds on the vectorized engine (the reference loop
+    takes minutes — benchmarks/paper_figs.py packet_scale_sweep records
+    the measured speedup, gated at >= 20x in BENCH_smoke.json)."""
+    import time
+
+    t0 = time.perf_counter()
+    r = run_bcast("vectorized", 10_000, 1 << 30, FAB, WK, 0)
+    wall = time.perf_counter() - t0
+    assert r.completed and r.rnr_drops == 0
+    assert wall < 10.0, wall
