@@ -13,7 +13,7 @@ from repro.core import dpa, protocol
 from repro.core.engine import simulate_multi_job, sweep_fsdp_contention
 from repro.core.simulator import (FabricParams, WorkerParams, simulate_allgather,
                                   simulate_broadcast, sweep_phase_breakdown)
-from repro.core.topology import FatTree
+from repro.core.topology import FatTree, Torus2D
 
 GIB = 1 << 30
 ROWS = list
@@ -605,6 +605,51 @@ def schedule_ir_sweep():
     return rows
 
 
+def search_sweep():
+    """Derived schedules (core/sched_search.py): on the oversubscribed
+    fat-tree AND the torus the searched allreduce must beat the best
+    hand-written builder at fluid fidelity (strictly on at least one),
+    validate at packet fidelity under loss, and report its lower-bound
+    certificate — all inside the smoke wall budget."""
+    from repro.core import sched_search
+
+    cache = sched_search.EvalCache()
+    p, n = 16, 16 << 20
+    scenarios = [
+        ("fattree_os4", FatTree(k=8, n_hosts=p, oversubscription=4.0)),
+        ("torus4x4", Torus2D(4, 4)),
+    ]
+    rows = []
+    ratios = []
+    t0 = time.perf_counter()
+    for label, topo in scenarios:
+        r = sched_search.search("allreduce", p, n, topology=topo,
+                                loss=1e-3, cache=cache)
+        assert r.packet_validated, f"{label}: winner failed packet validation"
+        assert r.certificate.ratio >= 1.0 - 1e-9, \
+            f"{label}: winner beat its own admissible bound"
+        ratio = r.searched_vs_best_builder
+        ratios.append(ratio)
+        rows.append((f"search.{label}.searched_vs_best_builder_x",
+                     round(ratio, 4),
+                     f"{r.winner.name} vs {r.best_builder.name}"))
+        rows.append((f"search.{label}.bound_cert_x",
+                     round(r.certificate.ratio, 4),
+                     f"winner/bound, binding={r.certificate.binding}"))
+        rows.append((f"search.{label}.fabric_bytes_x",
+                     round(r.winner_fabric_bytes
+                           / r.best_builder_fabric_bytes, 4),
+                     f"routed bytes, winner={r.winner_fabric_bytes/GIB:.3f}"
+                     f"GiB"))
+    wall = time.perf_counter() - t0
+    assert all(x <= 1.0 + 1e-9 for x in ratios), ratios
+    assert min(ratios) < 1.0, f"no strict win over builders: {ratios}"
+    assert wall < 30.0, f"search sweep blew the smoke budget: {wall:.1f}s"
+    rows.append(("search.allreduce_p16_wall_s", round(wall, 3),
+                 "both fabrics, shared eval cache"))
+    return rows
+
+
 def fsdp_contention_sweep():
     """Abstract's opening claim: interleaved AG/RS contend for injection
     bandwidth; the multicast schedule and the Insight-2 direction split cut
@@ -705,7 +750,8 @@ ALL = [
     appendix_b_speedup, dpa_scaling_sweep, fsdp_contention_sweep,
     fabric_sweep, protocol_loss_sweep, packet_scale_sweep,
     multi_job_contention,
-    schedule_ir_sweep, measured_protocol_micro, measured_jax_collectives,
+    schedule_ir_sweep, search_sweep, measured_protocol_micro,
+    measured_jax_collectives,
 ]
 
 # seconds-scale subset for benchmarks/run.py --smoke / CI: the FSDP
@@ -719,4 +765,4 @@ ALL = [
 # including the 10k-host / 1 GiB speedup floor)
 SMOKE = [fsdp_contention_sweep, fabric_sweep_smoke, protocol_loss_sweep_smoke,
          dpa_scaling_smoke, multi_job_contention, schedule_ir_sweep,
-         packet_scale_sweep_smoke]
+         search_sweep, packet_scale_sweep_smoke]

@@ -11,9 +11,12 @@ every derived RATIO metric (bubble fractions, slowdown/reduction factors,
 the protocol loss-crossover). Ratios are deterministic model outputs —
 machine-independent — so scripts/bench_gate.py diffs them against the
 committed ``benchmarks/baseline_smoke.json`` and fails CI on regression.
-Machine-dependent wall-clock rows (``*_wall_s`` / ``*_speedup`` from
-packet_scale_sweep) land in the report's ``wall_clock`` section instead:
-bench_gate prints their drift informationally but never fails on them.
+Machine-dependent wall-clock rows (``*_wall_s`` / ``*_speedup``) land in the
+report's ``wall_clock`` section, alongside a ``wall.calibration_wall_s``
+row timing a fixed numpy workload. bench_gate gates them loosely: ``_wall_s``
+rows as a ratio-of-ratios against the calibration row (machine speed divides
+out), ``_speedup`` rows raw (already machine-internal ratios), both at a
+generous tolerance that only catches order-of-magnitude regressions.
 """
 from __future__ import annotations
 
@@ -33,10 +36,14 @@ from benchmarks import paper_figs, roofline  # noqa: E402
 #: ratios (and the crossover loss rate), never wall-clock measurements
 RATIO_SUFFIXES = ("_x", ".bubble_frac", ".crossover_loss")
 
-#: machine-dependent wall-clock rows (packet_scale_sweep's engine timings
-#: and speedups): carried in BENCH_smoke.json under "wall_clock" so drift is
-#: visible, reported informationally by scripts/bench_gate.py, never gated
+#: machine-dependent wall-clock rows (engine timings, speedups, search
+#: wall): carried in BENCH_smoke.json under "wall_clock"; gated loosely by
+#: scripts/bench_gate.py after machine-normalizing against CALIBRATION_ROW
 WALL_SUFFIXES = ("_wall_s", "_speedup")
+
+#: fixed-workload timing row used by bench_gate to divide machine speed out
+#: of the other _wall_s rows (ratio-of-ratios gating)
+CALIBRATION_ROW = "wall.calibration_wall_s"
 
 
 def is_ratio_row(name: str) -> bool:
@@ -45,6 +52,24 @@ def is_ratio_row(name: str) -> bool:
 
 def is_wall_row(name: str) -> bool:
     return name.endswith(WALL_SUFFIXES)
+
+
+def calibration_wall_s() -> float:
+    """Time a fixed numpy workload (matmul + tanh, the smoke benches' own
+    compute mix) so wall-clock rows can be gated as multiples of THIS
+    machine's speed rather than absolute seconds."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((512, 512))
+    best = math.inf
+    for _ in range(3):                      # best-of-3 damps scheduler noise
+        t0 = time.perf_counter()
+        b = a
+        for _ in range(10):
+            b = np.tanh(b @ a / 512)
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def main() -> None:
@@ -68,6 +93,9 @@ def main() -> None:
     print("name,value,derived")
     failures = 0
     report = {"scenarios": {}, "ratios": {}, "wall_clock": {}}
+    cal = calibration_wall_s()
+    print(f"{CALIBRATION_ROW},{cal:.4f},fixed numpy workload (normalizer)")
+    report["wall_clock"][CALIBRATION_ROW] = round(cal, 4)
     for fn in benches:
         t0 = time.perf_counter()
         n_rows = 0

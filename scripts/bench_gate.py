@@ -6,14 +6,21 @@ The gated metrics (benchmarks/run.py RATIO_SUFFIXES) are deterministic model
 outputs — bubble fractions, traffic-reduction and slowdown factors, the
 protocol loss-crossover — not wall-clock, so they are machine-independent
 and the tolerance only absorbs intentional-model-change review, never timer
-noise. Wall times are carried in the report for humans but never gated: the
-``wall_clock`` section (packet_scale_sweep's engine timings and speedups)
-and per-scenario wall_s are printed as an informational drift report when a
-baseline carries reference values, and never affect the exit code.
+noise.
+
+The report's ``wall_clock`` rows are gated too, but loosely and
+machine-normalized: every ``_wall_s`` row is divided by the report's own
+``wall.calibration_wall_s`` (a fixed numpy workload timed in the same run,
+benchmarks/run.py), so machine speed cancels in the ratio-of-ratios and
+only genuine order-of-magnitude slowdowns trip the generous
+``--wall-tolerance``; ``_speedup`` rows are already machine-internal ratios
+and compare raw. New or vanished wall rows (and rows lacking a calibration
+reference) stay informational — the ratio gate owns coverage.
 
     python scripts/bench_gate.py                       # gate current vs baseline
     python scripts/bench_gate.py --update              # bless current as baseline
-    python scripts/bench_gate.py --tolerance 0.05      # tighter band
+    python scripts/bench_gate.py --tolerance 0.05      # tighter ratio band
+    python scripts/bench_gate.py --wall-tolerance 1.0  # tighter wall band
 
 Exit codes: 0 ok, 1 regression (or missing/new ratio), 2 usage error.
 """
@@ -28,6 +35,10 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_BASELINE = os.path.join(REPO, "benchmarks", "baseline_smoke.json")
 DEFAULT_CURRENT = os.path.join(REPO, "BENCH_smoke.json")
+
+#: run.py's fixed-workload timing row — the machine-speed normalizer for
+#: the _wall_s rows (never itself gated)
+CALIBRATION_ROW = "wall.calibration_wall_s"
 
 
 def load(path: str) -> dict:
@@ -79,26 +90,49 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
     return problems
 
 
-def wall_report(baseline: dict, current: dict) -> list[str]:
-    """Informational wall-clock lines — printed, never gated. Covers the
-    report's ``wall_clock`` rows (engine timings / speedups from
-    packet_scale_sweep); drift vs baseline is shown when the baseline file
-    happens to carry wall_clock values (the blessed baseline normally does
-    not — wall-clock is machine-dependent by design)."""
+def wall_compare(baseline: dict, current: dict,
+                 tolerance: float) -> tuple[list[str], list[str]]:
+    """Loose machine-normalized wall-clock gate -> (problems, info lines).
+    ``_wall_s`` rows gate on (current / current-calibration) vs
+    (baseline / baseline-calibration) — the ratio-of-ratios a faster or
+    slower machine leaves unchanged; ``_speedup`` rows gate raw. Rows
+    missing on either side, null sentinels, and rows without a calibration
+    reference are informational only."""
     base = baseline.get("wall_clock", {}) or {}
     cur = current.get("wall_clock", {}) or {}
-    lines = []
-    for name in sorted(cur):
-        c = cur[name]
-        if name in base and base[name] and c:
-            rel = (float(c) - float(base[name])) / max(abs(float(base[name])),
-                                                       1e-9)
-            lines.append(f"{name}: {c:g} ({rel:+.0%} vs baseline "
-                         f"{base[name]:g})")
+    b_cal, c_cal = base.get(CALIBRATION_ROW), cur.get(CALIBRATION_ROW)
+    problems, info = [], []
+    for name in sorted(set(base) | set(cur)):
+        if name == CALIBRATION_ROW:
+            if c_cal:
+                info.append(f"{name}: {c_cal:g} (normalizer)")
+            continue
+        b, c = base.get(name), cur.get(name)
+        if b is None or c is None:
+            v = "null" if c is None else f"{c:g}"
+            tag = ("not in baseline" if name not in base
+                   else "missing from report" if name not in cur
+                   else "null sentinel")
+            info.append(f"{name}: {v} ({tag}; informational)")
+            continue
+        if name.endswith("_speedup"):
+            bn, cn = float(b), float(c)
+            what = "speedup"
+        elif b_cal and c_cal:
+            bn, cn = float(b) / float(b_cal), float(c) / float(c_cal)
+            what = "normalized wall"
         else:
-            lines.append(f"{name}: {c:g}" if c is not None
-                         else f"{name}: null")
-    return lines
+            info.append(f"{name}: {c:g} (no calibration row; informational)")
+            continue
+        rel = abs(cn - bn) / max(abs(bn), 1e-9)
+        line = (f"{name}: {c:g} ({what} {bn:g} -> {cn:g}, "
+                f"{rel*100:.0f}% drift)")
+        if rel > tolerance:
+            problems.append(f"WALL     {line} > {tolerance*100:.0f}% "
+                            f"tolerance")
+        else:
+            info.append(line)
+    return problems, info
 
 
 def main() -> int:
@@ -107,6 +141,10 @@ def main() -> int:
     ap.add_argument("--current", default=DEFAULT_CURRENT)
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="relative drift allowed per ratio (default 10%%)")
+    ap.add_argument("--wall-tolerance", type=float, default=2.0,
+                    help="relative drift allowed per machine-normalized "
+                         "wall row (default 200%% — catches order-of-"
+                         "magnitude regressions only)")
     ap.add_argument("--update", action="store_true",
                     help="bless the current report as the new baseline")
     args = ap.parse_args()
@@ -116,14 +154,18 @@ def main() -> int:
               f"`python -m benchmarks.run --smoke` first", file=sys.stderr)
         return 2
     if args.update:
-        # bless ONLY the gated ratios: wall_s etc. are machine-dependent and
-        # would churn the committed baseline with timing noise
-        ratios = load(args.current).get("ratios", {})
+        # bless the gated ratios plus the wall_clock reference (raw seconds
+        # are machine-dependent, but the gate only ever reads them relative
+        # to the same run's calibration row, which is blessed alongside)
+        cur = load(args.current)
+        blessed = {"ratios": cur.get("ratios", {}),
+                   "wall_clock": cur.get("wall_clock", {})}
         with open(args.baseline, "w") as f:
-            json.dump({"ratios": ratios}, f, indent=2, sort_keys=True)
+            json.dump(blessed, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"bench_gate: blessed {args.current} -> {args.baseline} "
-              f"({len(ratios)} ratios)")
+              f"({len(blessed['ratios'])} ratios, "
+              f"{len(blessed['wall_clock'])} wall rows)")
         return 0
     if not os.path.exists(args.baseline):
         print(f"bench_gate: no baseline at {args.baseline}; bless one with "
@@ -133,11 +175,14 @@ def main() -> int:
     baseline, current = load(args.baseline), load(args.current)
     problems = compare(baseline, current, args.tolerance)
     n = len(current.get("ratios", {}))
-    walls = wall_report(baseline, current)
-    if walls:
-        print(f"bench_gate: wall-clock (informational, {len(walls)} rows, "
-              f"never gated):")
-        for w in walls:
+    wall_problems, wall_info = wall_compare(baseline, current,
+                                            args.wall_tolerance)
+    problems += wall_problems
+    if wall_info:
+        print(f"bench_gate: wall-clock ({len(wall_info)} rows within "
+              f"{args.wall_tolerance*100:.0f}% machine-normalized "
+              f"tolerance):")
+        for w in wall_info:
             print(f"  {w}")
     if problems:
         print(f"bench_gate: FAIL ({len(problems)} problem(s), {n} ratios "

@@ -11,8 +11,8 @@ for the discrete-event side must not pay (or require) the jax import."""
 import importlib
 
 __all__ = ["collectives", "cost_model", "dpa", "dpa_engine", "engine",
-           "packet", "protocol", "sched_ir", "schedule", "simulator",
-           "topology"]
+           "packet", "protocol", "sched_ir", "sched_search", "schedule",
+           "simulator", "topology"]
 
 
 def __getattr__(name):

@@ -96,8 +96,32 @@ DEFAULT_MAX_ROUNDS = 64
 
 # Packet-round executors: "vectorized" is the batch engine (default),
 # "reference" the per-leaf loop it is pinned bit-exact against
-# (tests/test_packet_vectorized.py).
+# (tests/test_packet_vectorized.py). "auto" resolves to one of them per
+# call via resolve_engine() — because the pair is bit-exact, the choice
+# only moves wall-clock, never results.
 ENGINES = ("vectorized", "reference")
+
+# Dense big-row regime (DESIGN §9): with few hosts and >= 16 MiB of merged
+# per-leaf row bytes the batched pool pass pads every leaf row to the widest
+# chain and the vectorized engine drops to ~0.7x the per-leaf loop, so
+# "auto" picks "reference" there. Everywhere else (and for broadcast, whose
+# rows never merge) vectorized wins by 3-30x.
+DENSE_ROW_BYTES = 16 << 20
+DENSE_MAX_HOSTS = 256
+
+
+def resolve_engine(engine: str, kind: str, p: int, row_bytes: int) -> str:
+    """Map ``engine="auto"`` to a concrete packet executor; pass explicit
+    choices through untouched (they stay bit-exact by construction).
+    ``row_bytes`` is the merged per-leaf row size — for an allgather, the
+    widest activation generation's concurrent chains x payload bytes."""
+    if engine != "auto":
+        assert engine in ENGINES, engine
+        return engine
+    if kind == "allgather" and p <= DENSE_MAX_HOSTS \
+            and row_bytes >= DENSE_ROW_BYTES:
+        return "reference"
+    return "vectorized"
 
 # Batched pool passes process leaves in blocks of at most this many matrix
 # elements (rows x padded row length) to bound peak memory.
@@ -1021,7 +1045,7 @@ def simulate_packet_broadcast(
         hosts=None, loss=None, max_rounds: int = DEFAULT_MAX_ROUNDS,
         aggregate_nacks: bool = True, collect_delivery: bool = False,
         dpa_fidelity: str = "scalar", dpa=None,
-        engine: str = "vectorized") -> PacketBcastResult:
+        engine: str = "auto") -> PacketBcastResult:
     """Packet-fidelity reliable Broadcast (the ``fidelity="packet"`` backend
     of simulator.simulate_broadcast — see the module docstring for the
     protocol model). At ``loss=None``/``p_drop=0`` it reproduces the fluid
@@ -1030,9 +1054,11 @@ def simulate_packet_broadcast(
     ``dpa_fidelity="event"`` swaps the scalar worker pool for the
     event-level DPA progress engine of core/dpa_engine.py (``dpa=``
     supplies its EventDpaParams / DpaConfig). ``engine="vectorized"``
-    (default) runs the batched round executor; ``engine="reference"`` the
-    per-leaf loop it is pinned bit-exact against."""
-    assert engine in ENGINES, engine
+    runs the batched round executor; ``engine="reference"`` the per-leaf
+    loop it is pinned bit-exact against; ``engine="auto"`` (default)
+    resolves via resolve_engine — always "vectorized" for broadcast, whose
+    per-leaf rows never merge."""
+    engine = resolve_engine(engine, "broadcast", p, n_bytes)
     cls = _VecBroadcastRun if engine == "vectorized" else _BroadcastRun
     t_rnr = _rnr_barrier(p, fabric, workers)
     eng = Engine()
@@ -1114,7 +1140,7 @@ def simulate_packet_allgather(
         rng: np.random.Generator, n_chains: int = 1, *, topology=None,
         hosts=None, loss=None, max_rounds: int = DEFAULT_MAX_ROUNDS,
         aggregate_nacks: bool = True, dpa_fidelity: str = "scalar",
-        dpa=None, engine: str = "vectorized") -> PacketAllgatherResult:
+        dpa=None, engine: str = "auto") -> PacketAllgatherResult:
     """Packet-fidelity Allgather: a facade over the Collective Schedule IR.
     Builds the Appendix-A schedule graph (typed Multicast ops + Activation
     edges, uneven chains supported) and executes it at packet fidelity —

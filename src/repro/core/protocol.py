@@ -280,6 +280,78 @@ def analytic_allreduce_time(p: int, n_bytes: int, b_link: float,
     return rs + ag
 
 
+def pipeline_schedule_time(rs_times: "list[float]",
+                           ag_times: "list[float]") -> float:
+    """Two-stage pipeline completion time (chunk-granularity RS∘AG
+    pipelining): segment s's AG starts once its own RS finished AND the
+    previous segment's AG drained; segment s+1's RS follows segment s's RS.
+    ONE definition shared by the fluid/packet pipelined-allreduce executor
+    (sched_ir._exec_allreduce) and the closed-form bound below — the
+    recurrence is monotone in every stage time, so applying it to per-segment
+    lower bounds yields a lower bound of the executed schedule (the
+    admissibility argument sched_search's pruning rests on)."""
+    assert len(rs_times) == len(ag_times) and rs_times
+    t_rs = t_ag = 0.0
+    for rs, ag in zip(rs_times, ag_times):
+        t_rs = t_rs + rs
+        t_ag = max(t_rs, t_ag) + ag
+    return t_ag
+
+
+def analytic_pipelined_allreduce_time(p: int, n_bytes: int, b_link: float,
+                                      latency: float, *,
+                                      m: int | None = None,
+                                      n_segments: int = 1,
+                                      pool_rate: float | None = None,
+                                      rnr_hop: float = 1.5e-6) -> float:
+    """Closed form of the segment-pipelined Allreduce
+    (sched_ir.build_pipelined_allreduce): the buffer is split into
+    ``n_segments`` equal-ish segments, each an RS ∘ AG pair, and segment
+    s+1's Reduce-Scatter overlaps segment s's Allgather. ``n_segments=1``
+    reduces exactly to analytic_allreduce_time."""
+    assert n_segments >= 1
+    q, rem = divmod(n_bytes, n_segments)
+    segs = [q + (1 if i < rem else 0) for i in range(n_segments)]
+    rs_times, ag_times = [], []
+    for seg in segs:
+        rs_times.append(
+            analytic_ring_reduce_scatter_time(p, seg, b_link, latency))
+        shard = max(seg // p, 1)
+        if m:
+            ag_times.append(analytic_allgather_time(
+                p, shard, b_link, latency, n_chains=m, pool_rate=pool_rate,
+                rnr_hop=rnr_hop))
+        else:
+            ag_times.append(
+                analytic_ring_allgather_time(p, shard, b_link, latency))
+    return pipeline_schedule_time(rs_times, ag_times)
+
+
+# ----------------------------------------------- lower-bound certificates
+
+
+@dataclass(frozen=True)
+class BoundCertificate:
+    """Optimality certificate attached to a searched schedule
+    (core/sched_search.py): the admissible lower bound the winner was
+    pruned against, which term of it binds (the flat closed form or a named
+    fabric cut), and the achieved winner-time / bound ratio — 1.0 means the
+    schedule provably leaves nothing on the table at this fidelity."""
+
+    kind: str
+    p: int
+    n_bytes: int
+    bound: float                     # admissible lower bound (s)
+    winner_time: float               # simulated time of the winner (s)
+    binding: str                     # which bound term binds ("analytic",
+    #                                  "cut:pod0", ...)
+
+    @property
+    def ratio(self) -> float:
+        """winner_time / bound — >= 1.0 whenever the bound is admissible."""
+        return self.winner_time / self.bound if self.bound > 0 else math.inf
+
+
 def analytic_expected_rounds(path_loss: float, n_chunks: int,
                              target: float = 0.5) -> float:
     """Expected NACK/retransmission rounds until a receiver behind a path

@@ -237,6 +237,35 @@ def payload_bytes(sched: Schedule) -> float:
     return sum(op.payload_bytes for op in sched.ops)
 
 
+#: meta keys that change what the executor runs (everything else in meta is
+#: derived bookkeeping or nested sub-schedules already covered by the op DAG)
+_CANONICAL_META = ("n_chains", "m", "n_segments", "policy", "n_layers",
+                   "layer_bytes")
+
+
+def canonical_key(sched: Schedule) -> str:
+    """Stable content hash of a schedule: kind, shape, the full typed op
+    DAG and the executor-relevant meta scalars. Two schedules with equal
+    keys lower to identical runs at every fidelity, so the search layer
+    (core/sched_search.py) uses this as the memoized-evaluation cache key —
+    e.g. ``build_allreduce(p, n)`` and ``build_pipelined_allreduce(p, n,
+    n_segments=1)`` hash differently only if their DAGs or meta differ."""
+    import hashlib
+
+    parts: list = [sched.kind, sched.p, sched.n_bytes]
+    for op in sched.ops:
+        if isinstance(op, Multicast):
+            parts.append(("M", op.root, op.group, op.nbytes))
+        elif isinstance(op, Unicast):
+            parts.append(("U", op.src, op.dst, op.nbytes))
+        else:
+            parts.append(("R", op.dst, op.srcs, op.nbytes, op.op))
+    parts.append(tuple(sorted(sched.activation)))
+    parts.append(tuple((k, sched.meta[k]) for k in _CANONICAL_META
+                       if k in sched.meta))
+    return hashlib.blake2b(repr(parts).encode(), digest_size=16).hexdigest()
+
+
 def validate(sched: Schedule) -> None:
     """Structural invariants every builder must satisfy."""
     assert sched.kind in KINDS, sched.kind
@@ -345,6 +374,58 @@ def build_allreduce(p: int, n_bytes: int, m: int | None = None) -> Schedule:
     return Schedule("allreduce", p, n_bytes, rs.ops + ag.ops, tuple(act),
                     meta={"m": m, "shard_bytes": shard_int,
                           "n_rs_ops": off, "rs": rs, "ag": ag})
+
+
+def segment_bytes(n_bytes: int, n_segments: int) -> tuple[int, ...]:
+    """Canonical buffer split for chunk-granularity pipelining: equal-ish
+    contiguous segments, the first ``n_bytes % n_segments`` one byte
+    longer. Shared by the builder, the pipelined executor and the analytic
+    form so all three agree on segment payloads."""
+    assert n_segments >= 1
+    q, rem = divmod(n_bytes, n_segments)
+    return tuple(q + (1 if i < rem else 0) for i in range(n_segments))
+
+
+def build_pipelined_allreduce(p: int, n_bytes: int, m: int | None = None,
+                              n_segments: int = 2) -> Schedule:
+    """Chunk-granularity pipelined Allreduce (the ROADMAP's RS∘AG overlap
+    follow-on, now a first-class candidate of the schedule searcher): the
+    buffer is split into ``n_segments`` segments, each an RS ∘ AG pair, and
+    the Activation edges wire the two-stage pipeline — segment s's AG is
+    activated by its own RS, segment s+1's RS by segment s's RS (NOT by its
+    AG), so the next segment's Reduce-Scatter genuinely overlaps the
+    previous segment's Allgather. ``n_segments=1`` is exactly
+    build_allreduce's barrier composition. Extra segments trade per-segment
+    latency/RNR overhead for overlap — the searcher sweeps the knob."""
+    assert p >= 2, f"allreduce needs at least 2 ranks, got p={p}"
+    assert 1 <= n_segments <= max(n_bytes, 1), (n_segments, n_bytes)
+    segments: list[tuple[Schedule, Schedule]] = []
+    ops: list[Op] = []
+    act: list[tuple[int, int]] = []
+    prev_rs_last: list[int] = []
+    for seg in segment_bytes(n_bytes, n_segments):
+        shard_int = max(seg // p, 1)
+        rs = build_ring_reduce_scatter(p, seg)
+        ag = (build_allgather(p, shard_int, m) if m
+              else build_ring_allgather(p, shard_int))
+        segments.append((rs, ag))
+        rs_off = len(ops)
+        ops += rs.ops
+        act += [(a + rs_off, b + rs_off) for a, b in rs.activation]
+        rs_first = [i + rs_off for i in rs.rounds()[0]]
+        rs_last = [i + rs_off for i in rs.rounds()[-1]]
+        ag_off = len(ops)
+        ops += ag.ops
+        act += [(a + ag_off, b + ag_off) for a, b in ag.activation]
+        ag_first = [i + ag_off for i in ag.rounds()[0]]
+        # pipeline wiring: RS_s -> AG_s and RS_s -> RS_{s+1}
+        act += [(a, b) for a in prev_rs_last for b in rs_first]
+        act += [(a, b) for a in rs_last for b in ag_first]
+        prev_rs_last = rs_last
+    return Schedule("allreduce", p, n_bytes, tuple(ops), tuple(act),
+                    meta={"m": m, "n_segments": n_segments,
+                          "segments": tuple(segments),
+                          "shard_bytes": max(n_bytes // p, 1)})
 
 
 def build_fsdp_step(*, p: int, n_layers: int = 32, layer_bytes: float = 256e6,
@@ -709,18 +790,25 @@ def _packet_ring(sched: Schedule, fabric: FabricParams,
 @dataclass
 class AllreduceResult:
     """Allreduce = RS ∘ AG, phases run back-to-back (the activation barrier
-    of build_allreduce): per-phase results kept for inspection."""
+    of build_allreduce) or segment-pipelined (build_pipelined_allreduce —
+    ``segments`` then holds every (rs, ag) result pair and ``rs``/``ag``
+    the first segment's): per-phase results kept for inspection."""
     time: float
-    rs_time: float
-    ag_time: float
+    rs_time: float                     # total RS stage busy time
+    ag_time: float                     # total AG stage busy time
     bytes_total: float
     rs: RingCollectiveResult
     ag: object                         # AllgatherResult | RingCollectiveResult
     link_bytes: dict[str, float] = field(default_factory=dict)
+    segments: tuple = ()               # pipelined: ((rs, ag) result, ...)
 
 
 def _exec_allreduce(sched: Schedule, fabric, workers, rng, *, fidelity,
                     topology, hosts, loss, kw) -> AllreduceResult:
+    if "segments" in sched.meta:
+        return _exec_pipelined_allreduce(
+            sched, fabric, workers, rng, fidelity=fidelity,
+            topology=topology, hosts=hosts, loss=loss, kw=kw)
     # the two phase sub-schedules are carried in meta by build_allreduce
     # (their ops/edges also make up the merged DAG, for introspection)
     rs = execute(sched.meta["rs"], fabric, workers, rng, fidelity=fidelity,
@@ -739,6 +827,45 @@ def _exec_allreduce(sched: Schedule, fabric, workers, rng, *, fidelity,
         rs=rs,
         ag=ag,
         link_bytes=merged,
+    )
+
+
+def _exec_pipelined_allreduce(sched: Schedule, fabric, workers, rng, *,
+                              fidelity, topology, hosts, loss,
+                              kw) -> AllreduceResult:
+    """Segment-pipelined Allreduce execution: each segment's RS and AG are
+    lowered independently (the RS stage rides the neighbour ring, the AG
+    stage the multicast trees / full-duplex receive path — disjoint stage
+    resources at this model's granularity, exactly as the barrier
+    composition already treats them), then composed with the two-stage
+    pipeline recurrence protocol.pipeline_schedule_time — segment s+1's RS
+    overlaps segment s's AG. The same recurrence over per-segment analytic
+    forms is the admissible bound (protocol.analytic_pipelined_allreduce_
+    time), so analytic <= fluid <= packet carries over segment-wise."""
+    results = []
+    merged: dict[str, float] = {}
+    for rs_sched, ag_sched in sched.meta["segments"]:
+        rs = execute(rs_sched, fabric, workers, rng, fidelity=fidelity,
+                     topology=topology, hosts=hosts, loss=loss)
+        rs_links = dict(rs.link_bytes)
+        ag = execute(ag_sched, fabric, workers, rng, fidelity=fidelity,
+                     topology=topology, hosts=hosts, loss=loss, **kw)
+        results.append((rs, ag))
+        for lb in (rs_links, ag.link_bytes):
+            for k, v in lb.items():
+                merged[k] = merged.get(k, 0.0) + v
+    rs_times = [rs.time for rs, _ in results]
+    ag_times = [ag.time for _, ag in results]
+    return AllreduceResult(
+        time=protocol.pipeline_schedule_time(rs_times, ag_times),
+        rs_time=sum(rs_times),
+        ag_time=sum(ag_times),
+        bytes_total=sum(rs.bytes_total + ag.bytes_total
+                        for rs, ag in results),
+        rs=results[0][0],
+        ag=results[0][1],
+        link_bytes=merged,
+        segments=tuple(results),
     )
 
 
@@ -798,7 +925,7 @@ def _packet_allgather(sched: Schedule, fabric: FabricParams,
                       max_rounds: int | None = None,
                       aggregate_nacks: bool = True,
                       dpa_fidelity: str = "scalar", dpa=None,
-                      engine: str = "vectorized"):
+                      engine: str = "auto"):
     """Packet-fidelity lowering of an allgather schedule: each activation
     generation's Multicast roots run concurrent packet Broadcasts — fast
     paths AND retransmission flows share one engine (recovery traffic
@@ -821,12 +948,15 @@ def _packet_allgather(sched: Schedule, fabric: FabricParams,
     p, n_bytes = sched.p, sched.n_bytes
     if max_rounds is None:
         max_rounds = pk.DEFAULT_MAX_ROUNDS
-    assert engine in pk.ENGINES, engine
-    vec = engine == "vectorized"
     assert dpa_fidelity in DPA_FIDELITIES, dpa_fidelity
     assert dpa is None or dpa_fidelity == "event", \
         "dpa= requires dpa_fidelity='event'"
     generations = sched.rounds()
+    # merged per-leaf row bytes = widest generation's concurrent chains
+    # times the payload; "auto" picks the faster bit-exact executor for it
+    width = max(len(g) for g in generations) if generations else 1
+    engine = pk.resolve_engine(engine, sched.kind, p, width * n_bytes)
+    vec = engine == "vectorized"
     n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
     service = chunk / workers.thread_tput
     t_rnr = _rnr_barrier(p, fabric, workers)
@@ -1578,6 +1708,11 @@ def _exec_analytic(sched: Schedule, fabric: FabricParams,
     if sched.kind == "reduce_scatter":
         return protocol.analytic_ring_reduce_scatter_time(p, n, b, lat)
     if sched.kind == "allreduce":
+        if sched.meta.get("n_segments", 1) > 1:
+            return protocol.analytic_pipelined_allreduce_time(
+                p, n, b, lat, m=sched.meta["m"],
+                n_segments=sched.meta["n_segments"], pool_rate=pool,
+                rnr_hop=hop)
         return protocol.analytic_allreduce_time(
             p, n, b, lat, m=sched.meta["m"], pool_rate=pool, rnr_hop=hop)
     raise NotImplementedError(f"no analytic form for kind={sched.kind}")
@@ -1596,8 +1731,10 @@ def execute(sched: Schedule, fabric: FabricParams | None = None,
     to be duplicated across simulator.py / engine.py / packet.py lives in
     the lowering functions above. Extra keyword arguments are
     fidelity-specific (packet: max_rounds / aggregate_nacks / dpa_fidelity /
-    dpa, plus engine="vectorized"|"reference" selecting the batched packet
-    executor or the per-leaf oracle it is pinned bit-exact against;
+    dpa, plus engine="auto"|"vectorized"|"reference" selecting the batched
+    packet executor or the per-leaf oracle it is pinned bit-exact against —
+    "auto" (default) resolves per-call via packet.resolve_engine, picking
+    "reference" only in the allgather dense big-row regime of DESIGN §9;
     fsdp_step: the compute keywords of engine.simulate_fsdp_step)."""
     assert fidelity in FIDELITIES, fidelity
     fabric = fabric or FabricParams()
@@ -1677,24 +1814,25 @@ def autotune_chains(schedule_builder, topology=None, *, p: int,
                     n_bytes: int, fabric: FabricParams | None = None,
                     workers: WorkerParams | None = None,
                     candidates=None, fidelity: str = "fluid",
-                    seed: int = 0) -> tuple[int, dict[int, float]]:
+                    seed: int = 0, cache=None) -> tuple[int, dict[int, float]]:
     """Sweep the chain count M for ``schedule_builder(p, n_bytes, m)`` on a
     given fabric and pick the fastest (the per-fabric incast-control knob of
     §IV-A: full parallelism on flat fabrics, fewer chains when the fabric or
-    the leaf pool is the bottleneck). Returns (best_m, {m: time}).
-    Candidates default to the divisors of P (uneven chains are legal too —
-    pass them explicitly)."""
+    the leaf pool is the bottleneck). Returns (best_m, {m: time}) — the full
+    sweep alongside the argmin. Candidates default to the divisors of P
+    (uneven chains are legal too — pass them explicitly).
+
+    This is the trivial 1-D special case of core/sched_search.py: it
+    delegates to ``sched_search.sweep_chains`` and accepts its memoized
+    ``cache=`` (an ``EvalCache``), so benchmarks sweeping overlapping M
+    grids never re-simulate the same schedule."""
+    from repro.core import sched_search   # deferred: sched_search imports us
+
     fabric = fabric or FabricParams(jitter=0.0)
     workers = workers or WorkerParams(n_recv_workers=8)
     if candidates is None:
         candidates = [m for m in range(1, p + 1) if p % m == 0]
-    times: dict[int, float] = {}
-    for m in candidates:
-        if topology is not None:
-            topology.reset()
-        sched = schedule_builder(p, n_bytes, m)
-        res = execute(sched, fabric, workers, np.random.default_rng(seed),
-                      fidelity=fidelity, topology=topology)
-        times[m] = res if isinstance(res, float) else res.time
-    best = min(times, key=lambda m: (times[m], m))
-    return best, times
+    return sched_search.sweep_chains(
+        schedule_builder, topology, p=p, n_bytes=n_bytes, fabric=fabric,
+        workers=workers, candidates=candidates, fidelity=fidelity,
+        seed=seed, cache=cache)

@@ -1,0 +1,492 @@
+"""Throughput-optimal schedule search over the Collective Schedule IR.
+
+Since PR 5 the repo can *lower* any Multicast/Unicast/Reduce op-DAG to
+analytic/fluid/packet fidelity, but it could only *execute* schedules a
+human wrote. This module closes the loop (ForestColl, arXiv:2402.06787:
+throughput-optimal schedules are constructible from the fabric's cut
+structure): given a collective and a ``Topology``, it
+
+  1. seeds the search with every in-tree builder (schedule.py/sched_ir
+     builders become seed points — the searcher can only match or beat
+     them),
+  2. derives extra candidates from the fabric's structure: chain counts M
+     from the per-tier bottleneck cuts (``topology.bottleneck_cuts`` /
+     ``tier_capacities``), ring-vs-multicast transport for the AG leg, and
+     RS∘AG chunk-granularity pipelining via extra Activation edges
+     (``build_pipelined_allreduce``),
+  3. scores candidates with ``sched_ir.execute`` at fluid fidelity through
+     a memoized evaluation cache (keyed on the schedule's canonical
+     content hash + the evaluation context), pruned branch-and-bound
+     style: a candidate whose admissible lower bound — the
+     ``protocol.analytic_*`` closed form, maxed with the fabric-cut bound
+     bytes-across-cut / cut-capacity — already exceeds the incumbent is
+     cut without simulation,
+  4. validates the winner at packet fidelity (loss-recovery converges,
+     exactly-once delivery is enforced inside the packet engine) and
+     reports a ``protocol.BoundCertificate`` with the winner-time / bound
+     ratio.
+
+``sched_ir.autotune_chains`` is the trivial 1-D special case: it delegates
+to ``sweep_chains`` here and shares the same evaluation cache, so
+benchmarks stop re-simulating identical schedules.
+
+Why the bounds are admissible:
+
+* analytic closed forms: every host must ingest the collective's bytes
+  through its NIC at the slower of wire and worker-pool rate; on a
+  topology the per-host attach capacity is at most the fastest tier, so
+  the closed form evaluated at ``b = max(tier_capacities)`` lower-bounds
+  the topology-fluid time too (latency terms only grow with multi-hop
+  paths).
+* fabric cuts: in the fluid max-min model the aggregate rate across a cut
+  never exceeds the sum of its link capacities, so (bytes that must cross
+  the cut) / (cut capacity) lower-bounds completion time. Multicasts are
+  counted once per crossing (in-network duplication could deliver a group
+  with a single traversal), which undercounts the routed lowering —
+  conservative, hence admissible.
+* pipelined allreduce: ``protocol.pipeline_schedule_time`` is monotone in
+  every stage time, so feeding it per-segment analytic lower bounds yields
+  a lower bound of the pipelined execution (one shared recurrence between
+  the executor and the bound).
+"""
+from __future__ import annotations
+
+import math
+import time as _time
+from dataclasses import astuple, dataclass
+
+import numpy as np
+
+from repro.core import protocol, sched_ir
+from repro.core.engine import FabricParams, WorkerParams
+from repro.core.sched_ir import Multicast, Reduce, Schedule, Unicast
+
+COLLECTIVES = ("broadcast", "allgather", "reduce_scatter", "allreduce")
+
+# RS∘AG pipelining depths tried for derived allreduce candidates.
+SEGMENT_CANDIDATES = (2, 4, 8)
+
+
+# ------------------------------------------------------------ eval context
+
+
+def _topology_key(topology):
+    if topology is None:
+        return None
+    sig = getattr(topology, "signature", None)
+    # shape-identical topologies share cache entries; anything without a
+    # signature() is keyed by identity (deterministic: evaluate() resets it)
+    return sig() if sig is not None else ("id", id(topology))
+
+
+@dataclass(frozen=True)
+class EvalContext:
+    """Everything besides the schedule itself that determines a fluid
+    evaluation's outcome — the second half of the cache key."""
+    fabric: FabricParams
+    workers: WorkerParams
+    topology: object = None
+    hosts: tuple | None = None
+    fidelity: str = "fluid"
+    seed: int = 0
+
+    def key(self) -> tuple:
+        return (astuple(self.fabric), astuple(self.workers),
+                _topology_key(self.topology), self.hosts, self.fidelity,
+                self.seed)
+
+
+@dataclass
+class EvalResult:
+    time: float
+    fabric_bytes: float          # routed bytes (sum of link_bytes on a
+                                 # topology; payload bytes otherwise)
+
+
+class EvalCache:
+    """Memoized schedule evaluations keyed on (canonical schedule hash,
+    context key). Shared between search(), sweep_chains() and
+    sched_ir.autotune_chains so repeated sweeps over the same fabric never
+    re-simulate a schedule."""
+
+    def __init__(self) -> None:
+        self._store: dict[tuple, EvalResult] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def evaluate(self, sched: Schedule, ctx: EvalContext) -> EvalResult:
+        key = (sched_ir.canonical_key(sched), ctx.key())
+        got = self._store.get(key)
+        if got is not None:
+            self.hits += 1
+            return got
+        self.misses += 1
+        if ctx.topology is not None:
+            ctx.topology.reset()
+        if ctx.fidelity == "analytic":
+            res = sched_ir.execute(sched, ctx.fabric, ctx.workers,
+                                   fidelity="analytic")
+            out = EvalResult(time=float(res),
+                             fabric_bytes=sched_ir.payload_bytes(sched))
+        else:
+            res = sched_ir.execute(
+                sched, ctx.fabric, ctx.workers,
+                np.random.default_rng(ctx.seed), fidelity=ctx.fidelity,
+                topology=ctx.topology,
+                hosts=list(ctx.hosts) if ctx.hosts is not None else None)
+            if ctx.topology is not None and res.link_bytes:
+                fabric_bytes = float(sum(res.link_bytes.values()))
+            else:
+                fabric_bytes = sched_ir.payload_bytes(sched)
+            out = EvalResult(time=res.time, fabric_bytes=fabric_bytes)
+        self._store[key] = out
+        return out
+
+
+# ------------------------------------------------------------ lower bounds
+
+
+def cut_lower_bound(sched: Schedule, topology, hosts=None) -> float:
+    """max over bottleneck cuts of bytes-that-must-cross / cut-capacity.
+    A true fluid-model lower bound (see module docstring); returns 0.0 when
+    the topology exposes no cuts."""
+    cuts = getattr(topology, "bottleneck_cuts", None)
+    if cuts is None:
+        return 0.0
+    host_of = list(hosts) if hosts is not None else list(range(sched.p))
+    best = 0.0
+    for cut in cuts():
+        inside = cut.hosts
+        b_in = b_out = 0.0
+        for op in sched.ops:
+            if isinstance(op, Multicast):
+                root_in = host_of[op.root] in inside
+                memb = [host_of[r] in inside for r in op.group
+                        if r != op.root]
+                if not root_in and any(memb):
+                    b_in += op.nbytes
+                if root_in and not all(memb):
+                    b_out += op.nbytes
+            elif isinstance(op, Unicast):
+                src_in = host_of[op.src] in inside
+                dst_in = host_of[op.dst] in inside
+                if not src_in and dst_in:
+                    b_in += op.nbytes
+                elif src_in and not dst_in:
+                    b_out += op.nbytes
+            elif isinstance(op, Reduce):
+                dst_in = host_of[op.dst] in inside
+                for s in op.srcs:
+                    src_in = host_of[s] in inside
+                    if not src_in and dst_in:
+                        b_in += op.nbytes
+                    elif src_in and not dst_in:
+                        b_out += op.nbytes
+        if cut.cap_in > 0:
+            best = max(best, b_in / cut.cap_in)
+        if cut.cap_out > 0:
+            best = max(best, b_out / cut.cap_out)
+    return best
+
+
+def lower_bound(sched: Schedule, ctx: EvalContext) -> tuple[float, str]:
+    """Admissible lower bound on ``sched``'s fluid time in ``ctx``; returns
+    (bound, binding) where binding names the binding constraint
+    ("analytic" or "cut:<name-of-tier>")."""
+    fabric = ctx.fabric
+    binding = "analytic"
+    if ctx.topology is not None:
+        # the closed forms assume a single NIC at b_link; on a fabric a
+        # host's attach capacity is its boundary cut (a Torus2D node has 4
+        # incident links -> 4x one link's rate). Evaluate at the
+        # representative single-host cut's capacity — an upper bound on
+        # ingest rate for these tier-symmetric fabrics, so the closed form
+        # stays a lower bound — falling back to the fastest tier.
+        b_eff = None
+        cuts_fn = getattr(ctx.topology, "bottleneck_cuts", None)
+        if cuts_fn is not None:
+            solo = [max(c.cap_in, c.cap_out) for c in cuts_fn()
+                    if len(c.hosts) == 1]
+            if solo:
+                b_eff = max(solo)
+        if b_eff is None:
+            tiers = getattr(ctx.topology, "tier_capacities", None)
+            caps = tiers() if tiers is not None else {}
+            b_eff = max(caps.values()) if caps else None
+        if b_eff is not None:
+            from dataclasses import replace
+            fabric = replace(fabric, b_link=b_eff)
+    bound = sched_ir.execute(sched, fabric, ctx.workers, fidelity="analytic")
+    if ctx.topology is not None:
+        cut = cut_lower_bound(sched, ctx.topology, ctx.hosts)
+        if cut > bound:
+            bound, binding = cut, "cut"
+    return bound, binding
+
+
+# ------------------------------------------------------- candidate space
+
+
+@dataclass(frozen=True)
+class Candidate:
+    name: str
+    sched: Schedule
+    origin: str                  # "builder" (seed) or "derived"
+
+
+def chain_candidates(p: int, topology=None) -> list[int]:
+    """Chain counts M to sweep: divisors of P (the autotune_chains default)
+    plus cut-structure-derived suggestions — on an oversubscribed fabric
+    the tier-capacity ratio says roughly how many concurrent chains the
+    thin tier can carry, so P/ratio (and its neighbours) join the set."""
+    ms = {m for m in range(1, p + 1) if p % m == 0}
+    if topology is not None:
+        tiers = getattr(topology, "tier_capacities", None)
+        if tiers is not None:
+            caps = tiers()
+            if caps and min(caps.values()) > 0:
+                ratio = max(caps.values()) / min(caps.values())
+                m_star = max(1, min(p, round(p / ratio)))
+                ms.update(x for x in (m_star, m_star + 1, max(1, m_star - 1))
+                          if 1 <= x <= p)
+    return sorted(ms)
+
+
+def candidates(collective: str, p: int, n_bytes: int,
+               topology=None) -> list[Candidate]:
+    """The search space: builder seeds first (force-evaluated so the
+    incumbent equals the best hand-written schedule before any pruning),
+    then derived candidates."""
+    assert collective in COLLECTIVES, collective
+    out: list[Candidate] = []
+    if collective == "broadcast":
+        out.append(Candidate("builder:tree",
+                             sched_ir.build_broadcast_tree(p, n_bytes),
+                             "builder"))
+        return out
+    if collective == "reduce_scatter":
+        out.append(Candidate("builder:ring",
+                             sched_ir.build_ring_reduce_scatter(p, n_bytes),
+                             "builder"))
+        return out
+    ms = chain_candidates(p, topology)
+    if collective == "allgather":
+        out.append(Candidate("builder:ring",
+                             sched_ir.build_ring_allgather(p, n_bytes),
+                             "builder"))
+        for m in ms:
+            origin = "builder" if p % m == 0 else "derived"
+            out.append(Candidate(f"{origin}:mcast[m={m}]",
+                                 sched_ir.build_allgather(p, n_bytes, m),
+                                 origin))
+        return out
+    # allreduce: barrier builders (ring AG and every M-chain AG), then the
+    # derived segment-pipelined schedules (extra Activation edges let
+    # segment s+1's RS overlap segment s's AG)
+    out.append(Candidate("builder:rs+ring_ag",
+                         sched_ir.build_allreduce(p, n_bytes, None),
+                         "builder"))
+    builder_ms = [m for m in ms if p % m == 0]
+    for m in builder_ms:
+        out.append(Candidate(f"builder:rs+mcast_ag[m={m}]",
+                             sched_ir.build_allreduce(p, n_bytes, m),
+                             "builder"))
+    # pipelined candidates sweep segments x a TRIMMED chain grid ({ring,
+    # full-parallel, cut-derived}) — the full divisor grid already ran as
+    # barrier seeds, and each pipelined eval costs n_segments engine runs,
+    # so the 2-D product must stay small to hold the P<=64 wall budget
+    cut_ms = sorted(set(ms) - set(m for m in ms if p % m == 0))
+    seg_ms = [None, p] + [m for m in (p // 2,) if p % 2 == 0 and p // 2 >= 1] \
+        + cut_ms
+    seg_ms = list(dict.fromkeys(seg_ms))
+    for s in SEGMENT_CANDIDATES:
+        if s > max(n_bytes // max(p, 1), 1):
+            continue
+        for m in seg_ms:
+            tag = f"m={m}" if m else "ring"
+            out.append(Candidate(
+                f"derived:pipelined[S={s},{tag}]",
+                sched_ir.build_pipelined_allreduce(p, n_bytes, m,
+                                                   n_segments=s),
+                "derived"))
+    return out
+
+
+# ------------------------------------------------------------- the search
+
+
+@dataclass
+class CandidateReport:
+    name: str
+    origin: str
+    bound: float
+    time: float | None           # None -> pruned without simulation
+    fabric_bytes: float | None
+
+
+@dataclass
+class SearchResult:
+    collective: str
+    p: int
+    n_bytes: int
+    winner: Candidate
+    winner_time: float
+    winner_fabric_bytes: float
+    best_builder: Candidate
+    best_builder_time: float
+    best_builder_fabric_bytes: float
+    certificate: protocol.BoundCertificate
+    table: list[CandidateReport]
+    evaluations: int
+    cache_hits: int
+    pruned: int
+    wall_s: float
+    packet_validated: bool | None = None
+
+    @property
+    def searched_vs_best_builder(self) -> float:
+        return self.winner_time / self.best_builder_time
+
+
+def _packet_converged(res) -> bool:
+    """Walk a packet-fidelity result for convergence: every component that
+    reports a ``completed`` flag (broadcast runs, allgather legs, pipelined
+    segments) must have delivered everything within the round budget."""
+    ok = True
+    seen = False
+    for attr in ("completed",):
+        if hasattr(res, attr):
+            ok &= bool(getattr(res, attr))
+            seen = True
+    for attr in ("rs", "ag"):
+        sub = getattr(res, attr, None)
+        if sub is not None:
+            sub_ok = _packet_converged(sub)
+            ok &= sub_ok
+            seen = True
+    for pair in getattr(res, "segments", ()) or ():
+        for sub in pair:
+            ok &= _packet_converged(sub)
+            seen = True
+    return ok if seen else math.isfinite(res.time)
+
+
+def search(collective: str, p: int, n_bytes: int, *, topology=None,
+           hosts=None, fabric: FabricParams | None = None,
+           workers: WorkerParams | None = None, cache: EvalCache | None = None,
+           seed: int = 0, validate_packet: bool = True,
+           loss=None) -> SearchResult:
+    """Branch-and-bound schedule search (module docstring). Builder seeds
+    are force-evaluated to establish the incumbent; derived candidates are
+    visited in ascending bound order and pruned when their admissible lower
+    bound already meets the incumbent. The winner is re-validated at packet
+    fidelity (optionally under ``loss``)."""
+    t0 = _time.perf_counter()
+    fabric = fabric or FabricParams(jitter=0.0)
+    workers = workers or WorkerParams(n_recv_workers=8)
+    cache = cache if cache is not None else EvalCache()
+    ctx = EvalContext(fabric, workers, topology,
+                      tuple(hosts) if hosts is not None else None,
+                      "fluid", seed)
+    pool = candidates(collective, p, n_bytes, topology)
+    for cand in pool:
+        sched_ir.validate(cand.sched)
+
+    hits0 = cache.hits
+    table: list[CandidateReport] = []
+    incumbent: Candidate | None = None
+    incumbent_time = math.inf
+    incumbent_bytes = math.inf
+    best_builder: Candidate | None = None
+    best_builder_time = math.inf
+    best_builder_bytes = math.inf
+    evaluations = pruned = 0
+    min_bound = math.inf
+    min_binding = "analytic"
+
+    seeds = [c for c in pool if c.origin == "builder"]
+    derived = [c for c in pool if c.origin != "builder"]
+
+    scored: list[tuple[float, str, Candidate]] = []
+    for cand in seeds + derived:
+        bound, binding = lower_bound(cand.sched, ctx)
+        if bound < min_bound:
+            min_bound, min_binding = bound, binding
+        scored.append((bound, binding, cand))
+    n_seeds = len(seeds)
+    # seeds keep submission order (all run); derived sorted by bound so the
+    # most promising run first and tighten the incumbent for pruning
+    scored[n_seeds:] = sorted(scored[n_seeds:], key=lambda t: t[0])
+
+    for i, (bound, binding, cand) in enumerate(scored):
+        is_seed = i < n_seeds
+        if not is_seed and bound >= incumbent_time:
+            pruned += 1
+            table.append(CandidateReport(cand.name, cand.origin, bound,
+                                         None, None))
+            continue
+        res = cache.evaluate(cand.sched, ctx)
+        evaluations += 1
+        table.append(CandidateReport(cand.name, cand.origin, bound,
+                                     res.time, res.fabric_bytes))
+        if is_seed and (res.time, res.fabric_bytes) < (best_builder_time,
+                                                       best_builder_bytes):
+            best_builder, best_builder_time, best_builder_bytes = \
+                cand, res.time, res.fabric_bytes
+        if (res.time, res.fabric_bytes) < (incumbent_time, incumbent_bytes):
+            incumbent, incumbent_time, incumbent_bytes = \
+                cand, res.time, res.fabric_bytes
+
+    assert incumbent is not None and best_builder is not None
+    cert = protocol.BoundCertificate(
+        kind=collective, p=p, n_bytes=n_bytes, bound=min_bound,
+        winner_time=incumbent_time, binding=min_binding)
+
+    packet_ok: bool | None = None
+    if validate_packet:
+        # fabrics without h* host leaves (Torus2D) can't run the packet
+        # lowering's name-based path resolution — validate the winner's
+        # loss-recovery convergence on the abstract fabric instead
+        pkt_topo = topology if getattr(topology, "supports_packet",
+                                       topology is not None) else None
+        if pkt_topo is not None:
+            pkt_topo.reset()
+        pres = sched_ir.execute(
+            incumbent.sched, fabric, workers, np.random.default_rng(seed),
+            fidelity="packet", topology=pkt_topo,
+            hosts=list(hosts) if pkt_topo is not None and hosts is not None
+            else None, loss=loss)
+        packet_ok = _packet_converged(pres) and math.isfinite(pres.time)
+
+    return SearchResult(
+        collective=collective, p=p, n_bytes=n_bytes,
+        winner=incumbent, winner_time=incumbent_time,
+        winner_fabric_bytes=incumbent_bytes,
+        best_builder=best_builder, best_builder_time=best_builder_time,
+        best_builder_fabric_bytes=best_builder_bytes,
+        certificate=cert, table=table, evaluations=evaluations,
+        cache_hits=cache.hits - hits0, pruned=pruned,
+        wall_s=_time.perf_counter() - t0, packet_validated=packet_ok)
+
+
+# -------------------------------------------- the 1-D special case (M sweep)
+
+
+def sweep_chains(schedule_builder, topology=None, *, p: int, n_bytes: int,
+                 fabric: FabricParams, workers: WorkerParams,
+                 candidates, fidelity: str = "fluid", seed: int = 0,
+                 cache: EvalCache | None = None) -> tuple[int, dict[int, float]]:
+    """The trivial 1-D slice of the searcher: sweep the chain count M for
+    ``schedule_builder(p, n_bytes, m)`` through the shared memoized cache
+    and return (argmin, the full {m: time} sweep). Backs
+    ``sched_ir.autotune_chains``."""
+    cache = cache if cache is not None else EvalCache()
+    ctx = EvalContext(fabric, workers, topology, None, fidelity, seed)
+    times: dict[int, float] = {}
+    for m in candidates:
+        times[m] = cache.evaluate(schedule_builder(p, n_bytes, m), ctx).time
+    best = min(times, key=lambda m: (times[m], m))
+    return best, times

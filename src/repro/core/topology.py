@@ -82,6 +82,22 @@ class Topology(Protocol):
     def reset(self) -> None: ...
 
 
+@dataclass(frozen=True)
+class Cut:
+    """One fabric cut: the hosts inside a region plus the aggregate capacity
+    of the directed links crossing its boundary. The schedule searcher
+    (core/sched_search.py) turns these into admissible lower bounds — any
+    byte a schedule moves into (out of) the region crosses ``cap_in``
+    (``cap_out``) at least once, and the fluid engine can never push a link
+    set past its aggregate capacity — and into cut-derived chain-count
+    candidates (how many full-rate streams the bottleneck tier carries)."""
+
+    name: str
+    hosts: frozenset[int]              # host ids inside the region
+    cap_in: float                      # bytes/s entering the region
+    cap_out: float                     # bytes/s leaving the region
+
+
 class _LinkRegistry:
     """Shared plumbing: the directed-link table plus the validity assertion
     used by every route/tree builder (a hop not in the table is a physically
@@ -122,6 +138,24 @@ class _LinkRegistry:
             link.bytes_served = 0.0
             link.active = []
 
+    # --- cut introspection (schedule-search lower bounds) ------------------
+    def cut_capacity(self, inside: set[str]) -> tuple[float, float]:
+        """(cap_in, cap_out) of the cut around node-name set ``inside``:
+        aggregate capacity of the directed links entering / leaving the
+        region. Computed from the live link table, so degenerate fabrics
+        (2-long rings, partially-populated pods) are counted exactly."""
+        cap_in = cap_out = 0.0
+        for (a, b), link in self._links.items():
+            if a not in inside and b in inside:
+                cap_in += link.capacity
+            elif a in inside and b not in inside:
+                cap_out += link.capacity
+        return cap_in, cap_out
+
+    def _make_cut(self, name: str, hosts, inside: set[str]) -> Cut:
+        cap_in, cap_out = self.cut_capacity(inside)
+        return Cut(name, frozenset(hosts), cap_in, cap_out)
+
     # --- static counting (analytic Fig. 2 path: traffic without timing) ----
     def unicast(self, src: int, dst: int, nbytes: float) -> None:
         for link in self.route(src, dst):
@@ -148,6 +182,10 @@ class FatTree(_LinkRegistry):
     of every switch-to-switch tier (edge-agg and agg-core), modeling the
     usual uplink thinning; host links stay at ``b_host``.
     """
+
+    # hosts are dedicated leaf nodes (h{i}), so the packet lowering's
+    # name-based tree-path resolution works on this fabric
+    supports_packet = True
 
     def __init__(self, k: int, n_hosts: int | None = None, *,
                  b_host: float = DEFAULT_LINK_BYTES,
@@ -203,6 +241,44 @@ class FatTree(_LinkRegistry):
         share (simulate_multi_job reports their contention)."""
         return [l for (a, b), l in self._links.items()
                 if a.startswith("c") or b.startswith("c")]
+
+    # --- search introspection ----------------------------------------------
+    def signature(self) -> tuple:
+        """Hashable identity of the fabric SHAPE (not its mutable counters):
+        two topologies with equal signatures route identically, so schedule
+        evaluations can be shared across instances (sched_search.EvalCache)."""
+        return ("FatTree", self.k, self.n_hosts, self.b_host,
+                self.oversubscription)
+
+    def tier_capacities(self) -> dict[str, float]:
+        """Per-link capacity of each fabric tier — the oversubscription view
+        the searcher uses to derive chain-count candidates."""
+        return {"host": self.b_host,
+                "up": self.b_host / self.oversubscription}
+
+    def bottleneck_cuts(self) -> list[Cut]:
+        """The fat-tree's natural hierarchy cuts: one representative host,
+        one edge-switch group (hosts + their edge switch behind the h2
+        uplinks) and one pod (hosts + edge + agg switches behind the h2^2
+        core downlinks). Capacities come from the live link table; cuts that
+        contain every host (single-pod fabrics) are dropped — they bound
+        nothing."""
+        h2 = self.k // 2
+        per_pod = h2 * h2
+        cuts = [self._make_cut("host0", [0], {self.host(0)})]
+        edge_hosts = [h for h in range(self.n_hosts)
+                      if self.edge_of(h) == self.edge_of(0)]
+        if len(edge_hosts) < self.n_hosts:
+            cuts.append(self._make_cut(
+                "edge0", edge_hosts,
+                {self.host(h) for h in edge_hosts} | {self.edge_of(0)}))
+        pod_hosts = [h for h in range(self.n_hosts) if h < per_pod]
+        if len(pod_hosts) < self.n_hosts:
+            inside = {self.host(h) for h in pod_hosts}
+            inside |= {f"e0.{e}" for e in range(h2)}
+            inside |= {self.agg(0, a) for a in range(h2)}
+            cuts.append(self._make_cut("pod0", pod_hosts, inside))
+        return cuts
 
     # --- deterministic ECMP up-down route ----------------------------------
     def route(self, src: int, dst: int) -> list[Link]:
@@ -270,6 +346,11 @@ class Torus2D(_LinkRegistry):
     (x then y) shortest ring paths, ties broken toward +1; multicast trees are
     the confluent union of those routes (row trunk, column branches)."""
 
+    # hosts ARE the torus nodes (t{x}.{y}) — there are no h* leaf links, so
+    # the packet lowering's host-name path resolution cannot run here; the
+    # searcher validates winners at packet fidelity on the abstract fabric
+    supports_packet = False
+
     def __init__(self, nx: int, ny: int, *, b_link: float = DEFAULT_LINK_BYTES):
         super().__init__()
         self.nx, self.ny = nx, ny
@@ -286,6 +367,28 @@ class Torus2D(_LinkRegistry):
 
     def coord(self, i: int) -> tuple[int, int]:
         return i // self.ny, i % self.ny
+
+    # --- search introspection ----------------------------------------------
+    def signature(self) -> tuple:
+        return ("Torus2D", self.nx, self.ny, self.b_link)
+
+    def tier_capacities(self) -> dict[str, float]:
+        return {"link": self.b_link}
+
+    def bottleneck_cuts(self) -> list[Cut]:
+        """Torus cuts: one representative node (its incident links), the
+        first column ring and the first row ring — the per-dimension
+        bisection-style bottlenecks a schedule's streams must cross."""
+        cuts = [self._make_cut("node0", [0], {self.node(0, 0)})]
+        if self.nx > 1:
+            col_hosts = [self.ny * 0 + y for y in range(self.ny)]
+            cuts.append(self._make_cut(
+                "col0", col_hosts, {self.node(0, y) for y in range(self.ny)}))
+        if self.ny > 1:
+            row_hosts = [x * self.ny for x in range(self.nx)]
+            cuts.append(self._make_cut(
+                "row0", row_hosts, {self.node(x, 0) for x in range(self.nx)}))
+        return cuts
 
     @staticmethod
     def _dir(a: int, b: int, n: int) -> int:

@@ -1,0 +1,282 @@
+"""Schedule search (core/sched_search.py): every emitted candidate is a
+valid acyclic schedule that lowers at all three fidelities; the winner
+respects its admissible lower-bound certificate; the searched schedule
+never loses to the best hand-written builder (and strictly beats it on the
+oversubscribed FatTree and the Torus — the repo's acceptance fabrics); the
+memoized evaluation cache is shared with autotune_chains; and the
+engine="auto" packet-executor heuristic keeps explicit overrides
+bit-exact."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import packet as pk
+from repro.core import protocol, sched_ir, sched_search
+from repro.core.engine import FabricParams, WorkerParams
+from repro.core.sched_search import EvalCache, EvalContext, search
+from repro.core.topology import FatTree, Torus2D
+
+FAB = FabricParams(jitter=0.0)
+WK = WorkerParams(n_recv_workers=8)
+P, N = 8, 1 << 20
+
+
+def _fattree():
+    return FatTree(k=8, n_hosts=16, oversubscription=4.0)
+
+
+def _torus():
+    return Torus2D(4, 4)
+
+
+# --------------------------------------------------- candidate properties
+
+
+@pytest.mark.parametrize("collective", sched_search.COLLECTIVES)
+def test_candidates_validate_and_are_acyclic(collective):
+    for cand in sched_search.candidates(collective, P, N, _fattree()):
+        sched_ir.validate(cand.sched)          # asserts DAG-ness + typing
+        gens = cand.sched.rounds()             # topological generations
+        assert sum(len(g) for g in gens) == len(cand.sched.ops)
+
+
+@pytest.mark.parametrize("collective", sched_search.COLLECTIVES)
+def test_candidates_lower_at_all_three_fidelities(collective):
+    rng = np.random.default_rng(0)
+    for cand in sched_search.candidates(collective, P, N, None):
+        a = sched_ir.execute(cand.sched, FAB, WK, fidelity="analytic")
+        f = sched_ir.execute(cand.sched, FAB, WK, rng, fidelity="fluid")
+        p = sched_ir.execute(cand.sched, FAB, WK, rng, fidelity="packet")
+        assert math.isfinite(a) and a > 0
+        assert a <= f.time + 1e-12 <= p.time + 1e-9
+
+
+def test_chain_candidates_include_divisors_and_cut_derived():
+    ms = sched_search.chain_candidates(16, _fattree())
+    assert {1, 2, 4, 8, 16} <= set(ms)
+    # oversubscription 4 -> the thin tier carries ~P/4 concurrent chains
+    assert any(3 <= m <= 5 for m in ms)
+
+
+# --------------------------------------------------- bounds / certificates
+
+
+@pytest.mark.parametrize("topo_fn", [lambda: None, _fattree, _torus],
+                         ids=["abstract", "fattree", "torus"])
+def test_winner_respects_lower_bound_certificate(topo_fn):
+    r = search("allreduce", P, N, topology=topo_fn(), validate_packet=False)
+    assert r.certificate.bound <= r.winner_time + 1e-12
+    assert r.certificate.ratio >= 1.0 - 1e-9
+    # the per-candidate bounds are admissible for every SIMULATED candidate
+    for row in r.table:
+        if row.time is not None:
+            assert row.bound <= row.time + 1e-12, row.name
+
+
+@pytest.mark.parametrize("topo_fn", [_fattree, _torus],
+                         ids=["fattree", "torus"])
+def test_cut_lower_bound_admissible_for_builders(topo_fn):
+    topo = topo_fn()
+    rng = np.random.default_rng(0)
+    for cand in sched_search.candidates("allreduce", 16, N, topo):
+        topo.reset()
+        t = sched_ir.execute(cand.sched, FAB, WK, rng, fidelity="fluid",
+                             topology=topo).time
+        lb = sched_search.cut_lower_bound(cand.sched, topo)
+        assert lb <= t + 1e-12, cand.name
+
+
+def test_bound_certificate_ratio_infinite_on_zero_bound():
+    cert = protocol.BoundCertificate("allgather", 2, 1, 0.0, 1.0, "analytic")
+    assert math.isinf(cert.ratio)
+
+
+# ------------------------------------------------------- search outcomes
+
+
+def test_search_never_loses_to_builders_and_wins_on_fattree():
+    r = search("allreduce", 16, 16 << 20, topology=_fattree(), loss=0.001)
+    assert r.searched_vs_best_builder <= 1.0
+    assert r.winner_time < r.best_builder_time          # strict win
+    assert r.winner.origin == "derived"
+    assert r.packet_validated is True
+
+
+def test_search_wins_strictly_on_torus():
+    r = search("allreduce", 16, 16 << 20, topology=_torus(), loss=0.001)
+    assert r.winner_time < r.best_builder_time
+    # Torus2D has no h* leaves -> packet validation falls back to the
+    # abstract fabric but still must converge under loss
+    assert r.packet_validated is True
+
+
+def test_search_matches_builder_when_space_is_builders_only():
+    r = search("broadcast", P, N, validate_packet=False)
+    assert r.winner.origin == "builder"
+    assert r.searched_vs_best_builder == 1.0
+
+
+def test_search_table_covers_every_candidate():
+    r = search("allreduce", P, N, validate_packet=False)
+    assert len(r.table) == r.evaluations + r.pruned
+    assert all(row.time is None for row in r.table
+               if row.name not in {t.name for t in r.table
+                                   if t.time is not None})
+    # pruned candidates were cut by the incumbent, not silently dropped
+    for row in r.table:
+        if row.time is None:
+            assert row.bound >= r.winner_time - 1e-12
+
+
+# ------------------------------------------------ metamorphic: more links
+
+
+def test_adding_capacity_never_worsens_searched_time_fattree():
+    """Adding links == raising cut capacity: de-oversubscribing the fabric
+    (equivalently, adding parallel uplink cables at fluid fidelity) must
+    never make the searched schedule slower."""
+    cache = EvalCache()
+    thin = search("allreduce", 16, 16 << 20, validate_packet=False,
+                  topology=FatTree(k=8, n_hosts=16, oversubscription=4.0),
+                  cache=cache)
+    fat = search("allreduce", 16, 16 << 20, validate_packet=False,
+                 topology=FatTree(k=8, n_hosts=16, oversubscription=1.0),
+                 cache=cache)
+    assert fat.winner_time <= thin.winner_time + 1e-12
+
+
+def test_adding_capacity_never_worsens_searched_time_torus():
+    slow = search("allreduce", 16, 16 << 20, validate_packet=False,
+                  topology=Torus2D(4, 4, b_link=12.5e9))
+    fast = search("allreduce", 16, 16 << 20, validate_packet=False,
+                  topology=Torus2D(4, 4, b_link=25e9))
+    assert fast.winner_time <= slow.winner_time + 1e-12
+
+
+# -------------------------------------------------------- cache semantics
+
+
+def test_search_reuses_cache_across_runs():
+    cache = EvalCache()
+    r1 = search("allreduce", P, N, validate_packet=False, cache=cache)
+    misses = cache.misses
+    r2 = search("allreduce", P, N, validate_packet=False, cache=cache)
+    assert cache.misses == misses                 # fully served from cache
+    assert r2.cache_hits == r2.evaluations
+    assert r1.winner_time == r2.winner_time
+
+
+def test_cache_key_separates_contexts():
+    cache = EvalCache()
+    sched = sched_ir.build_allgather(P, N, 2)
+    ctx_a = EvalContext(FAB, WK)
+    ctx_b = EvalContext(FAB, WorkerParams(n_recv_workers=1))
+    t_a = cache.evaluate(sched, ctx_a).time
+    t_b = cache.evaluate(sched, ctx_b).time
+    assert cache.misses == 2 and t_a != t_b
+
+
+def test_canonical_key_content_addressed():
+    a = sched_ir.build_allgather(P, N, 2)
+    b = sched_ir.build_allgather(P, N, 2)
+    c = sched_ir.build_allgather(P, N, 4)
+    assert sched_ir.canonical_key(a) == sched_ir.canonical_key(b)
+    assert sched_ir.canonical_key(a) != sched_ir.canonical_key(c)
+
+
+def test_autotune_chains_shares_cache_and_returns_full_sweep():
+    cache = EvalCache()
+    best, times = sched_ir.autotune_chains(sched_ir.build_allgather,
+                                           p=P, n_bytes=N, cache=cache)
+    assert set(times) == {m for m in range(1, P + 1) if P % m == 0}
+    assert best == min(times, key=lambda m: (times[m], m))
+    best2, times2 = sched_ir.autotune_chains(sched_ir.build_allgather,
+                                             p=P, n_bytes=N, cache=cache)
+    assert (best2, times2) == (best, times)
+    assert cache.hits == len(times)               # second sweep: all hits
+
+
+def test_autotune_chains_matches_direct_execution():
+    _, times = sched_ir.autotune_chains(sched_ir.build_allgather,
+                                        p=P, n_bytes=N)
+    for m, t in times.items():
+        direct = sched_ir.execute(sched_ir.build_allgather(P, N, m),
+                                  FAB, WK, np.random.default_rng(0),
+                                  fidelity="fluid")
+        assert t == direct.time
+
+
+# ----------------------------------------------- pipelined allreduce IR
+
+
+def test_pipelined_allreduce_fidelity_ordering():
+    sched = sched_ir.build_pipelined_allreduce(P, 4 << 20, 4, n_segments=4)
+    rng = np.random.default_rng(0)
+    a = sched_ir.execute(sched, FAB, WK, fidelity="analytic")
+    f = sched_ir.execute(sched, FAB, WK, rng, fidelity="fluid")
+    p = sched_ir.execute(sched, FAB, WK, rng, fidelity="packet")
+    assert a <= f.time + 1e-12 <= p.time + 1e-9
+    assert len(f.segments) == 4
+    assert f.bytes_total > 0 and f.rs_time > 0 and f.ag_time > 0
+
+
+def test_pipelined_single_segment_matches_barrier_time():
+    rng = np.random.default_rng(0)
+    pipe = sched_ir.build_pipelined_allreduce(P, 4 << 20, 4, n_segments=1)
+    barrier = sched_ir.build_allreduce(P, 4 << 20, 4)
+    tp = sched_ir.execute(pipe, FAB, WK, rng, fidelity="fluid").time
+    tb = sched_ir.execute(barrier, FAB, WK, rng, fidelity="fluid").time
+    assert tp == pytest.approx(tb, rel=1e-12)
+
+
+def test_pipeline_recurrence_reduces_to_sum_for_one_segment():
+    assert protocol.pipeline_schedule_time([3.0], [2.0]) == 5.0
+    # overlap: second RS hides under first AG
+    assert protocol.pipeline_schedule_time([1.0, 1.0], [1.0, 1.0]) == 3.0
+
+
+def test_segment_bytes_partition():
+    segs = sched_ir.segment_bytes(10, 3)
+    assert sum(segs) == 10 and max(segs) - min(segs) <= 1
+
+
+# ------------------------------------------------------- engine="auto"
+
+
+def test_resolve_engine_passthrough_and_heuristic():
+    assert pk.resolve_engine("vectorized", "allgather", 8, 1 << 30) \
+        == "vectorized"
+    assert pk.resolve_engine("reference", "allgather", 1024, 1) \
+        == "reference"
+    # dense big-row regime (DESIGN §9): few hosts, >= 16 MiB merged rows
+    assert pk.resolve_engine("auto", "allgather", 8, 32 << 20) == "reference"
+    assert pk.resolve_engine("auto", "allgather", 8, 1 << 20) == "vectorized"
+    assert pk.resolve_engine("auto", "allgather", 512, 1 << 30) \
+        == "vectorized"
+    assert pk.resolve_engine("auto", "broadcast", 8, 1 << 30) == "vectorized"
+    with pytest.raises(AssertionError):
+        pk.resolve_engine("nope", "allgather", 8, 1)
+
+
+def test_engine_auto_bit_exact_with_explicit():
+    """auto only picks between the bit-exact pair, so the default change
+    can never alter results — pin it on both sides of the regime split."""
+    for n_bytes in (1 << 18, (16 << 20) // 4):   # sparse / dense rows (m=4)
+        res = {}
+        for eng in ("auto", "vectorized", "reference"):
+            sched = sched_ir.build_allgather(4, n_bytes, 4)
+            r = sched_ir.execute(sched, FAB, WK, np.random.default_rng(7),
+                                 fidelity="packet", loss=0.01, engine=eng)
+            res[eng] = (r.time, r.recovered, r.bytes_fast)
+        assert res["auto"] == res["vectorized"] == res["reference"]
+
+
+# ------------------------------------------------------------- wall-clock
+
+
+def test_search_wall_clock_budget_p64():
+    r = search("allreduce", 64, 16 << 20, validate_packet=False,
+               topology=FatTree(k=8, n_hosts=64, oversubscription=4.0))
+    assert r.wall_s < 30.0
+    assert r.searched_vs_best_builder <= 1.0
