@@ -650,6 +650,72 @@ def search_sweep():
     return rows
 
 
+def hier_fabric_sweep():
+    """Tiered island fabrics (core/topology.IslandFatTree): the searched
+    mixed-transport allgather must strictly beat BOTH the flat multicast
+    builder and the pure island-ring builder at P in {64, 256}, carry a
+    BoundCertificate ratio >= 1 from the tiered analytic bounds, and shed
+    switched-tier fabric bytes onto the island tier (FlexLink-style,
+    arXiv:2510.15882). All gated rows are deterministic model ratios."""
+    from repro.core import sched_ir, sched_search
+    from repro.core.topology import IslandFatTree
+
+    fab = FabricParams(jitter=0.0)
+    wk = WorkerParams(n_recv_workers=8)
+    n = 1 << 20                                   # 1 MiB per-rank buffer
+    cache = sched_search.EvalCache()
+    rows = []
+    t0 = time.perf_counter()
+    for k, p in ((8, 64), (16, 256)):
+        topo = IslandFatTree(k, p, island_size=8)
+        hosts = list(range(p))
+        r = sched_search.search("allgather", p, n, topology=topo,
+                                hosts=hosts, cache=cache)
+        assert r.winner.sched.kind == "hier_allgather", r.winner.name
+        assert r.packet_validated, f"P={p}: winner failed packet validation"
+        assert r.certificate.ratio >= 1.0 - 1e-9, \
+            f"P={p}: winner beat its own admissible tiered bound"
+        flat_t = min(row.time for row in r.table
+                     if row.name.startswith("builder:mcast")
+                     and row.time is not None)
+        ring_t = next(row.time for row in r.table
+                      if row.name == "builder:ring")
+        assert r.winner_time < flat_t and r.winner_time < ring_t, \
+            (p, r.winner_time, flat_t, ring_t)
+        rows.append((f"hier.P{p}.searched_vs_flat_mcast_x",
+                     round(r.winner_time / flat_t, 4),
+                     f"{r.winner.name} vs best flat multicast"))
+        rows.append((f"hier.P{p}.searched_vs_island_ring_x",
+                     round(r.winner_time / ring_t, 4),
+                     f"{r.winner.name} vs routed unicast ring"))
+        rows.append((f"hier.P{p}.bound_cert_x",
+                     round(r.certificate.ratio, 4),
+                     f"winner/bound, binding={r.certificate.binding}"))
+        # per-tier fabric bytes: the winner's switched-tier relief is the
+        # headline — total routed bytes barely move (the redistribution
+        # still touches every rank), they just ride the island cables
+        topo.reset()
+        win = sched_ir.execute(r.winner.sched, fab, wk,
+                               np.random.default_rng(0), topology=topo,
+                               hosts=hosts)
+        win_split = topo.tier_split(win.link_bytes)
+        topo.reset()
+        flat = sched_ir.execute(sched_ir.build_allgather(p, n, p), fab, wk,
+                                np.random.default_rng(0), topology=topo,
+                                hosts=hosts)
+        flat_split = topo.tier_split(flat.link_bytes)
+        assert win_split["switched"] < flat_split["switched"], (p, win_split)
+        assert flat_split.get("island", 0.0) == 0.0
+        rows.append((f"hier.P{p}.switched_bytes_vs_flat_x",
+                     round(win_split["switched"] / flat_split["switched"], 4),
+                     f"winner switched={win_split['switched']/GIB:.3f}GiB "
+                     f"island={win_split.get('island', 0.0)/GIB:.3f}GiB"))
+    wall = time.perf_counter() - t0
+    rows.append(("hier.allgather_search_wall_s", round(wall, 3),
+                 "P=64+256 island fabrics, shared eval cache"))
+    return rows
+
+
 def fsdp_contention_sweep():
     """Abstract's opening claim: interleaved AG/RS contend for injection
     bandwidth; the multicast schedule and the Insight-2 direction split cut
@@ -750,8 +816,8 @@ ALL = [
     appendix_b_speedup, dpa_scaling_sweep, fsdp_contention_sweep,
     fabric_sweep, protocol_loss_sweep, packet_scale_sweep,
     multi_job_contention,
-    schedule_ir_sweep, search_sweep, measured_protocol_micro,
-    measured_jax_collectives,
+    schedule_ir_sweep, search_sweep, hier_fabric_sweep,
+    measured_protocol_micro, measured_jax_collectives,
 ]
 
 # seconds-scale subset for benchmarks/run.py --smoke / CI: the FSDP
@@ -761,8 +827,10 @@ ALL = [
 # crossover), the event-level DPA scaling sweep (Figs 13/14/16 + offload
 # economics), the multi-job contention scenario and the schedule-IR
 # allreduce-vs-ring sweep (ring/mcast time + fabric-byte ratios, autotune),
-# and the packet-engine scale sweep (vectorized-vs-reference wall-clock,
-# including the 10k-host / 1 GiB speedup floor)
+# the packet-engine scale sweep (vectorized-vs-reference wall-clock,
+# including the 10k-host / 1 GiB speedup floor), and the tiered island
+# fabric sweep (searched mixed-transport allgather vs flat builders with
+# per-tier fabric-byte relief at P=64/256 — the ISSUE-8 acceptance gates)
 SMOKE = [fsdp_contention_sweep, fabric_sweep_smoke, protocol_loss_sweep_smoke,
          dpa_scaling_smoke, multi_job_contention, schedule_ir_sweep,
-         search_sweep, packet_scale_sweep_smoke]
+         search_sweep, packet_scale_sweep_smoke, hier_fabric_sweep]

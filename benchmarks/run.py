@@ -78,13 +78,21 @@ def main() -> None:
     ap.add_argument("--results", default="dryrun_results")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI sweep; also writes --json")
-    ap.add_argument("--json",
-                    default=os.path.join(os.path.dirname(__file__), "..",
-                                         "BENCH_smoke.json"),
-                    help="smoke-report path (written only with --smoke; "
-                         "defaults to the repo root, where "
+    ap.add_argument("--write-json", action="store_true",
+                    help="emit the report JSON for a full (non-smoke) run "
+                         "too — the nightly CI job uploads it as a "
+                         "BENCH_*.json artifact so wall-clock drift rows "
+                         "accumulate history")
+    ap.add_argument("--json", default=None,
+                    help="report path (written with --smoke or "
+                         "--write-json; defaults to BENCH_smoke.json / "
+                         "BENCH_full.json in the repo root, where "
                          "scripts/bench_gate.py looks for it)")
     args = ap.parse_args()
+    if args.json is None:
+        args.json = os.path.join(
+            os.path.dirname(__file__), "..",
+            "BENCH_smoke.json" if args.smoke else "BENCH_full.json")
 
     benches = paper_figs.SMOKE if args.smoke else paper_figs.ALL
     if args.smoke:
@@ -124,12 +132,12 @@ def main() -> None:
             "wall_s": round(dt, 4), "rows": n_rows,
         }
 
-    if args.smoke:
+    if args.smoke or args.write_json:
         report["failures"] = failures
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True, allow_nan=False)
             f.write("\n")
-        print(f"bench.smoke_report,{args.json},"
+        print(f"bench.report,{args.json},"
               f"{len(report['ratios'])} gated ratios", file=sys.stderr)
 
     if not args.skip_roofline and os.path.isdir(args.results):

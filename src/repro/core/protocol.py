@@ -254,6 +254,41 @@ def analytic_ring_allgather_time(p: int, n_bytes: int, b_link: float,
     return (p - 1) * (n_bytes / b_link + latency)
 
 
+def analytic_hier_allgather_time(p: int, n_bytes: int, b_link: float,
+                                 latency: float, *, island_size: int,
+                                 m: int | None = None,
+                                 stripe_mode: str = "mcast",
+                                 pool_rate: float | None = None,
+                                 rnr_hop: float = 1.5e-6,
+                                 b_island: float | None = None) -> float:
+    """Closed form (lower bound) of the hierarchical island allgather
+    (sched_ir.build_hierarchical_allgather): phase B is an I-member
+    allgather over the switched tier at ``b_link`` (I = P/g islands; the
+    M-chain closed form, or the ring form for the unicast-stripe variant),
+    phase C is g-1 island-ring generations each rotating an I*N bundle at
+    ``b_island`` (defaults to ``b_link`` for the abstract single-NIC view).
+
+    Tiered admissibility (the searcher's pruning bound): every phase-C hop
+    crosses exactly one link of capacity at most ``b_island`` — island-tier
+    cables at b_island, or slower multi-hop switched paths for the
+    transport-flipped variant — so the ring term evaluated at the island
+    capacity lower-bounds any redistribute_transport; the phase-B term
+    inherits the flat closed form's NIC-ingest argument at I members."""
+    g = island_size
+    assert g >= 2 and p % g == 0 and p // g >= 2, (p, g)
+    n_islands = p // g
+    if stripe_mode == "mcast":
+        stripe = analytic_allgather_time(n_islands, n_bytes, b_link, latency,
+                                         n_chains=m or 1,
+                                         pool_rate=pool_rate,
+                                         rnr_hop=rnr_hop)
+    else:
+        stripe = analytic_ring_allgather_time(n_islands, n_bytes, b_link,
+                                              latency)
+    b_isl = b_island if b_island is not None else b_link
+    return stripe + (g - 1) * (n_islands * n_bytes / b_isl + latency)
+
+
 def analytic_ring_reduce_scatter_time(p: int, n_bytes: int, b_link: float,
                                       latency: float) -> float:
     """Closed form of the ring Reduce-Scatter lowering over an N-byte

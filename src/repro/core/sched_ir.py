@@ -61,7 +61,13 @@ from repro.core.engine import (
 
 FIDELITIES = ("analytic", "fluid", "packet")
 KINDS = ("broadcast", "allgather", "ring_allgather", "reduce_scatter",
-         "allreduce", "fsdp_step")
+         "allreduce", "hier_allgather", "fsdp_step")
+
+#: per-op transport tags (topology.LINK_TIERS plus None = "let the fabric
+#: route"). An op tagged "island" must stay inside one island and rides the
+#: NVLink/ICI ring; "switched" forces the fat-tree even for island-local
+#: pairs. Multicast is switched-only — islands have no switch replication.
+TRANSPORTS = (None, "intra_host", "island", "switched")
 
 
 # -------------------------------------------------------------- shared pieces
@@ -129,10 +135,12 @@ def _rnr_barrier(p: int, fabric: FabricParams, workers: WorkerParams) -> float:
 @dataclass(frozen=True)
 class Multicast:
     """Switch-replicated stream: ``root`` sends ``nbytes`` once, every other
-    member of ``group`` receives it (Insight 1)."""
+    member of ``group`` receives it (Insight 1). ``transport`` pins the op
+    to a fabric tier on tiered topologies (switched-only for multicast)."""
     root: int
     group: tuple[int, ...]
     nbytes: float
+    transport: str | None = None
 
     @property
     def receivers(self) -> tuple[int, ...]:
@@ -149,10 +157,13 @@ class Multicast:
 
 @dataclass(frozen=True)
 class Unicast:
-    """Point-to-point stream on reliable (RC) transport."""
+    """Point-to-point stream on reliable (RC) transport. ``transport`` pins
+    the op to a fabric tier on tiered topologies ("island" asserts src and
+    dst share an island)."""
     src: int
     dst: int
     nbytes: float
+    transport: str | None = None
 
     @property
     def payload_bytes(self) -> float:
@@ -172,6 +183,7 @@ class Reduce:
     srcs: tuple[int, ...]
     nbytes: float
     op: str = "sum"
+    transport: str | None = None
 
     @property
     def payload_bytes(self) -> float:
@@ -240,7 +252,8 @@ def payload_bytes(sched: Schedule) -> float:
 #: meta keys that change what the executor runs (everything else in meta is
 #: derived bookkeeping or nested sub-schedules already covered by the op DAG)
 _CANONICAL_META = ("n_chains", "m", "n_segments", "policy", "n_layers",
-                   "layer_bytes")
+                   "layer_bytes", "island_size", "stripe_mode",
+                   "redistribute_transport")
 
 
 def canonical_key(sched: Schedule) -> str:
@@ -255,11 +268,12 @@ def canonical_key(sched: Schedule) -> str:
     parts: list = [sched.kind, sched.p, sched.n_bytes]
     for op in sched.ops:
         if isinstance(op, Multicast):
-            parts.append(("M", op.root, op.group, op.nbytes))
+            parts.append(("M", op.root, op.group, op.nbytes, op.transport))
         elif isinstance(op, Unicast):
-            parts.append(("U", op.src, op.dst, op.nbytes))
+            parts.append(("U", op.src, op.dst, op.nbytes, op.transport))
         else:
-            parts.append(("R", op.dst, op.srcs, op.nbytes, op.op))
+            parts.append(("R", op.dst, op.srcs, op.nbytes, op.op,
+                          op.transport))
     parts.append(tuple(sorted(sched.activation)))
     parts.append(tuple((k, sched.meta[k]) for k in _CANONICAL_META
                        if k in sched.meta))
@@ -274,6 +288,10 @@ def validate(sched: Schedule) -> None:
         for r in op.ranks():
             assert 0 <= r < sched.p, (op, sched.p)
         assert op.nbytes >= 0, op
+        assert op.transport in TRANSPORTS, op
+        if isinstance(op, Multicast):
+            assert op.transport in (None, "switched"), \
+                (op, "multicast exists only on the switched tier")
     for a, b in sched.activation:
         assert 0 <= a < n and 0 <= b < n and a != b, (a, b)
     rounds = sched.rounds()            # raises on cycle
@@ -289,6 +307,22 @@ def validate(sched: Schedule) -> None:
         for r, idxs in enumerate(rounds):
             assert tuple(sched.ops[i].root for i in idxs) == \
                 seq.active_group(r, sched.p, m), (r, m)
+    if sched.kind == "hier_allgather":
+        g = sched.meta["island_size"]
+        assert g >= 2 and sched.p % g == 0 and sched.p // g >= 2, \
+            (sched.p, g)
+        for op in sched.ops:
+            if isinstance(op, Multicast):
+                # phase B stripe multicast: the root's stripe peers only
+                # (one member per island), over the switched tier
+                assert op.transport == "switched", op
+                assert set(op.group) == {x for x in range(sched.p)
+                                         if x % g == op.root % g}, (op, g)
+            else:
+                assert isinstance(op, Unicast), op
+                if op.transport == "island":
+                    assert op.src // g == op.dst // g, \
+                        (op, g, "island op must stay inside one island")
 
 
 # ------------------------------------------------------------------ builders
@@ -333,6 +367,90 @@ def build_ring_allgather(p: int, n_bytes: int) -> Schedule:
             act += [(idx[(s - 1, (i - 1) % p)], idx[(s, i)])
                     for i in range(p)]
     return Schedule("ring_allgather", p, n_bytes, tuple(ops), tuple(act))
+
+
+def build_hierarchical_allgather(p: int, n_bytes: int, island_size: int,
+                                 m: int = 1, *, stripe_mode: str = "mcast",
+                                 redistribute_transport: str = "island"
+                                 ) -> Schedule:
+    """FlexLink-style tiered allgather (arXiv:2510.15882) for island fabrics
+    (topology.IslandFatTree): hosts are grouped into islands of
+    ``island_size`` (= g), giving I = P/g islands, and *stripe* r is the set
+    of ranks {j*g + r} — one member per island. Two phases:
+
+      B (switched tier): each stripe runs the paper's M-chain multicast
+        allgather among its I members over the fat-tree — every NIC ingests
+        only (I-1)*N instead of (P-1)*N, the full multicast win at 1/g the
+        fan-in. ``stripe_mode="ring"`` flips the stripe legs to routed
+        unicast rings (the searcher's multicast<->unicast transport move).
+      C (island tier): after its stripe completes, every rank holds its
+        stripe's full I*N bundle; g-1 island-ring generations rotate the g
+        distinct bundles inside each island (classical ring allgather with
+        bundle-sized shards) on ``redistribute_transport`` ("island" = the
+        NVLink/ICI ring; "switched" is the searcher's flip back onto the
+        fat-tree).
+
+    meta carries the two phase sub-schedules (``stripe_ag``, one stripe's
+    template; ``island_ring``, the phase-C ring over all P ranks) the
+    composite executor lowers, exactly like build_allreduce's rs/ag pair."""
+    assert stripe_mode in ("mcast", "ring"), stripe_mode
+    assert redistribute_transport in ("island", "switched"), \
+        redistribute_transport
+    g = island_size
+    assert g >= 2 and p % g == 0, (p, g, "islands must tile the ranks")
+    n_islands = p // g
+    assert n_islands >= 2, (p, g, "need at least two islands")
+    if stripe_mode == "mcast":
+        stripe_tpl = build_allgather(n_islands, n_bytes, m)
+    else:
+        stripe_tpl = build_ring_allgather(n_islands, n_bytes)
+        m = None
+    tpl_rounds = stripe_tpl.rounds()
+    ops: list[Op] = []
+    act: list[tuple[int, int]] = []
+    stripe_last: list[list[int]] = []  # per stripe: last-generation op idxs
+    for r in range(g):
+        members = tuple(j * g + r for j in range(n_islands))
+        off = len(ops)
+        for op in stripe_tpl.ops:
+            if isinstance(op, Multicast):
+                ops.append(Multicast(members[op.root],
+                                     tuple(members[x] for x in op.group),
+                                     op.nbytes, transport="switched"))
+            else:
+                ops.append(Unicast(members[op.src], members[op.dst],
+                                   op.nbytes, transport="switched"))
+        act += [(a + off, b + off) for a, b in stripe_tpl.activation]
+        stripe_last.append([i + off for i in tpl_rounds[-1]])
+    bundle = n_islands * n_bytes
+    ring_ops: list[Op] = []
+    ring_act: list[tuple[int, int]] = []
+    off = len(ops)
+    idx: dict[tuple[int, int], int] = {}
+    for s in range(g - 1):
+        for i in range(p):
+            base = (i // g) * g
+            idx[(s, i)] = len(ring_ops)
+            ring_ops.append(Unicast(i, base + (i - base + 1) % g, bundle,
+                                    transport=redistribute_transport))
+        if s:
+            ring_act += [(idx[(s - 1, (i // g) * g + (i % g - 1) % g)],
+                          idx[(s, i)]) for i in range(p)]
+    ops += ring_ops
+    act += [(a + off, b + off) for a, b in ring_act]
+    # phase barrier per stripe: rank i's redistribution starts once its OWN
+    # stripe's last generation delivered (stripe of rank i is i % g)
+    for i in range(p):
+        act += [(a, off + idx[(0, i)]) for a in stripe_last[i % g]]
+    island_ring = Schedule("ring_allgather", p, bundle, tuple(ring_ops),
+                           tuple(ring_act))
+    return Schedule("hier_allgather", p, n_bytes, tuple(ops), tuple(act),
+                    meta={"island_size": g, "m": m,
+                          "stripe_mode": stripe_mode,
+                          "redistribute_transport": redistribute_transport,
+                          "bundle_bytes": bundle,
+                          "stripe_ag": stripe_tpl,
+                          "island_ring": island_ring})
 
 
 def build_ring_reduce_scatter(p: int, n_bytes: int) -> Schedule:
@@ -708,14 +826,20 @@ def _fluid_ring(sched: Schedule, fabric: FabricParams,
         hosts = list(hosts) if hosts is not None else list(range(p))
         assert len(hosts) == p, (len(hosts), p)
         topology.reset()
-        route_cache: dict[tuple[int, int], list] = {}
+        route_cache: dict[tuple, list] = {}
+        tiered = getattr(topology, "supports_transport", False)
 
         def route_of(op: Op):
             src = op.src if isinstance(op, Unicast) else op.srcs[0]
             dst = op.dst
-            key = (src, dst)
+            key = (src, dst, op.transport)
             if key not in route_cache:
-                route_cache[key] = topology.route(hosts[src], hosts[dst])
+                # per-op transport pins the fabric tier on topologies that
+                # have tiers; flat fabrics route the same links regardless
+                route_cache[key] = (
+                    topology.route(hosts[src], hosts[dst],
+                                   transport=op.transport)
+                    if tiered else topology.route(hosts[src], hosts[dst]))
             return route_cache[key]
     else:
         eng.add_link("ring.send", fabric.b_link)
@@ -769,10 +893,16 @@ def _packet_ring(sched: Schedule, fabric: FabricParams,
         return base
     if topology is not None:
         host_list = list(hosts) if hosts is not None else list(range(sched.p))
-        hops = [len(topology.route(host_list[op.src if isinstance(op, Unicast)
-                                             else op.srcs[0]],
-                                   host_list[op.dst]))
-                for op in (sched.ops[i] for i in sched.rounds()[0])]
+        tiered = getattr(topology, "supports_transport", False)
+
+        def route_len(op):
+            src = op.src if isinstance(op, Unicast) else op.srcs[0]
+            if tiered:
+                return len(topology.route(host_list[src], host_list[op.dst],
+                                          transport=op.transport))
+            return len(topology.route(host_list[src], host_list[op.dst]))
+
+        hops = [route_len(sched.ops[i]) for i in sched.rounds()[0]]
         path_len = max(sum(hops) / len(hops), 1.0)
     else:
         path_len = 1.0
@@ -866,6 +996,89 @@ def _exec_pipelined_allreduce(sched: Schedule, fabric, workers, rng, *,
         ag=results[0][1],
         link_bytes=merged,
         segments=tuple(results),
+    )
+
+
+# ------------------------------------------------- hierarchical allgather
+
+
+@dataclass
+class HierAllgatherResult:
+    """Hierarchical allgather = striped switched allgather ∘ island-ring
+    redistribution (build_hierarchical_allgather). ``stripe`` is the
+    executed phase-B result of stripe 0 — stripes are member-disjoint and
+    structurally identical, so one is the timing representative; the other
+    stripes' fabric bytes are counted statically into ``link_bytes``
+    (inter-stripe uplink contention is a recorded deviation, DESIGN §11)."""
+    time: float
+    stripe: object                   # AllgatherResult | RingCollectiveResult
+    ring: RingCollectiveResult       # phase C (island redistribution)
+    bytes_total: float
+    per_rank_recv_tput: float
+    phases: PhaseBreakdown
+    link_bytes: dict[str, float] = field(default_factory=dict)
+    completed: bool = True           # packet: phase B converged (C is RC)
+
+
+def _exec_hier_allgather(sched: Schedule, fabric, workers, rng, *, fidelity,
+                         topology, hosts, loss, kw) -> HierAllgatherResult:
+    """Composite lowering of a hier_allgather schedule: execute the phase-B
+    stripe template on stripe 0's members, count the symmetric stripes'
+    fabric bytes statically, then execute the phase-C island ring over all
+    ranks (per-op transports route it onto the island tier). Phase C tagged
+    wholly "island" runs lossless at packet fidelity — intra-island ICI is
+    reliable (DESIGN §2); the switched-redistribution variant keeps the
+    caller's loss model."""
+    p, g = sched.p, sched.meta["island_size"]
+    n_islands = p // g
+    stripe_sched: Schedule = sched.meta["stripe_ag"]
+    ring_sched: Schedule = sched.meta["island_ring"]
+    host_list = list(hosts) if hosts is not None else list(range(p))
+    assert len(host_list) == p, (len(host_list), p)
+    stripe_hosts = ([host_list[j * g] for j in range(n_islands)]
+                    if topology is not None else None)
+    # packet-only options (engine=, max_rounds, ...) apply to the multicast
+    # stripe leg; a ring-mode stripe is RC transport and takes none
+    stripe_kw = kw if stripe_sched.kind == "allgather" else {}
+    stripe_res = execute(stripe_sched, fabric, workers, rng,
+                         fidelity=fidelity, topology=topology,
+                         hosts=stripe_hosts, loss=loss, **stripe_kw)
+    link_bytes = dict(stripe_res.link_bytes)
+    if topology is not None:
+        topology.reset()
+        for r in range(1, g):
+            members = [host_list[j * g + r] for j in range(n_islands)]
+            for op in stripe_sched.ops:
+                if isinstance(op, Multicast):
+                    topology.multicast(members[op.root], members, op.nbytes)
+                else:
+                    topology.unicast(members[op.src], members[op.dst],
+                                     op.nbytes)
+        for (a, b), v in topology.counters.bytes_by_link.items():
+            link_bytes[f"{a}->{b}"] = link_bytes.get(f"{a}->{b}", 0.0) + v
+    ring_loss = loss
+    if all(op.transport == "island" for op in ring_sched.ops):
+        ring_loss = 0.0               # packet.resolve_loss: lossless
+    ring_res = execute(ring_sched, fabric, workers, rng, fidelity=fidelity,
+                       topology=topology, hosts=host_list,
+                       loss=ring_loss if fidelity == "packet" else None)
+    for k, v in ring_res.link_bytes.items():
+        link_bytes[k] = link_bytes.get(k, 0.0) + v
+    total_time = stripe_res.time + ring_res.time
+    sp = stripe_res.phases
+    rp = ring_res.phases
+    return HierAllgatherResult(
+        time=total_time,
+        stripe=stripe_res,
+        ring=ring_res,
+        bytes_total=payload_bytes(sched),
+        per_rank_recv_tput=(p - 1) * sched.n_bytes / total_time,
+        phases=PhaseBreakdown(rnr_sync=sp.rnr_sync,
+                              multicast=sp.multicast + rp.multicast,
+                              reliability=sp.reliability + rp.reliability,
+                              handshake=sp.handshake + rp.handshake),
+        link_bytes=link_bytes,
+        completed=bool(getattr(stripe_res, "completed", True)),
     )
 
 
@@ -1705,6 +1918,11 @@ def _exec_analytic(sched: Schedule, fabric: FabricParams,
             rnr_hop=hop)
     if sched.kind == "ring_allgather":
         return protocol.analytic_ring_allgather_time(p, n, b, lat)
+    if sched.kind == "hier_allgather":
+        return protocol.analytic_hier_allgather_time(
+            p, n, b, lat, island_size=sched.meta["island_size"],
+            m=sched.meta.get("m"), stripe_mode=sched.meta["stripe_mode"],
+            pool_rate=pool, rnr_hop=hop)
     if sched.kind == "reduce_scatter":
         return protocol.analytic_ring_reduce_scatter_time(p, n, b, lat)
     if sched.kind == "allreduce":
@@ -1778,6 +1996,10 @@ def execute(sched: Schedule, fabric: FabricParams | None = None,
         if sched.kind in ("ring_allgather", "reduce_scatter"):
             return _fluid_ring(sched, fabric, workers, rng,
                                topology=topology, hosts=hosts)
+        if sched.kind == "hier_allgather":
+            return _exec_hier_allgather(sched, fabric, workers, rng,
+                                        fidelity=fidelity, topology=topology,
+                                        hosts=hosts, loss=loss, kw=kw)
         if sched.kind == "allreduce":
             return _exec_allreduce(sched, fabric, workers, rng,
                                    fidelity=fidelity, topology=topology,
@@ -1800,6 +2022,10 @@ def execute(sched: Schedule, fabric: FabricParams | None = None,
             f"{sorted(kw)} not supported for ring schedules (RC transport)"
         return _packet_ring(sched, fabric, workers, rng, topology=topology,
                             hosts=hosts, loss=loss)
+    if sched.kind == "hier_allgather":
+        return _exec_hier_allgather(sched, fabric, workers, rng,
+                                    fidelity=fidelity, topology=topology,
+                                    hosts=hosts, loss=loss, kw=kw)
     if sched.kind == "allreduce":
         return _exec_allreduce(sched, fabric, workers, rng,
                                fidelity=fidelity, topology=topology,

@@ -11,9 +11,13 @@ structure): given a collective and a ``Topology``, it
      them),
   2. derives extra candidates from the fabric's structure: chain counts M
      from the per-tier bottleneck cuts (``topology.bottleneck_cuts`` /
-     ``tier_capacities``), ring-vs-multicast transport for the AG leg, and
+     ``tier_capacities``), ring-vs-multicast transport for the AG leg,
      RS∘AG chunk-granularity pipelining via extra Activation edges
-     (``build_pipelined_allreduce``),
+     (``build_pipelined_allreduce``), and — on tiered island fabrics
+     (topology.IslandFatTree) — hierarchical mixed-transport allgathers
+     (``build_hierarchical_allgather``) mutated by island-grouping and
+     per-op transport-flip moves seeded from ``tier_capacities()``
+     (``hier_candidates``),
   3. scores candidates with ``sched_ir.execute`` at fluid fidelity through
      a memoized evaluation cache (keyed on the schedule's canonical
      content hash + the evaluation context), pruned branch-and-bound
@@ -195,9 +199,35 @@ def cut_lower_bound(sched: Schedule, topology, hosts=None) -> float:
 def lower_bound(sched: Schedule, ctx: EvalContext) -> tuple[float, str]:
     """Admissible lower bound on ``sched``'s fluid time in ``ctx``; returns
     (bound, binding) where binding names the binding constraint
-    ("analytic" or "cut:<name-of-tier>")."""
+    ("analytic" or "cut:<name-of-tier>"). Tiered hier_allgather schedules
+    get the tiered closed form (protocol.analytic_hier_allgather_time):
+    the stripe term at the switched-tier host attach, the island-ring term
+    at the fastest tier capacity — both upper bounds on the respective
+    phase's ingest rate, so the form stays admissible per phase."""
     fabric = ctx.fabric
     binding = "analytic"
+    tier_caps: dict[str, float] = {}
+    if ctx.topology is not None:
+        tiers = getattr(ctx.topology, "tier_capacities", None)
+        tier_caps = tiers() if tiers is not None else {}
+    if sched.kind == "hier_allgather":
+        w = ctx.workers
+        # switched attach for phase B ("host" NIC on island fabrics);
+        # fastest tier for the phase-C ring hop — each generous, hence safe
+        b_stripe = tier_caps.get("host", max(tier_caps.values())
+                                 if tier_caps else fabric.b_link)
+        b_ring = max(tier_caps.values()) if tier_caps else fabric.b_link
+        bound = protocol.analytic_hier_allgather_time(
+            sched.p, sched.n_bytes, b_stripe, fabric.latency,
+            island_size=sched.meta["island_size"], m=sched.meta.get("m"),
+            stripe_mode=sched.meta["stripe_mode"],
+            pool_rate=w.n_recv_workers * w.thread_tput,
+            rnr_hop=w.rnr_barrier_hop, b_island=b_ring)
+        if ctx.topology is not None:
+            cut = cut_lower_bound(sched, ctx.topology, ctx.hosts)
+            if cut > bound:
+                bound, binding = cut, "cut"
+        return bound, binding
     if ctx.topology is not None:
         # the closed forms assume a single NIC at b_link; on a fabric a
         # host's attach capacity is its boundary cut (a Torus2D node has 4
@@ -255,6 +285,52 @@ def chain_candidates(p: int, topology=None) -> list[int]:
     return sorted(ms)
 
 
+def hier_candidates(p: int, n_bytes: int, topology=None) -> list[Candidate]:
+    """Tiered-fabric allgather candidates: on a topology exposing islands
+    (``island_size``), seed the canonical hierarchical builder (the fabric's
+    own island grouping, one chain per stripe) and derive the searcher's
+    mutation moves around it —
+
+      island-grouping: regroup into sub-islands g' | island_size (a smaller
+        ring still rides the island-tier cables; g' = island_size is the
+        physical grouping),
+      chain-count: M per stripe seeded from ``tier_capacities()`` (the
+        island/switched capacity ratio says how many switched chains the
+        stripe NICs carry), plus the M=1 / full-parallel endpoints,
+      transport flips: stripe multicast -> routed unicast ring
+        (stripe_mode="ring") and island redistribution -> back over the
+        switched tier (redistribute_transport="switched").
+    """
+    g0 = getattr(topology, "island_size", None)
+    if g0 is None or p % g0 != 0 or p // g0 < 2:
+        return []
+    caps = topology.tier_capacities()
+    ratio = (max(caps.values()) / min(caps.values())
+             if caps and min(caps.values()) > 0 else 1.0)
+    out: list[Candidate] = []
+    for g in (d for d in range(2, g0 + 1) if g0 % d == 0):
+        n_islands = p // g
+        m_star = max(1, min(n_islands, round(n_islands / ratio)))
+        origin = "builder" if g == g0 else "derived"
+        for i, m in enumerate(sorted({1, m_star, n_islands})):
+            out.append(Candidate(
+                f"{origin if (i == 0 and g == g0) else 'derived'}"
+                f":hier[g={g},m={m}]",
+                sched_ir.build_hierarchical_allgather(p, n_bytes, g, m),
+                origin if (i == 0 and g == g0) else "derived"))
+        out.append(Candidate(
+            f"derived:hier[g={g},ring-stripe]",
+            sched_ir.build_hierarchical_allgather(p, n_bytes, g,
+                                                  stripe_mode="ring"),
+            "derived"))
+        out.append(Candidate(
+            f"derived:hier[g={g},m={m_star},switched-redist]",
+            sched_ir.build_hierarchical_allgather(
+                p, n_bytes, g, m_star, redistribute_transport="switched"),
+            "derived"))
+    return out
+
+
 def candidates(collective: str, p: int, n_bytes: int,
                topology=None) -> list[Candidate]:
     """The search space: builder seeds first (force-evaluated so the
@@ -282,6 +358,7 @@ def candidates(collective: str, p: int, n_bytes: int,
             out.append(Candidate(f"{origin}:mcast[m={m}]",
                                  sched_ir.build_allgather(p, n_bytes, m),
                                  origin))
+        out += hier_candidates(p, n_bytes, topology)
         return out
     # allreduce: barrier builders (ring AG and every M-chain AG), then the
     # derived segment-pipelined schedules (extra Activation edges let
@@ -361,7 +438,7 @@ def _packet_converged(res) -> bool:
         if hasattr(res, attr):
             ok &= bool(getattr(res, attr))
             seen = True
-    for attr in ("rs", "ag"):
+    for attr in ("rs", "ag", "stripe", "ring"):
         sub = getattr(res, attr, None)
         if sub is not None:
             sub_ok = _packet_converged(sub)

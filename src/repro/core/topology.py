@@ -43,6 +43,14 @@ from repro.core.engine import Link
 #: default per-direction host link rate (200 Gbit/s, the paper's NIC)
 DEFAULT_LINK_BYTES = 200e9 / 8
 
+#: fabric link tiers, innermost first: NVLink/PCIe inside one host, the
+#: NVLink/ICI island interconnect between hosts of one island, and the
+#: multicast-capable switched fat-tree fabric between islands. Schedule ops
+#: may pin themselves to a tier via their ``transport`` field (sched_ir);
+#: multicast exists only on the switched tier — islands move bytes by
+#: neighbor (ring) unicast, like the torus.
+LINK_TIERS = ("intra_host", "island", "switched")
+
 
 @dataclass
 class LinkCounters:
@@ -105,10 +113,31 @@ class _LinkRegistry:
 
     def __init__(self):
         self._links: dict[tuple[str, str], Link] = {}
+        self._tiers: dict[tuple[str, str], str] = {}
 
-    def _add(self, a: str, b: str, capacity: float) -> None:
+    def _add(self, a: str, b: str, capacity: float, *,
+             tier: str = "switched") -> None:
+        assert tier in LINK_TIERS, tier
         if (a, b) not in self._links:
             self._links[(a, b)] = Link(f"{a}->{b}", capacity, a, b)
+            self._tiers[(a, b)] = tier
+
+    def tier_of(self, a: str, b: str) -> str:
+        """Fabric tier of the directed link a->b (see LINK_TIERS)."""
+        self.link(a, b)                     # asserts the cable exists
+        return self._tiers[(a, b)]
+
+    def tier_split(self, link_bytes: dict[str, float]) -> dict[str, float]:
+        """Split an engine ``link_bytes()`` dict (keyed by Link name
+        ``"a->b"``) into per-tier byte totals — the fabric-byte view the
+        hier_fabric benchmark gates (how much traffic each tier carried)."""
+        out: dict[str, float] = {}
+        for (a, b), link in self._links.items():
+            v = link_bytes.get(link.name)
+            if v:
+                t = self._tiers[(a, b)]
+                out[t] = out.get(t, 0.0) + v
+        return out
 
     def link(self, a: str, b: str) -> Link:
         """The directed Link a->b; asserts the cable physically exists."""
@@ -186,6 +215,9 @@ class FatTree(_LinkRegistry):
     # hosts are dedicated leaf nodes (h{i}), so the packet lowering's
     # name-based tree-path resolution works on this fabric
     supports_packet = True
+    # a flat fat-tree has a single switched tier; per-op transports only
+    # mean something on tiered fabrics (IslandFatTree)
+    supports_transport = False
 
     def __init__(self, k: int, n_hosts: int | None = None, *,
                  b_host: float = DEFAULT_LINK_BYTES,
@@ -340,6 +372,114 @@ class FatTree(_LinkRegistry):
         return self._resolve(list(hops))
 
 
+class IslandFatTree(FatTree):
+    """Tiered fabric: the FatTree's switched tier plus NVLink/ICI *islands* —
+    consecutive host groups of ``island_size`` joined by a bidirectional
+    neighbor ring of ``island`` -tier links at ``b_island`` per direction
+    (the NVLink/ICI analogue; typically several times the NIC rate).
+
+    Every host keeps its fat-tree NIC attach, so the two tiers coexist and a
+    schedule chooses per op: ``transport="switched"`` forces the fat-tree
+    (the only tier with hardware multicast), ``transport="island"`` forces
+    the intra-island ring (asserts src/dst share an island), ``None`` routes
+    island-local pairs over the island ring and everything else up the
+    fat-tree. This is the FlexLink-style tiered fabric (arXiv:2510.15882)
+    the hierarchical allgather builder and the searcher's transport-flip /
+    island-grouping moves target.
+    """
+
+    supports_packet = True
+    supports_transport = True
+
+    def __init__(self, k: int, n_hosts: int | None = None, *,
+                 island_size: int = 8, b_island: float | None = None,
+                 b_host: float = DEFAULT_LINK_BYTES,
+                 oversubscription: float = 1.0):
+        super().__init__(k, n_hosts, b_host=b_host,
+                         oversubscription=oversubscription)
+        assert island_size >= 2, "an island needs at least two hosts"
+        assert self.n_hosts % island_size == 0, \
+            (self.n_hosts, island_size, "islands must tile the host range")
+        self.island_size = island_size
+        # NVLink-class default: 8x the NIC per direction
+        self.b_island = float(b_island if b_island is not None
+                              else 8 * self.b_host)
+        g = island_size
+        for i in range(self.n_islands):
+            for j in range(g):
+                a, b = i * g + j, i * g + (j + 1) % g
+                if a != b:
+                    self._add(self.host(a), self.host(b), self.b_island,
+                              tier="island")
+                    self._add(self.host(b), self.host(a), self.b_island,
+                              tier="island")
+
+    # --- island structure ---------------------------------------------------
+    @property
+    def n_islands(self) -> int:
+        return self.n_hosts // self.island_size
+
+    def island_of(self, h: int) -> int:
+        return h // self.island_size
+
+    def island_members(self, i: int) -> list[int]:
+        g = self.island_size
+        return list(range(i * g, (i + 1) * g))
+
+    # --- search introspection ----------------------------------------------
+    def signature(self) -> tuple:
+        return ("IslandFatTree", self.k, self.n_hosts, self.b_host,
+                self.oversubscription, self.island_size, self.b_island)
+
+    def tier_capacities(self) -> dict[str, float]:
+        return {"island": self.b_island, "host": self.b_host,
+                "up": self.b_host / self.oversubscription}
+
+    def bottleneck_cuts(self) -> list[Cut]:
+        """FatTree's cuts plus the island-0 cut: everything a schedule moves
+        into an island funnels through its members' g NIC attaches — the
+        tiered bound that makes flat schedules look expensive here."""
+        cuts = super().bottleneck_cuts()
+        if self.island_size < self.n_hosts:
+            members = self.island_members(0)
+            cuts.append(self._make_cut(
+                "island0", members, {self.host(h) for h in members}))
+        return cuts
+
+    # --- transport-aware routing -------------------------------------------
+    def _island_hops(self, src: int, dst: int) -> list[tuple[str, str]]:
+        """Shortest intra-island ring path (ties toward +1), Torus2D-style."""
+        g = self.island_size
+        base = self.island_of(src) * g
+        s, d = src - base, dst - base
+        step = Torus2D._dir(s, d, g)
+        hops, x = [], s
+        while x != d:
+            nxt = (x + step) % g
+            hops.append((self.host(base + x), self.host(base + nxt)))
+            x = nxt
+        return hops
+
+    def route(self, src: int, dst: int,
+              transport: str | None = None) -> list[Link]:
+        if src == dst:
+            return []
+        local = self.island_of(src) == self.island_of(dst)
+        if transport == "island" or (transport is None and local):
+            assert local, (src, dst, "island transport across islands")
+            return self._resolve(self._island_hops(src, dst))
+        assert transport in (None, "switched"), transport
+        return super().route(src, dst)
+
+    def multicast_tree(self, root: int, members: Sequence[int],
+                       transport: str | None = None) -> list[Link]:
+        # hardware replication lives in the switches only — there is no
+        # island-tier multicast (islands ring/unicast, sched_ir.validate)
+        assert transport in (None, "switched"), \
+            (transport, "multicast exists only on the switched tier")
+        return super().multicast_tree(root, members)
+
+
 class Torus2D(_LinkRegistry):
     """2-D torus with bidirectional neighbor links (TPU ICI analogue).
     Node ids are 0..nx*ny-1 with id = x * ny + y. Routes are dimension-ordered
@@ -360,7 +500,9 @@ class Torus2D(_LinkRegistry):
                 for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
                     a, b = self.node(x, y), self.node(x + dx, y + dy)
                     if a != b:
-                        self._add(a, b, self.b_link)
+                        # ICI neighbor links are island-tier cables: no
+                        # switch multicast, neighbor unicast only
+                        self._add(a, b, self.b_link, tier="island")
 
     def node(self, x: int, y: int) -> str:
         return f"t{x % self.nx}.{y % self.ny}"

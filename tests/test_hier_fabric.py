@@ -1,0 +1,313 @@
+"""Tiered island fabrics (core/topology.IslandFatTree), the mixed-transport
+hierarchical allgather builder (core/sched_ir.build_hierarchical_allgather)
+and the searcher's tiered moves (core/sched_search.hier_candidates): link
+tiers route and count per tier, per-op transports are validated and
+respected by the lowerings, the tiered analytic lower bound stays
+admissible, and the searched mixed-transport schedule strictly beats both
+flat builders on an island fabric — the PR's acceptance property at bench
+scale, held here at test scale."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import packet as pk
+from repro.core import protocol, sched_ir, sched_search
+from repro.core.engine import FabricParams, WorkerParams
+from repro.core.sched_ir import build_hierarchical_allgather, execute
+from repro.core.sched_search import EvalCache, EvalContext, search
+from repro.core.topology import LINK_TIERS, FatTree, IslandFatTree
+
+FAB = FabricParams(jitter=0.0)
+WK = WorkerParams(n_recv_workers=8)
+P, G, N = 16, 4, 1 << 20
+
+
+def _island_fabric(**kw):
+    return IslandFatTree(4, P, island_size=G, **kw)
+
+
+# ------------------------------------------------------------- topology
+
+
+def test_tiers_and_island_structure():
+    topo = _island_fabric()
+    assert topo.n_islands == P // G
+    assert topo.island_of(0) == 0 and topo.island_of(G) == 1
+    assert topo.island_members(1) == list(range(G, 2 * G))
+    # NVLink-class default: 8x the NIC rate per direction
+    assert topo.b_island == 8 * topo.b_host
+    assert topo.tier_of("h0", "h1") == "island"
+    assert topo.tier_of("h0", "e0.0") == "switched"
+    for t in topo.tier_capacities():
+        assert t in ("island", "host", "up")
+    assert set(LINK_TIERS) == {"intra_host", "island", "switched"}
+    # searcher cache identity includes the island shape
+    assert topo.signature() != FatTree(4, P).signature()
+    assert "island_size" in str(topo.signature()) or G in topo.signature()
+
+
+def test_route_respects_transport():
+    topo = _island_fabric()
+    # island-local pairs default onto the island ring (one ICI hop)
+    hops = topo.route(0, 1)
+    assert [l.name for l in hops] == ["h0->h1"]
+    # ring shortest path goes backwards for the last member
+    assert [l.name for l in topo.route(0, G - 1)] == [f"h0->h{G - 1}"]
+    # transport="switched" forces the same pair up the fat-tree
+    up = topo.route(0, 1, transport="switched")
+    assert up[0].name == "h0->e0.0" and len(up) > 1
+    # cross-island pairs route the fat-tree whatever the default says
+    assert topo.route(0, G)[0].name == "h0->e0.0"
+    with pytest.raises(AssertionError):
+        topo.route(0, G, transport="island")   # not island-local
+    with pytest.raises(AssertionError):
+        topo.multicast_tree(0, list(range(G)), transport="island")
+
+
+def test_tier_split_buckets_fabric_bytes():
+    topo = _island_fabric()
+    topo.unicast(0, 1, 100.0)        # island hop
+    topo.unicast(0, G, 40.0)         # switched (cross-island)
+    link_bytes = {f"{a}->{b}": v
+                  for (a, b), v in topo.counters.bytes_by_link.items()}
+    split = topo.tier_split(link_bytes)
+    assert split["island"] == pytest.approx(100.0)
+    # h0->edge->...->h4: every hop is switched tier
+    assert split["switched"] == pytest.approx(40.0 * len(topo.route(0, G)))
+
+
+def test_island0_bottleneck_cut():
+    topo = _island_fabric()
+    cuts = {c.name: c for c in topo.bottleneck_cuts()}
+    assert "island0" in cuts
+    cut = cuts["island0"]
+    assert set(cut.hosts) == set(range(G))
+    # the island funnels through its members' NIC attaches only — the
+    # island-tier ring cables never cross the cut
+    assert cut.cap_in == pytest.approx(G * topo.b_host)
+
+
+# ------------------------------------------------------- schedule builder
+
+
+def test_hier_builder_validates_and_pins_transports():
+    sched = build_hierarchical_allgather(P, N, G, m=2)
+    sched_ir.validate(sched)
+    g = sched.meta["island_size"]
+    mcasts = [op for op in sched.ops if isinstance(op, sched_ir.Multicast)]
+    unis = [op for op in sched.ops if isinstance(op, sched_ir.Unicast)]
+    assert mcasts and all(op.transport == "switched" for op in mcasts)
+    # phase C: island-tier unicasts that never leave their island
+    ring = [op for op in unis if op.transport == "island"]
+    assert ring and all(op.src // g == op.dst // g for op in ring)
+    assert sched.meta["bundle_bytes"] == (P // G) * N
+    # transport flips change the schedule identity the EvalCache keys on
+    alt = build_hierarchical_allgather(P, N, G, m=2,
+                                       redistribute_transport="switched")
+    sched_ir.validate(alt)
+    assert sched_ir.canonical_key(alt) != sched_ir.canonical_key(sched)
+
+
+def test_hier_builder_rejects_degenerate_groupings():
+    with pytest.raises(AssertionError):
+        build_hierarchical_allgather(P, N, 3)       # islands must tile P
+    with pytest.raises(AssertionError):
+        build_hierarchical_allgather(P, N, P)       # needs >= 2 islands
+    with pytest.raises(AssertionError):
+        build_hierarchical_allgather(P, N, G, stripe_mode="bogus")
+
+
+@pytest.mark.parametrize("stripe_mode", ["mcast", "ring"])
+def test_hier_fidelity_ordering_abstract(stripe_mode):
+    rng = np.random.default_rng(0)
+    sched = build_hierarchical_allgather(P, N, G, stripe_mode=stripe_mode)
+    a = execute(sched, FAB, WK, fidelity="analytic")
+    f = execute(sched, FAB, WK, rng, fidelity="fluid")
+    p = execute(sched, FAB, WK, rng, fidelity="packet")
+    assert math.isfinite(a) and a > 0
+    assert a <= f.time + 1e-12 <= p.time + 1e-9
+    assert p.completed
+
+
+def test_hier_fluid_beats_flat_builders_on_island_fabric():
+    topo = _island_fabric()
+    rng = np.random.default_rng(0)
+    hosts = list(range(P))
+
+    def fluid(sched):
+        topo.reset()
+        return execute(sched, FAB, WK, rng, fidelity="fluid",
+                       topology=topo, hosts=hosts).time
+
+    hier = fluid(build_hierarchical_allgather(P, N, G))
+    flat = fluid(sched_ir.build_allgather(P, N, P))
+    ring = fluid(sched_ir.build_ring_allgather(P, N))
+    assert hier < flat and hier < ring
+
+
+def test_hier_moves_bytes_onto_island_tier():
+    topo = _island_fabric()
+    hosts = list(range(P))
+    res = execute(build_hierarchical_allgather(P, N, G), FAB, WK,
+                  np.random.default_rng(0), fidelity="fluid",
+                  topology=topo, hosts=hosts)
+    split = topo.tier_split(res.link_bytes)
+    topo.reset()
+    flat = execute(sched_ir.build_allgather(P, N, P), FAB, WK,
+                   np.random.default_rng(0), fidelity="fluid",
+                   topology=topo, hosts=hosts)
+    flat_split = topo.tier_split(flat.link_bytes)
+    # the redistribution phase rides the island tier; the flat multicast
+    # puts every byte on the switched fabric
+    assert split.get("island", 0.0) > 0
+    assert flat_split.get("island", 0.0) == 0
+    assert split["switched"] < flat_split["switched"]
+
+
+def test_hier_packet_island_redistribution_is_lossless():
+    topo = _island_fabric()
+    hosts = list(range(P))
+    sched = build_hierarchical_allgather(P, N, G)
+    res = execute(sched, FAB, WK, np.random.default_rng(0),
+                  fidelity="packet", topology=topo, hosts=hosts, loss=0.02)
+    assert res.completed
+    # intra-island ICI is reliable (DESIGN §2/§11): phase C ran lossless,
+    # so its time matches the lossless run of the same ring bit-for-bit
+    topo.reset()
+    clean = execute(sched, FAB, WK, np.random.default_rng(0),
+                    fidelity="packet", topology=topo, hosts=hosts)
+    assert res.ring.time == pytest.approx(clean.ring.time)
+    # while the switched stripe did see the loss process
+    assert res.stripe.time >= clean.stripe.time
+
+
+def test_hier_switched_redistribution_keeps_loss_model():
+    topo = _island_fabric()
+    hosts = list(range(P))
+    sched = build_hierarchical_allgather(P, N, G,
+                                         redistribute_transport="switched")
+    res = execute(sched, FAB, WK, np.random.default_rng(0),
+                  fidelity="packet", topology=topo, hosts=hosts, loss=0.05)
+    assert res.completed and math.isfinite(res.time)
+    topo.reset()
+    clean = execute(sched, FAB, WK, np.random.default_rng(0),
+                    fidelity="packet", topology=topo, hosts=hosts)
+    assert res.ring.time > clean.ring.time   # recovery rounds cost time
+
+
+# ----------------------------------------------------- bounds and search
+
+
+def test_tiered_analytic_bound_monotone_in_island_rate():
+    slow = protocol.analytic_hier_allgather_time(
+        P, N, FAB.b_link, FAB.latency, island_size=G, m=1,
+        b_island=FAB.b_link)
+    fast = protocol.analytic_hier_allgather_time(
+        P, N, FAB.b_link, FAB.latency, island_size=G, m=1,
+        b_island=8 * FAB.b_link)
+    assert fast < slow
+
+
+def test_hier_candidates_only_on_island_fabrics():
+    assert sched_search.hier_candidates(P, N, FatTree(4, P)) == []
+    assert sched_search.hier_candidates(P, N, None) == []
+    cands = sched_search.hier_candidates(P, N, _island_fabric())
+    names = [c.name for c in cands]
+    assert any(c.origin == "builder" and f"g={G}" in c.name for c in cands)
+    # the three searcher moves: island regrouping, stripe transport flip,
+    # redistribution transport flip
+    assert any("g=2" in n for n in names)
+    assert any("ring-stripe" in n for n in names)
+    assert any("switched-redist" in n for n in names)
+    for c in cands:
+        sched_ir.validate(c.sched)
+
+
+def test_hier_lower_bound_admissible():
+    topo = _island_fabric()
+    ctx = EvalContext(FAB, WK, topo, tuple(range(P)), "fluid", 0)
+    cache = EvalCache()
+    for cand in sched_search.hier_candidates(P, N, topo):
+        bound, _ = sched_search.lower_bound(cand.sched, ctx)
+        res = cache.evaluate(cand.sched, ctx)
+        assert bound <= res.time + 1e-12, cand.name
+
+
+def test_search_picks_mixed_transport_winner():
+    topo = _island_fabric()
+    r = search("allgather", P, N, topology=topo, hosts=list(range(P)),
+               validate_packet=True)
+    assert r.winner.sched.kind == "hier_allgather"
+    assert r.packet_validated
+    assert r.certificate.ratio >= 1.0 - 1e-9
+    flat = {row.name: row for row in r.table}
+    # the acceptance property at test scale: the searched schedule strictly
+    # beats the flat multicast builder AND the pure unicast ring
+    flat_times = [row.time for row in r.table
+                  if row.origin == "builder" and "hier" not in row.name
+                  and row.time is not None]
+    assert flat_times and r.winner_time < min(flat_times)
+    assert any("hier" in name for name in flat)
+
+
+# ------------------------------------------- packet-engine selection (auto)
+
+
+def test_engine_auto_sees_stripe_not_global_rows(monkeypatch):
+    """engine="auto" dense big-row detection runs on the switched stripe
+    sub-schedule (p = n_islands), never on the full-P rank count and never
+    on the island-local phase-C rows (RC ring transport bypasses the
+    multicast engines entirely) — island rows must not trip the dense
+    heuristic."""
+    monkeypatch.delenv("REPRO_PACKET_ENGINE", raising=False)
+    calls = []
+    real = pk.resolve_engine
+
+    def spy(engine, kind, p, row_bytes):
+        calls.append((engine, kind, p, row_bytes))
+        return real(engine, kind, p, row_bytes)
+
+    monkeypatch.setattr(pk, "resolve_engine", spy)
+    topo = _island_fabric()
+    sched = build_hierarchical_allgather(P, N, G, m=P // G)
+    execute(sched, FAB, WK, np.random.default_rng(0), fidelity="packet",
+            topology=topo, hosts=list(range(P)), engine="auto")
+    assert len(calls) == 1                  # the stripe leg only
+    engine, kind, p_seen, row_bytes = calls[0]
+    assert (engine, kind) == ("auto", "allgather")
+    assert p_seen == P // G                 # island count, not P
+    # the stripe's merged rows stay below the dense threshold here, so the
+    # vectorized engine is kept — big island-local bundles never enter
+    assert real(*calls[0]) == "vectorized"
+
+
+def test_repro_packet_engine_env_override(monkeypatch):
+    monkeypatch.delenv("REPRO_PACKET_ENGINE", raising=False)
+    assert pk.resolve_engine("auto", "allgather", 8, 32 << 20) == "reference"
+    monkeypatch.setenv("REPRO_PACKET_ENGINE", "vectorized")
+    assert pk.resolve_engine("auto", "allgather", 8, 32 << 20) == "vectorized"
+    monkeypatch.setenv("REPRO_PACKET_ENGINE", "reference")
+    assert pk.resolve_engine("auto", "broadcast", 8, 1) == "reference"
+    # explicit engine choices ignore the override — the bit-exact pin
+    # tests must keep comparing both engines under any environment
+    assert pk.resolve_engine("vectorized", "allgather", 8, 32 << 20) \
+        == "vectorized"
+    monkeypatch.setenv("REPRO_PACKET_ENGINE", "bogus")
+    with pytest.raises(AssertionError):
+        pk.resolve_engine("auto", "broadcast", 8, 1)
+
+
+def test_engine_auto_matrix_consistent_results(monkeypatch):
+    """The env override only moves which executor runs — results are pinned
+    bit-exact, so a hier packet run must produce identical times."""
+    topo = _island_fabric()
+    sched = build_hierarchical_allgather(P, N, G)
+    kw = dict(fidelity="packet", topology=topo, hosts=list(range(P)),
+              loss=0.01)
+    base = execute(sched, FAB, WK, np.random.default_rng(3), **kw)
+    monkeypatch.setenv("REPRO_PACKET_ENGINE", "reference")
+    topo.reset()
+    ref = execute(sched, FAB, WK, np.random.default_rng(3), **kw)
+    assert ref.time == pytest.approx(base.time, rel=0, abs=0)
+    assert ref.stripe.time == base.stripe.time
