@@ -739,6 +739,88 @@ def fsdp_contention_sweep():
     return rows
 
 
+def training_run_sweep():
+    """GPT-scale compute+comm co-sim (core/train_sim.py): the registry
+    span smollm-135m -> granite-34b end-to-end at three host scales, the
+    split-vs-naive MFU win on an oversubscribed fabric, the loss
+    degradation curve and the fidelity ordering. All gated rows are
+    deterministic model ratios (machine-independent)."""
+    from repro.configs.registry import training_sweep_archs
+    from repro.core.train_sim import simulate_training_run
+
+    fab = FabricParams(jitter=0.0)
+    rows = []
+    t0 = time.perf_counter()
+
+    # ---- host-count scaling: every sweep model x {16, 64, 256} hosts
+    for arch in training_sweep_archs():
+        steps = {}
+        for n_hosts in (16, 64, 256):
+            r = simulate_training_run(arch, n_hosts=n_hosts, policy="split",
+                                      fabric=fab)
+            assert 0.0 < r.mfu <= 1.0, (arch, n_hosts, r.mfu)
+            steps[n_hosts] = r.step_time
+        assert steps[16] > steps[64] > steps[256], (arch, steps)
+        rows.append((f"train.{arch}.scale16to256_x",
+                     round(steps[16] / steps[256], 4),
+                     f"step 16h={steps[16]:.3f}s 256h={steps[256]:.4f}s"))
+
+    # ---- the split-policy MFU win at oversubscription 4 (Insight 2 on
+    # the fabric: AG_mc down + RS_inc up vs the self-colliding ring)
+    pols = {}
+    for pol in ("naive", "split"):
+        pols[pol] = simulate_training_run(
+            "smollm-135m", n_hosts=16, policy=pol, fabric=fab,
+            topology=FatTree(k=8, n_hosts=16, oversubscription=4.0))
+    assert pols["split"].mfu > pols["naive"].mfu, pols
+    assert pols["split"].step_time < pols["naive"].step_time
+    rows.append(("train.smollm-135m.P16.split_vs_naive_mfu_x",
+                 round(pols["split"].mfu / pols["naive"].mfu, 4),
+                 f"split mfu={pols['split'].mfu:.3f} "
+                 f"naive={pols['naive'].mfu:.3f} (oversub 4 fat-tree)"))
+    for pol, r in pols.items():
+        rows.append((f"train.smollm-135m.P16.{pol}.bubble_frac",
+                     round(r.bubble_fraction, 4),
+                     f"step={r.step_time*1e3:.1f}ms mfu={r.mfu:.3f}"))
+    assert pols["split"].bubble_fraction < pols["naive"].bubble_fraction
+
+    # ---- loss degradation + fidelity ordering (abstract fabric)
+    fl = simulate_training_run("smollm-135m", n_hosts=16, policy="split",
+                               fabric=fab)
+    an = simulate_training_run("smollm-135m", n_hosts=16, policy="split",
+                               fabric=fab, fidelity="analytic")
+    pk = {}
+    for q in (0.001, 0.01):
+        pk[q] = simulate_training_run(
+            "smollm-135m", n_hosts=16, policy="split", fabric=fab,
+            fidelity="packet", loss=q, rng=np.random.default_rng(0))
+    assert an.step_time <= fl.step_time + 1e-12
+    assert fl.step_time <= pk[0.001].step_time <= pk[0.01].step_time + 1e-9
+    assert pk[0.01].mfu <= pk[0.001].mfu <= fl.mfu
+    rows.append(("train.smollm-135m.P16.loss1pct_step_x",
+                 round(pk[0.01].step_time / fl.step_time, 4),
+                 f"packet(q=1%) vs fluid; mfu {fl.mfu:.3f}->"
+                 f"{pk[0.01].mfu:.3f}"))
+    rows.append(("train.smollm-135m.P16.analytic_vs_fluid_x",
+                 round(an.step_time / fl.step_time, 4),
+                 "closed-form lower bound / fluid engine (<= 1)"))
+
+    # ---- pipeline composition at scale (1F1B bubble is exact model math)
+    pp_r = simulate_training_run("granite-34b", n_hosts=64, pp=4,
+                                 grad_accum=8, policy="split", fabric=fab)
+    assert pp_r.pipeline_bubble_fraction == (4 - 1) / (8 + 4 - 1)
+    rows.append(("train.granite-34b.P64.pp4ga8.bubble_frac",
+                 round(pp_r.bubble_fraction, 4),
+                 f"dp={pp_r.dp} step={pp_r.step_time:.2f}s "
+                 f"mfu={pp_r.mfu:.3f} "
+                 f"pipe_bubble={pp_r.pipeline_bubble_fraction:.3f}"))
+
+    rows.append(("train.sweep_wall_s",
+                 round(time.perf_counter() - t0, 3),
+                 "3 models x 3 scales + routed policy pair + loss curve"))
+    return rows
+
+
 def measured_protocol_micro():
     """Measured on THIS machine: protocol hot-path microbenchmarks (us/call)."""
     rows = []
@@ -817,6 +899,7 @@ ALL = [
     fabric_sweep, protocol_loss_sweep, packet_scale_sweep,
     multi_job_contention,
     schedule_ir_sweep, search_sweep, hier_fabric_sweep,
+    training_run_sweep,
     measured_protocol_micro, measured_jax_collectives,
 ]
 
@@ -830,7 +913,10 @@ ALL = [
 # the packet-engine scale sweep (vectorized-vs-reference wall-clock,
 # including the 10k-host / 1 GiB speedup floor), and the tiered island
 # fabric sweep (searched mixed-transport allgather vs flat builders with
-# per-tier fabric-byte relief at P=64/256 — the ISSUE-8 acceptance gates)
+# per-tier fabric-byte relief at P=64/256 — the ISSUE-8 acceptance gates),
+# and the training-run co-sim sweep (GPT-small -> 34B step time / MFU /
+# bubble fraction at 16-256 hosts, split-vs-naive MFU win, loss curve)
 SMOKE = [fsdp_contention_sweep, fabric_sweep_smoke, protocol_loss_sweep_smoke,
          dpa_scaling_smoke, multi_job_contention, schedule_ir_sweep,
-         search_sweep, packet_scale_sweep_smoke, hier_fabric_sweep]
+         search_sweep, packet_scale_sweep_smoke, hier_fabric_sweep,
+         training_run_sweep]

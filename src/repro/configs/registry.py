@@ -50,6 +50,18 @@ def get_shape(name: str) -> ShapeConfig:
     return SHAPES[name]
 
 
+#: GPT-small -> 34B dense span swept by core/train_sim.py's benchmark
+#: (benchmarks/paper_figs.training_run_sweep) and the co-sim tests
+TRAINING_SWEEP_ARCHS: tuple[str, ...] = ("smollm-135m", "yi-9b",
+                                         "granite-34b")
+
+
+def training_sweep_archs() -> tuple[str, ...]:
+    _ensure_loaded()
+    assert all(a in _REGISTRY for a in TRAINING_SWEEP_ARCHS)
+    return TRAINING_SWEEP_ARCHS
+
+
 def cell_supported(model: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     """Whether the (arch, shape) cell is runnable; (ok, reason-if-skipped)."""
     if shape.name == "long_500k" and not model.sub_quadratic:

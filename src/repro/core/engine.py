@@ -569,6 +569,23 @@ class FsdpStepResult:
     datapath_tput: float | None = None  # host engine bytes/s (None: DPA/line)
 
 
+@dataclass(frozen=True)
+class LayerProfile:
+    """One layer of a heterogeneous FSDP step (simulate_fsdp_step
+    ``layers=``): compute seconds at full-node capability plus the layer's
+    parameter bytes (its AG/RS wire volume). core/train_sim.py derives
+    these from registry model shapes via the launch/analytic_costs.py
+    roofline; any caller can hand-build them."""
+    fwd_s: float          # forward compute seconds (full node, no stealing)
+    bwd_s: float          # backward compute seconds
+    layer_bytes: float    # parameter bytes gathered/reduce-scattered
+
+    def __post_init__(self):
+        assert self.fwd_s >= 0.0 and self.bwd_s >= 0.0, (self.fwd_s,
+                                                         self.bwd_s)
+        assert self.layer_bytes > 0.0, self.layer_bytes
+
+
 def _layer_bytes_from_model(model: "ModelConfig", dtype_bytes: int) -> tuple[int, float]:
     """(n_layers, bytes of parameters per layer) from a registered config.
     Imported lazily: configs pull in the jax model builders."""
@@ -588,15 +605,20 @@ def _make_ag_loss_overlay(fidelity: str, loss, rng, policy: str, topology,
     NACK + multicast-retransmission rounds of packet.recovery_overlay (max
     over trees — the layer's AG is ready when ALL trees recovered). Unicast
     "naive": deterministic RC goodput inflation 1/(1-q_path). Returns a
-    zero-cost callable for the fluid fidelity."""
+    zero-cost callable for the fluid fidelity.
+
+    The returned callable takes ``(gather_b=gather_bytes,
+    shard_b=shard_bytes)`` so heterogeneous layers (``layers=``) pay the
+    penalty at THEIR byte volume; the no-argument call keeps the uniform
+    path bit-exact (defaults are the uniform quantities)."""
     if fidelity != "packet":
-        return lambda: 0.0
+        return lambda *a: 0.0
     from repro.core import packet as packet_mod  # deferred: imports engine
 
     rng = rng if rng is not None else np.random.default_rng(0)
     template = packet_mod.resolve_loss(loss, fabric)
     if template is None:
-        return lambda: 0.0
+        return lambda *a: 0.0
     if workers is None:
         # NACK-service default: a fully-threaded DPA core (workers_from_dpa
         # lets callers derive this from a DpaConfig instead)
@@ -610,21 +632,25 @@ def _make_ag_loss_overlay(fidelity: str, loss, rng, policy: str, topology,
             path_len = max(sum(hops) / len(hops), 1.0)
         else:
             path_len = 1.0
-        extra = (2.0 * gather_bytes / fabric.b_link
-                 * packet_mod.rc_goodput_inflation(template.mean_rate,
-                                                   path_len))
-        return lambda: extra
+        inflation = packet_mod.rc_goodput_inflation(template.mean_rate,
+                                                    path_len)
+
+        def naive_overlay(gather_b: float = gather_bytes,
+                          shard_b: float = shard_bytes) -> float:
+            return 2.0 * gather_b / fabric.b_link * inflation
+
+        return naive_overlay
 
     from repro.core.simulator import _chunking  # deferred, like packet_mod
 
-    n_chunks, chunk = _chunking(int(shard_bytes), fabric.mtu)
     tree_infos = []
     if topology is not None:
         all_models: dict[int, object] = {}
         for h in hosts:
             tree = topology.multicast_tree(h, hosts)
             paths = packet_mod.tree_paths(
-                tree, f"h{h}", [f"h{x}" for x in hosts if x != h])
+                tree, topology.host(h),
+                [topology.host(x) for x in hosts if x != h])
             for links in paths.values():
                 for link in links:
                     if id(link) not in all_models:
@@ -647,7 +673,9 @@ def _make_ag_loss_overlay(fidelity: str, loss, rng, policy: str, topology,
                       if x != h}
             tree_infos.append((paths, models, fabric.b_link))
 
-    def overlay() -> float:
+    def overlay(gather_b: float = gather_bytes,
+                shard_b: float = shard_bytes) -> float:
+        n_chunks, chunk = _chunking(int(shard_b), fabric.mtu)
         return max(packet_mod.recovery_overlay(
             paths, models, n_chunks, chunk, rate, fabric, workers, rng)
             for paths, models, rate in tree_infos)
@@ -657,6 +685,7 @@ def _make_ag_loss_overlay(fidelity: str, loss, rng, policy: str, topology,
 
 def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
                        n_layers: int = 32, layer_bytes: float = 256e6,
+                       layers: "list[LayerProfile] | None" = None,
                        p: int = 16,
                        fabric: FabricParams | None = None,
                        policy: str = "naive",
@@ -734,6 +763,17 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
               every layer's compute by host_total_cores /
               (host_total_cores - host_cores) (2x 54-core Xeons per
               SuperPOD node — §VII-d).
+
+    ``layers=`` replaces the uniform (n_layers, layer_bytes, tokens/flops)
+    compute model with an explicit heterogeneous per-layer profile (a
+    LayerProfile per layer: fwd/bwd seconds + parameter bytes). The op
+    template is built at the LARGEST layer's bytes and each layer's flows
+    are scaled down to its own volume; compute seconds are taken verbatim
+    (compute_scale still applies for the host progress engine). With all
+    layers identical the timeline arithmetic is bit-exact the uniform
+    path's — tests pin a uniform ``layers=`` call against the legacy
+    parameterization. core/train_sim.py derives these profiles from
+    registry model shapes.
     """
     assert policy in FSDP_POLICIES, policy
     assert fidelity in ("fluid", "packet"), fidelity
@@ -744,7 +784,14 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
         "loss models require fidelity='packet'"
     fabric = fabric or FabricParams()
     if model is not None:
+        assert layers is None, "pass model= or layers=, not both"
         n_layers, layer_bytes = _layer_bytes_from_model(model, dtype_bytes)
+    if layers is not None:
+        layers = list(layers)
+        n_layers = len(layers)
+        # the op template carries the largest layer; smaller layers scale
+        # their flows down through the submitters' scale argument
+        layer_bytes = max(lp.layer_bytes for lp in layers)
     assert p >= 2 and n_layers >= 1
 
     if progress_engine == "host":
@@ -761,9 +808,21 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
 
     gather_bytes = (p - 1) / p * layer_bytes     # bytes a node must receive
     shard_bytes = layer_bytes / p
-    fwd_t = (2.0 * (layer_bytes / dtype_bytes) * tokens_per_device / hw_flops
-             * compute_scale)
-    bwd_t = 2.0 * fwd_t
+    if layers is None:
+        fwd_t = (2.0 * (layer_bytes / dtype_bytes) * tokens_per_device
+                 / hw_flops * compute_scale)
+        bwd_t = 2.0 * fwd_t
+        fwd_ts = [fwd_t] * n_layers
+        bwd_ts = [bwd_t] * n_layers
+        scales = [1.0] * n_layers                # x * 1.0 is bit-exact
+        gathers = [gather_bytes] * n_layers
+        shards = [shard_bytes] * n_layers
+    else:
+        fwd_ts = [lp.fwd_s * compute_scale for lp in layers]
+        bwd_ts = [lp.bwd_s * compute_scale for lp in layers]
+        scales = [lp.layer_bytes / layer_bytes for lp in layers]
+        gathers = [(p - 1) / p * lp.layer_bytes for lp in layers]
+        shards = [lp.layer_bytes / p for lp in layers]
 
     # the step's per-layer AG/RS collectives as a schedule graph; the IR
     # lowering (sched_ir.fsdp_submitters) builds the per-policy flows —
@@ -796,41 +855,42 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
     # host-engine stretch (stolen cores) is protocol overhead and must show
     # up as bubble, exactly like exposed communication — this is where the
     # freed-host-cycles benefit of the DPA offload becomes measurable
-    fwd_useful = fwd_t / compute_scale
-    bwd_useful = bwd_t / compute_scale
+    fwd_useful = [ft / compute_scale for ft in fwd_ts]
+    bwd_useful = [bt / compute_scale for bt in bwd_ts]
 
-    def ag_ready(t_submit: float, flows) -> float:
+    def ag_ready(t_submit: float, flows, i: int) -> float:
         """A layer's parameters are usable when the wire delivered them AND
         (host progress engine only) the gather bytes drained through the
         software receive datapath at its measured throughput."""
         t_wire = eng.wait(*flows)
         if datapath_cap is not None:
-            t_wire = max(t_wire, t_submit + gather_bytes / datapath_cap)
-        return t_wire + ag_sync + ag_overlay()
+            t_wire = max(t_wire, t_submit + gathers[i] / datapath_cap)
+        return t_wire + ag_sync + ag_overlay(gathers[i], shards[i])
 
     # ---- forward: AG(i+1) prefetched at compute-start of layer i
     ag = [None] * n_layers
-    ag[0] = (0.0, submit_ag(0.0))
+    ag[0] = (0.0, submit_ag(0.0, scales[0]))
     t = 0.0
     for i in range(n_layers):
-        start = max(t, ag_ready(*ag[i]))
+        start = max(t, ag_ready(*ag[i], i))
         if i + 1 < n_layers:
-            ag[i + 1] = (start, submit_ag(start))
-        t = start + fwd_t
-        compute_total += fwd_useful
+            ag[i + 1] = (start, submit_ag(start, scales[i + 1]))
+        t = start + fwd_ts[i]
+        compute_total += fwd_useful[i]
     t_fwd_end = t
 
     # ---- backward: re-gather params in reverse order, RS grads async
     ag_b = [None] * n_layers
-    ag_b[n_layers - 1] = (t_fwd_end, submit_ag(t_fwd_end))
+    ag_b[n_layers - 1] = (t_fwd_end, submit_ag(t_fwd_end,
+                                               scales[n_layers - 1]))
     rs_flows: list[Flow] = []
     for i in range(n_layers - 1, -1, -1):
-        start = max(t, ag_ready(*ag_b[i]))
+        start = max(t, ag_ready(*ag_b[i], i))
         if i - 1 >= 0:
-            ag_b[i - 1] = (start, submit_ag(start))
-        t = start + bwd_t
-        compute_total += bwd_useful
-        rs_flows += submit_rs(t)
+            ag_b[i - 1] = (start, submit_ag(start, scales[i - 1]))
+        t = start + bwd_ts[i]
+        compute_total += bwd_useful[i]
+        rs_flows += submit_rs(t, scales[i])
     t_bwd_end = t
 
     t_rs_done = eng.wait(*rs_flows) if rs_flows else t_bwd_end
@@ -848,8 +908,11 @@ def simulate_fsdp_step(model: "ModelConfig | None" = None, *,
             "rs_drain": max(t_rs_done - t_bwd_end, 0.0),
         },
         link_utilization=eng.utilization(step_time),
-        ag_bytes=gather_bytes * 2 * n_layers,   # forward prefetch + bwd re-gather
-        rs_bytes=gather_bytes * n_layers,       # one RS per layer, backward only
+        # forward prefetch + backward re-gather / one RS per layer
+        ag_bytes=(gather_bytes * 2 * n_layers if layers is None
+                  else 2.0 * sum(gathers)),
+        rs_bytes=(gather_bytes * n_layers if layers is None
+                  else float(sum(gathers))),
         n_layers=n_layers,
         p=p,
         progress_engine=progress_engine,

@@ -524,9 +524,9 @@ class _BroadcastRun:
             self.hosts = list(hosts) if hosts is not None else list(range(p))
             assert len(self.hosts) == p, (len(self.hosts), p)
             self.tree = topology.multicast_tree(self.hosts[root], self.hosts)
-            names = {leaf: f"h{self.hosts[leaf]}" for leaf in range(p)
+            names = {leaf: topology.host(self.hosts[leaf]) for leaf in range(p)
                      if leaf != root}
-            paths = tree_paths(self.tree, f"h{self.hosts[root]}",
+            paths = tree_paths(self.tree, topology.host(self.hosts[root]),
                                list(names.values()))
             self.paths = {leaf: paths[n] for leaf, n in names.items()}
             self.models = _link_models(

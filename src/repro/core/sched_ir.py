@@ -701,13 +701,20 @@ def _fluid_broadcast(sched: Schedule, fabric: FabricParams,
 
 def _fluid_allgather(sched: Schedule, fabric: FabricParams,
                      workers: WorkerParams, rng: np.random.Generator, *,
-                     topology=None, hosts=None) -> AllgatherResult:
+                     topology=None, hosts=None,
+                     co_hosts=()) -> AllgatherResult:
     """Fluid lowering of an Appendix-A allgather schedule: each activation
     generation's Multicast roots inject concurrently; the leaf receive path
     (link + worker pool) is the shared bottleneck; generations are chained
     by the activation signal. (The body that was
     simulator.simulate_allgather's fluid path, with the round structure now
-    read off the schedule DAG.)"""
+    read off the schedule DAG.)
+
+    ``co_hosts`` (topology mode only) lists additional host sets running the
+    SAME schedule concurrently — the hierarchical allgather's sibling
+    stripes. Their structurally identical tree flows are co-submitted each
+    round, so the representative stripe's rates reflect genuine uplink
+    contention and the engine's per-link bytes count every stripe."""
     p, n_bytes = sched.p, sched.n_bytes
     generations = sched.rounds()
     n_chunks, chunk = _chunking(n_bytes, fabric.mtu)
@@ -742,6 +749,12 @@ def _fluid_allgather(sched: Schedule, fabric: FabricParams,
                                 n_chunks * chunk, t_start=t, tag=f"chain{root}")
                 for root in roots
             ]
+            for co in co_hosts:
+                for i in round_ops:
+                    co_root = co[sched.ops[i].root]
+                    eng.submit_tree(topology.multicast_tree(co_root, list(co)),
+                                    n_chunks * chunk, t_start=t,
+                                    tag=f"costripe{co_root}")
         else:
             # m chain roots inject concurrently; the leaf's ejection link is
             # the shared resource — m equal flows, each chain rate b_link/m
@@ -812,13 +825,16 @@ class RingCollectiveResult:
 
 def _fluid_ring(sched: Schedule, fabric: FabricParams,
                 workers: WorkerParams, rng: np.random.Generator, *,
-                topology=None, hosts=None) -> RingCollectiveResult:
+                topology=None, hosts=None,
+                co_hosts=()) -> RingCollectiveResult:
     """Fluid lowering of a ring schedule: each generation every rank
     forwards its current shard to the right neighbour. Abstractly the NIC is
     full duplex — one send + one receive flow on the representative rank per
     generation; with a topology every op is a routed unicast and the
     generations genuinely contend on shared fabric links. Reduction combines
-    at line rate (in-switch / SIMD), so Reduce edges cost their wire bytes."""
+    at line rate (in-switch / SIMD), so Reduce edges cost their wire bytes.
+    ``co_hosts`` co-submits sibling stripes' identical flows (see
+    _fluid_allgather) so shared fabric links are genuinely contended."""
     p = sched.p
     generations = sched.rounds()
     eng = Engine()
@@ -858,6 +874,14 @@ def _fluid_ring(sched: Schedule, fabric: FabricParams,
             flows = [eng.submit_route(route_of(op), op.nbytes, t_start=t,
                                       tag=f"ring{i}")
                      for i, op in enumerate(ops)]
+            for s, co in enumerate(co_hosts):
+                for i, op in enumerate(ops):
+                    src = op.src if isinstance(op, Unicast) else op.srcs[0]
+                    r = (topology.route(co[src], co[op.dst],
+                                        transport=op.transport)
+                         if tiered else topology.route(co[src], co[op.dst]))
+                    eng.submit_route(r, op.nbytes, t_start=t,
+                                     tag=f"costripe{s}.{i}")
         else:
             nbytes = ops[0].nbytes
             flows = [eng.submit("ring.send", nbytes, t_start=t, tag="ring"),
@@ -1006,10 +1030,12 @@ def _exec_pipelined_allreduce(sched: Schedule, fabric, workers, rng, *,
 class HierAllgatherResult:
     """Hierarchical allgather = striped switched allgather ∘ island-ring
     redistribution (build_hierarchical_allgather). ``stripe`` is the
-    executed phase-B result of stripe 0 — stripes are member-disjoint and
-    structurally identical, so one is the timing representative; the other
-    stripes' fabric bytes are counted statically into ``link_bytes``
-    (inter-stripe uplink contention is a recorded deviation, DESIGN §11)."""
+    phase-B result of stripe 0 — stripes are member-disjoint and
+    structurally identical, so one is the timing representative; at fluid
+    fidelity ALL stripes' flows run on one engine (stripe 0's rates see the
+    siblings' uplink contention, the engine counts every stripe's bytes),
+    at packet fidelity stripe 0's time carries the fluid-validated
+    inter-stripe contention factor (DESIGN §11)."""
     time: float
     stripe: object                   # AllgatherResult | RingCollectiveResult
     ring: RingCollectiveResult       # phase C (island redistribution)
@@ -1020,11 +1046,33 @@ class HierAllgatherResult:
     completed: bool = True           # packet: phase B converged (C is RC)
 
 
+def _stripe_contention_factor(stripe_sched: Schedule, fabric, workers,
+                              topology, stripe_hosts, co_stripes) -> float:
+    """Inter-stripe uplink contention as a fluid-measured slowdown: the
+    stripe template executed alone vs with every sibling stripe's flows on
+    the same engine. Deterministic (fresh seed, jitter draws identical
+    across the pair) and >= 1 by max-min monotonicity; the packet stripe
+    leg scales by this factor (DESIGN §11)."""
+    if not co_stripes:
+        return 1.0
+    exec_stripe = (_fluid_allgather if stripe_sched.kind == "allgather"
+                   else _fluid_ring)
+    solo = exec_stripe(stripe_sched, fabric, workers,
+                       np.random.default_rng(0), topology=topology,
+                       hosts=stripe_hosts)
+    full = exec_stripe(stripe_sched, fabric, workers,
+                       np.random.default_rng(0), topology=topology,
+                       hosts=stripe_hosts, co_hosts=co_stripes)
+    return max(full.time / solo.time, 1.0)
+
+
 def _exec_hier_allgather(sched: Schedule, fabric, workers, rng, *, fidelity,
                          topology, hosts, loss, kw) -> HierAllgatherResult:
     """Composite lowering of a hier_allgather schedule: execute the phase-B
-    stripe template on stripe 0's members, count the symmetric stripes'
-    fabric bytes statically, then execute the phase-C island ring over all
+    stripe template on stripe 0's members WITH the sibling stripes' flows
+    co-submitted (fluid: directly on one engine; packet: stripe 0's packet
+    run scaled by the fluid contention factor, siblings' fabric bytes
+    counted statically), then execute the phase-C island ring over all
     ranks (per-op transports route it onto the island tier). Phase C tagged
     wholly "island" runs lossless at packet fidelity — intra-island ICI is
     reliable (DESIGN §2); the switched-redistribution variant keeps the
@@ -1037,25 +1085,44 @@ def _exec_hier_allgather(sched: Schedule, fabric, workers, rng, *, fidelity,
     assert len(host_list) == p, (len(host_list), p)
     stripe_hosts = ([host_list[j * g] for j in range(n_islands)]
                     if topology is not None else None)
-    # packet-only options (engine=, max_rounds, ...) apply to the multicast
-    # stripe leg; a ring-mode stripe is RC transport and takes none
-    stripe_kw = kw if stripe_sched.kind == "allgather" else {}
-    stripe_res = execute(stripe_sched, fabric, workers, rng,
-                         fidelity=fidelity, topology=topology,
-                         hosts=stripe_hosts, loss=loss, **stripe_kw)
-    link_bytes = dict(stripe_res.link_bytes)
-    if topology is not None:
-        topology.reset()
-        for r in range(1, g):
-            members = [host_list[j * g + r] for j in range(n_islands)]
-            for op in stripe_sched.ops:
-                if isinstance(op, Multicast):
-                    topology.multicast(members[op.root], members, op.nbytes)
-                else:
-                    topology.unicast(members[op.src], members[op.dst],
-                                     op.nbytes)
-        for (a, b), v in topology.counters.bytes_by_link.items():
-            link_bytes[f"{a}->{b}"] = link_bytes.get(f"{a}->{b}", 0.0) + v
+    co_stripes = ([[host_list[j * g + r] for j in range(n_islands)]
+                   for r in range(1, g)] if topology is not None else [])
+    if fidelity == "fluid" and topology is not None:
+        exec_stripe = (_fluid_allgather if stripe_sched.kind == "allgather"
+                       else _fluid_ring)
+        stripe_res = exec_stripe(stripe_sched, fabric, workers, rng,
+                                 topology=topology, hosts=stripe_hosts,
+                                 co_hosts=co_stripes)
+        link_bytes = dict(stripe_res.link_bytes)
+    else:
+        # packet-only options (engine=, max_rounds, ...) apply to the
+        # multicast stripe leg; a ring-mode stripe is RC transport and
+        # takes none
+        stripe_kw = kw if stripe_sched.kind == "allgather" else {}
+        stripe_res = execute(stripe_sched, fabric, workers, rng,
+                             fidelity=fidelity, topology=topology,
+                             hosts=stripe_hosts, loss=loss, **stripe_kw)
+        link_bytes = dict(stripe_res.link_bytes)
+        if topology is not None:
+            factor = _stripe_contention_factor(
+                stripe_sched, fabric, workers, topology, stripe_hosts,
+                co_stripes)
+            if factor > 1.0:
+                extra = stripe_res.time * (factor - 1.0)
+                stripe_res.time += extra
+                stripe_res.phases.multicast += extra
+            topology.reset()
+            for r in range(1, g):
+                members = [host_list[j * g + r] for j in range(n_islands)]
+                for op in stripe_sched.ops:
+                    if isinstance(op, Multicast):
+                        topology.multicast(members[op.root], members,
+                                           op.nbytes)
+                    else:
+                        topology.unicast(members[op.src], members[op.dst],
+                                         op.nbytes)
+            for (a, b), v in topology.counters.bytes_by_link.items():
+                link_bytes[f"{a}->{b}"] = link_bytes.get(f"{a}->{b}", 0.0) + v
     ring_loss = loss
     if all(op.transport == "island" for op in ring_sched.ops):
         ring_loss = 0.0               # packet.resolve_loss: lossless
@@ -1105,9 +1172,9 @@ class _PacketChainRun:
         self.root = root
         if topology is not None:
             self.tree = topology.multicast_tree(host_list[root], host_list)
-            names = {leaf: f"h{host_list[leaf]}" for leaf in range(p)
-                     if leaf != root}
-            by_name = pk.tree_paths(self.tree, f"h{host_list[root]}",
+            names = {leaf: topology.host(host_list[leaf])
+                     for leaf in range(p) if leaf != root}
+            by_name = pk.tree_paths(self.tree, topology.host(host_list[root]),
                                     list(names.values()))
             self.paths = {leaf: by_name[n] for leaf, n in names.items()}
             # model_cache: one loss process per physical Link, shared by
@@ -1797,7 +1864,12 @@ def fsdp_submitters(sched: Schedule, eng: Engine, fabric: FabricParams, *,
     flow; abstractly the ops collapse onto the representative rank's NIC
     links (naive: one shared half-duplex medium; mcast/split: full-duplex
     send+recv). The caller owns topology.reset() (multi-job runs share one
-    fabric)."""
+    fabric).
+
+    Each closure takes ``(t, scale=1.0)``: ``scale`` multiplies the wire
+    bytes of that layer's flows relative to the schedule's reference
+    layer_bytes, which is how heterogeneous per-layer parameter volumes
+    (engine.simulate_fsdp_step ``layers=``) reuse one op template."""
     p = sched.p
     meta = sched.meta
     n_chains = meta["n_chains"]
@@ -1832,28 +1904,33 @@ def fsdp_submitters(sched: Schedule, eng: Engine, fabric: FabricParams, *,
             # host up/down link and the ECMP paths between them
             ring = [topology.route(hosts[op.src], hosts[op.dst])
                     for op in ag_template]
-            submit_ag = lambda t: submit_ring(ring, "ag", gather_bytes, t)  # noqa: E731
-            submit_rs = lambda t: submit_ring(ring, "rs", gather_bytes, t)  # noqa: E731
+            submit_ag = lambda t, scale=1.0: submit_ring(  # noqa: E731
+                ring, "ag", gather_bytes * scale, t)
+            submit_rs = lambda t, scale=1.0: submit_ring(  # noqa: E731
+                ring, "rs", gather_bytes * scale, t)
             return submit_ag, submit_rs, (p - 1) * fabric.latency
 
         mcast_trees = [topology.multicast_tree(hosts[op.root], hosts)
                        for op in ag_template]
 
-        def submit_ag(t):
+        def submit_ag(t, scale=1.0):
             # every host multicasts its 1/P shard; switches replicate
-            return [eng.submit_tree(tree, shard_bytes, t_start=t, tag="ag")
+            return [eng.submit_tree(tree, shard_bytes * scale, t_start=t,
+                                    tag="ag")
                     for tree in mcast_trees]
 
         if policy == "mcast":
             ring = [topology.route(hosts[op.srcs[0]], hosts[op.dst])
                     for op in rs_template]
-            submit_rs = lambda t: submit_ring(ring, "rs", gather_bytes, t)  # noqa: E731
+            submit_rs = lambda t, scale=1.0: submit_ring(  # noqa: E731
+                ring, "rs", gather_bytes * scale, t)
         else:  # split: RS_inc — aggregation trees run opposite the AG trees
             agg_trees = [topology.aggregation_tree(hosts[op.dst], hosts)
                          for op in rs_template]
 
-            def submit_rs(t):
-                return [eng.submit_tree(tree, shard_bytes, t_start=t, tag="rs")
+            def submit_rs(t, scale=1.0):
+                return [eng.submit_tree(tree, shard_bytes * scale, t_start=t,
+                                        tag="rs")
                         for tree in agg_trees]
 
         rounds = max(p // max(n_chains, 1), 1)
@@ -1862,12 +1939,14 @@ def fsdp_submitters(sched: Schedule, eng: Engine, fabric: FabricParams, *,
     if policy == "naive":
         eng.add_link("shared", b)
 
-        def submit_ag(t):
+        def submit_ag(t, scale=1.0):
             # ring AG: (p-1)/p*L sent + received, all through the shared medium
-            return [eng.submit("shared", 2 * gather_bytes, t_start=t, tag="ag")]
+            return [eng.submit("shared", 2 * gather_bytes * scale, t_start=t,
+                               tag="ag")]
 
-        def submit_rs(t):
-            return [eng.submit("shared", 2 * gather_bytes, t_start=t, tag="rs")]
+        def submit_rs(t, scale=1.0):
+            return [eng.submit("shared", 2 * gather_bytes * scale, t_start=t,
+                               tag="rs")]
 
         return submit_ag, submit_rs, (p - 1) * fabric.latency
 
@@ -1875,23 +1954,27 @@ def fsdp_submitters(sched: Schedule, eng: Engine, fabric: FabricParams, *,
     eng.add_link("send", b)
     eng.add_link("recv", b)
 
-    def submit_ag(t):
+    def submit_ag(t, scale=1.0):
         # AG_mc: receive-bound (send share 1/p — cost_model.mc_inc_share)
-        return [eng.submit("send", shard_bytes, t_start=t, tag="ag"),
-                eng.submit("recv", gather_bytes, t_start=t, tag="ag")]
+        return [eng.submit("send", shard_bytes * scale, t_start=t, tag="ag"),
+                eng.submit("recv", gather_bytes * scale, t_start=t, tag="ag")]
 
     if policy == "mcast":
-        def submit_rs(t):
+        def submit_rs(t, scale=1.0):
             # ring RS: full gather bytes in both directions, so its
             # receive stream contends with AG_mc on the ejection link
-            return [eng.submit("send", gather_bytes, t_start=t, tag="rs"),
-                    eng.submit("recv", gather_bytes, t_start=t, tag="rs")]
+            return [eng.submit("send", gather_bytes * scale, t_start=t,
+                               tag="rs"),
+                    eng.submit("recv", gather_bytes * scale, t_start=t,
+                               tag="rs")]
     else:
-        def submit_rs(t):
+        def submit_rs(t, scale=1.0):
             # RS_inc: send-bound — the switch reduces in-network, the
             # node receives only its own reduced shard
-            return [eng.submit("send", gather_bytes, t_start=t, tag="rs"),
-                    eng.submit("recv", shard_bytes, t_start=t, tag="rs")]
+            return [eng.submit("send", gather_bytes * scale, t_start=t,
+                               tag="rs"),
+                    eng.submit("recv", shard_bytes * scale, t_start=t,
+                               tag="rs")]
 
     rounds = max(p // max(n_chains, 1), 1)
     return submit_ag, submit_rs, rounds * fabric.latency

@@ -285,7 +285,8 @@ def chain_candidates(p: int, topology=None) -> list[int]:
     return sorted(ms)
 
 
-def hier_candidates(p: int, n_bytes: int, topology=None) -> list[Candidate]:
+def hier_candidates(p: int, n_bytes: int, topology=None, *,
+                    fanout_moves: bool = True) -> list[Candidate]:
     """Tiered-fabric allgather candidates: on a topology exposing islands
     (``island_size``), seed the canonical hierarchical builder (the fabric's
     own island grouping, one chain per stripe) and derive the searcher's
@@ -297,6 +298,11 @@ def hier_candidates(p: int, n_bytes: int, topology=None) -> list[Candidate]:
       chain-count: M per stripe seeded from ``tier_capacities()`` (the
         island/switched capacity ratio says how many switched chains the
         stripe NICs carry), plus the M=1 / full-parallel endpoints,
+      fan-out/depth mutations: halve/double the chain fan-out around M*
+        (M chains per generation is the activation tree's fan-out; the
+        chain depth R = ceil(I/M) moves inversely), probing the incast
+        knee the capacity-ratio seed can straddle — disable with
+        ``fanout_moves=False`` (the never-worsened regression pin),
       transport flips: stripe multicast -> routed unicast ring
         (stripe_mode="ring") and island redistribution -> back over the
         switched tier (redistribute_transport="switched").
@@ -311,13 +317,20 @@ def hier_candidates(p: int, n_bytes: int, topology=None) -> list[Candidate]:
     for g in (d for d in range(2, g0 + 1) if g0 % d == 0):
         n_islands = p // g
         m_star = max(1, min(n_islands, round(n_islands / ratio)))
-        origin = "builder" if g == g0 else "derived"
-        for i, m in enumerate(sorted({1, m_star, n_islands})):
+        base_ms = sorted({1, m_star, n_islands})
+        for i, m in enumerate(base_ms):
             out.append(Candidate(
-                f"{origin if (i == 0 and g == g0) else 'derived'}"
+                f"{'builder' if (i == 0 and g == g0) else 'derived'}"
                 f":hier[g={g},m={m}]",
                 sched_ir.build_hierarchical_allgather(p, n_bytes, g, m),
-                origin if (i == 0 and g == g0) else "derived"))
+                "builder" if (i == 0 and g == g0) else "derived"))
+        if fanout_moves:
+            for m in sorted({max(1, m_star // 2),
+                             min(n_islands, 2 * m_star)} - set(base_ms)):
+                out.append(Candidate(
+                    f"derived:hier[g={g},m={m},fanout]",
+                    sched_ir.build_hierarchical_allgather(p, n_bytes, g, m),
+                    "derived"))
         out.append(Candidate(
             f"derived:hier[g={g},ring-stripe]",
             sched_ir.build_hierarchical_allgather(p, n_bytes, g,
@@ -524,9 +537,9 @@ def search(collective: str, p: int, n_bytes: int, *, topology=None,
 
     packet_ok: bool | None = None
     if validate_packet:
-        # fabrics without h* host leaves (Torus2D) can't run the packet
-        # lowering's name-based path resolution — validate the winner's
-        # loss-recovery convergence on the abstract fabric instead
+        # every stock fabric resolves packet leaf paths via topology.host()
+        # (supports_packet=True); a custom fabric that opts out falls back
+        # to validating loss-recovery convergence on the abstract fabric
         pkt_topo = topology if getattr(topology, "supports_packet",
                                        topology is not None) else None
         if pkt_topo is not None:

@@ -486,10 +486,11 @@ class Torus2D(_LinkRegistry):
     (x then y) shortest ring paths, ties broken toward +1; multicast trees are
     the confluent union of those routes (row trunk, column branches)."""
 
-    # hosts ARE the torus nodes (t{x}.{y}) — there are no h* leaf links, so
-    # the packet lowering's host-name path resolution cannot run here; the
-    # searcher validates winners at packet fidelity on the abstract fabric
-    supports_packet = False
+    # hosts ARE the torus nodes (t{x}.{y}); the packet lowering resolves
+    # leaf paths through topology.host(), so receivers that are interior
+    # tree nodes (every non-leaf torus member) work the same as fat-tree
+    # h* leaves
+    supports_packet = True
 
     def __init__(self, nx: int, ny: int, *, b_link: float = DEFAULT_LINK_BYTES):
         super().__init__()
@@ -509,6 +510,9 @@ class Torus2D(_LinkRegistry):
 
     def coord(self, i: int) -> tuple[int, int]:
         return i // self.ny, i % self.ny
+
+    def host(self, h: int) -> str:
+        return self.node(*self.coord(h))
 
     # --- search introspection ----------------------------------------------
     def signature(self) -> tuple:

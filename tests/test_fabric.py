@@ -238,3 +238,73 @@ def test_routed_flow_rate_is_min_share_over_route():
     f2 = eng2.submit_route(flat.route(0, 2), 250.0)
     eng2.run()
     assert f2.t_end == pytest.approx(2.5)
+
+
+# --------------------------------------------- torus packet fidelity (PR 9)
+
+
+def test_torus_supports_packet():
+    assert Torus2D(4, 4).supports_packet is True
+    assert Torus2D(4, 4).host(6) == "t1.2"
+
+
+def test_torus_zero_loss_packet_reproduces_fluid_broadcast():
+    """Loss-0 packet == fluid on Torus2D, same pin the fat-tree fabrics
+    carry: leaf paths resolve through topology.host(), so receivers that
+    are interior tree nodes (every non-leaf torus member) work too."""
+    from repro.core.engine import FabricParams, WorkerParams
+    from repro.core.simulator import simulate_broadcast
+    import numpy as np
+
+    fab = FabricParams(jitter=0.0)
+    wk = WorkerParams(n_recv_workers=8)
+    tz = Torus2D(4, 4)
+    a = simulate_broadcast(16, 1 << 20, fab, wk, np.random.default_rng(0),
+                           topology=tz)
+    b = simulate_broadcast(16, 1 << 20, fab, wk, np.random.default_rng(0),
+                           topology=tz, fidelity="packet")
+    assert b.time == pytest.approx(a.time, rel=1e-9)
+    assert a.link_bytes == pytest.approx(b.link_bytes)
+
+
+def test_torus_zero_loss_packet_reproduces_fluid_allgather():
+    """Routed allgather at loss 0: the packet engine lands within the same
+    per-hop-handshake margin of the fluid time on Torus2D as on FatTree —
+    and EXACTLY matches the fat-tree packet time at equal line rate (both
+    fabrics are non-blocking for this pattern), so the torus leaf-path
+    resolution introduces no deviation of its own."""
+    from repro.core import sched_ir
+    from repro.core.engine import FabricParams, WorkerParams
+    from repro.core.topology import FatTree
+    import numpy as np
+
+    fab = FabricParams(jitter=0.0)
+    wk = WorkerParams(n_recv_workers=8)
+    sched = sched_ir.build_allgather(16, 1 << 20, 4)
+    res = {}
+    for fid in ("fluid", "packet"):
+        res[fid] = sched_ir.execute(sched, fab, wk, np.random.default_rng(0),
+                                    fidelity=fid, topology=Torus2D(4, 4))
+    assert res["packet"].time == pytest.approx(res["fluid"].time, rel=0.05)
+    assert res["packet"].recovered == 0 and res["packet"].completed
+    ft = sched_ir.execute(sched, fab, wk, np.random.default_rng(0),
+                          fidelity="packet", topology=FatTree(k=8, n_hosts=16))
+    assert res["packet"].time == pytest.approx(ft.time, rel=1e-12)
+
+
+def test_torus_lossy_packet_converges_and_is_slower():
+    from repro.core import sched_ir
+    from repro.core.engine import FabricParams, WorkerParams
+    import numpy as np
+
+    fab = FabricParams(jitter=0.0)
+    wk = WorkerParams(n_recv_workers=8)
+    sched = sched_ir.build_allgather(16, 1 << 20, 4)
+    tz = Torus2D(4, 4)
+    clean = sched_ir.execute(sched, fab, wk, np.random.default_rng(0),
+                             fidelity="packet", topology=tz)
+    tz2 = Torus2D(4, 4)
+    lossy = sched_ir.execute(sched, fab, wk, np.random.default_rng(0),
+                             fidelity="packet", topology=tz2, loss=0.01)
+    assert lossy.completed and lossy.recovered > 0
+    assert lossy.time > clean.time

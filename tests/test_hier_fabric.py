@@ -215,11 +215,18 @@ def test_hier_candidates_only_on_island_fabrics():
     cands = sched_search.hier_candidates(P, N, _island_fabric())
     names = [c.name for c in cands]
     assert any(c.origin == "builder" and f"g={G}" in c.name for c in cands)
-    # the three searcher moves: island regrouping, stripe transport flip,
-    # redistribution transport flip
+    # the searcher moves: island regrouping, stripe transport flip,
+    # redistribution transport flip, chain fan-out/depth mutation
     assert any("g=2" in n for n in names)
     assert any("ring-stripe" in n for n in names)
     assert any("switched-redist" in n for n in names)
+    assert any("fanout" in n for n in names)
+    # fan-out mutations are exactly the M*/2 and 2M* neighbours not already
+    # probed, and they can be switched off (the never-worsened pin)
+    plain = sched_search.hier_candidates(P, N, _island_fabric(),
+                                         fanout_moves=False)
+    assert not any("fanout" in c.name for c in plain)
+    assert {c.name for c in plain} < {c.name for c in cands}
     for c in cands:
         sched_ir.validate(c.sched)
 
@@ -311,3 +318,89 @@ def test_engine_auto_matrix_consistent_results(monkeypatch):
     ref = execute(sched, FAB, WK, np.random.default_rng(3), **kw)
     assert ref.time == pytest.approx(base.time, rel=0, abs=0)
     assert ref.stripe.time == base.stripe.time
+
+
+# ---------------------------------------------- inter-stripe contention
+
+
+def _contended_fabric():
+    # k=8 pods: stripes' multicast trees genuinely collide on shared
+    # agg/core uplinks (deterministic ECMP), unlike the tiny k=4 fabric
+    return IslandFatTree(8, 32, island_size=4)
+
+
+def test_interstripe_contention_factor_measured_and_applied():
+    """DESIGN §11 deviation closed: sibling stripes share agg/core uplinks.
+    The fluid stripe leg runs ALL stripes' flows on one engine, so its time
+    equals solo-time x the measured contention factor; the factor is > 1
+    on a fabric where the stripe trees collide."""
+    topo = _contended_fabric()
+    p, g = 32, 4
+    hosts = list(range(p))
+    sched = build_hierarchical_allgather(p, N, g)
+    stripe_hosts = [j * g for j in range(p // g)]
+    co = [[j * g + r for j in range(p // g)] for r in range(1, g)]
+    factor = sched_ir._stripe_contention_factor(
+        sched.meta["stripe_ag"], FAB, WK, topo, stripe_hosts, co)
+    assert factor > 1.0
+    solo = sched_ir._fluid_allgather(
+        sched.meta["stripe_ag"], FAB, WK, np.random.default_rng(0),
+        topology=topo, hosts=stripe_hosts)
+    res = execute(sched, FAB, WK, np.random.default_rng(0), fidelity="fluid",
+                  topology=topo, hosts=hosts)
+    assert res.stripe.time == pytest.approx(solo.time * factor, rel=1e-9)
+
+
+def test_interstripe_contention_packet_scales_with_fluid_factor():
+    """Packet stripe leg pays the same fluid-validated contention factor:
+    loss-0 packet stripe time stays >= the contended fluid stripe time, and
+    the full fidelity ordering analytic <= fluid <= packet holds routed."""
+    topo = _contended_fabric()
+    p, g = 32, 4
+    hosts = list(range(p))
+    sched = build_hierarchical_allgather(p, N, g)
+    fl = execute(sched, FAB, WK, np.random.default_rng(0), fidelity="fluid",
+                 topology=topo, hosts=hosts)
+    topo.reset()
+    pk_res = execute(sched, FAB, WK, np.random.default_rng(0),
+                     fidelity="packet", topology=topo, hosts=hosts)
+    assert fl.time <= pk_res.time + 1e-9
+    assert pk_res.stripe.time >= fl.stripe.time - 1e-12
+
+
+def test_interstripe_contention_preserves_link_bytes():
+    """Byte accounting is fidelity-invariant: the fluid engine now counts
+    every stripe's tree bytes directly; they must equal the packet path's
+    static sibling-stripe count, link for link."""
+    topo = _contended_fabric()
+    p, g = 32, 4
+    hosts = list(range(p))
+    sched = build_hierarchical_allgather(p, N, g)
+    fl = execute(sched, FAB, WK, np.random.default_rng(0), fidelity="fluid",
+                 topology=topo, hosts=hosts)
+    topo.reset()
+    pk_res = execute(sched, FAB, WK, np.random.default_rng(0),
+                     fidelity="packet", topology=topo, hosts=hosts)
+    assert set(fl.link_bytes) == set(pk_res.link_bytes)
+    for name, v in fl.link_bytes.items():
+        assert v == pytest.approx(pk_res.link_bytes[name], rel=1e-9), name
+
+
+def test_fanout_moves_never_worsen_search_winner(monkeypatch):
+    """The PR-8 open item's acceptance pin: adding the fan-out/depth
+    mutation moves can only grow the candidate pool, so the searched winner
+    on an island fabric is never worse than without them — and the moves
+    really enter the search table."""
+    topo = _island_fabric()
+    cache = EvalCache()
+    real = sched_search.hier_candidates
+    monkeypatch.setattr(
+        sched_search, "hier_candidates",
+        lambda p, n, t: real(p, n, t, fanout_moves=False))
+    base = search("allgather", P, N, topology=topo, hosts=list(range(P)),
+                  validate_packet=False, cache=cache)
+    monkeypatch.setattr(sched_search, "hier_candidates", real)
+    full = search("allgather", P, N, topology=topo, hosts=list(range(P)),
+                  validate_packet=False, cache=cache)
+    assert full.winner_time <= base.winner_time + 1e-15
+    assert any("fanout" in row.name for row in full.table)

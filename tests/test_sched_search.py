@@ -106,8 +106,8 @@ def test_search_never_loses_to_builders_and_wins_on_fattree():
 def test_search_wins_strictly_on_torus():
     r = search("allreduce", 16, 16 << 20, topology=_torus(), loss=0.001)
     assert r.winner_time < r.best_builder_time
-    # Torus2D has no h* leaves -> packet validation falls back to the
-    # abstract fabric but still must converge under loss
+    # packet validation runs on the real torus (supports_packet=True:
+    # leaf paths resolve via topology.host) and must converge under loss
     assert r.packet_validated is True
 
 

@@ -1,0 +1,260 @@
+"""simulate_training_run (core/train_sim.py): the compute+comm co-sim is
+pinned three ways — the engine's heterogeneous ``layers=`` path is
+bit-exact the legacy uniform path on identical profiles; the degenerate
+mix (pp=1, grad_accum=1) reproduces engine.simulate_fsdp_step bit-exact;
+and the three fidelities keep their ordering (analytic <= fluid <= packet)
+on abstract and routed fabrics. MFU stays in (0, 1] and never improves
+under loss; the pipeline composition, the searcher hook and the launch
+facade each get a functional pin."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_model_config, training_sweep_archs
+from repro.core import train_sim
+from repro.core.engine import (FabricParams, LayerProfile, WorkerParams,
+                               simulate_fsdp_step)
+from repro.core.topology import FatTree, IslandFatTree, Torus2D
+from repro.core.train_sim import (TPU_V5E, derive_layer_profiles,
+                                  make_fabric, simulate_training_run)
+
+FAB = FabricParams(jitter=0.0)
+WK = WorkerParams(n_recv_workers=8)
+MODEL = "smollm-135m"
+
+
+# ----------------------------- engine layers= generalization (bit-exact)
+
+
+@pytest.mark.parametrize("policy", ["naive", "mcast", "split"])
+@pytest.mark.parametrize("routed", [False, True], ids=["abstract", "routed"])
+def test_uniform_layers_bit_exact_vs_legacy(policy, routed):
+    """A uniform ``layers=`` profile must reproduce the legacy
+    (n_layers, layer_bytes, tokens/flops) parameterization bit-exact —
+    the heterogeneous generalization cannot move the fsdp.* baselines."""
+    lb, p, n = 256e6, 16, 6
+    fwd = 2.0 * (lb / 2) * 4096 / 200e12
+    prof = [LayerProfile(fwd, 2.0 * fwd, lb)] * n
+    topo = FatTree(k=8, n_hosts=16, oversubscription=4.0) if routed else None
+    kw = dict(p=p, fabric=FAB, policy=policy, topology=topo,
+              hosts=range(p) if routed else None)
+    legacy = simulate_fsdp_step(n_layers=n, layer_bytes=lb, **kw)
+    hetero = simulate_fsdp_step(layers=prof, **kw)
+    assert hetero.step_time == legacy.step_time
+    assert hetero.bubble_fraction == legacy.bubble_fraction
+    assert hetero.phase_times == legacy.phase_times
+    assert hetero.ag_bytes == legacy.ag_bytes
+    assert hetero.rs_bytes == legacy.rs_bytes
+
+
+def test_heterogeneous_layers_shift_the_timeline():
+    """Skewed per-layer volumes must actually matter: making one layer 4x
+    heavier (compute AND bytes) is slower than the uniform average."""
+    lb, p = 128e6, 8
+    fwd = 1e-3
+    uniform = [LayerProfile(fwd, 2 * fwd, lb)] * 4
+    skewed = [LayerProfile(fwd / 2, fwd, lb / 2)] * 3 + \
+        [LayerProfile(fwd * 2.5, 5 * fwd, lb * 2.5)]
+    assert sum(l.layer_bytes for l in skewed) == sum(l.layer_bytes
+                                                     for l in uniform)
+    tu = simulate_fsdp_step(layers=uniform, p=p, fabric=FAB, policy="split")
+    ts = simulate_fsdp_step(layers=skewed, p=p, fabric=FAB, policy="split")
+    assert ts.step_time > tu.step_time
+
+
+# -------------------------------------------- degenerate cases, bit-exact
+
+
+def test_degenerate_mix_matches_simulate_fsdp_step_bit_exact():
+    """pp=1, grad_accum=1: the co-sim IS one engine step on the derived
+    profiles — bit-exact, fluid and analytic alike."""
+    prof = derive_layer_profiles(MODEL, dp=16)
+    for policy in ("naive", "split"):
+        r = simulate_training_run(MODEL, n_hosts=16, policy=policy,
+                                  fabric=FAB)
+        d = simulate_fsdp_step(layers=prof, p=16, fabric=FAB, policy=policy)
+        assert r.step_time == d.step_time
+        assert r.micro_time == d.step_time
+        assert r.compute_time == d.compute_time
+        assert r.bubble_fraction == d.bubble_fraction
+        assert r.fsdp.step_time == d.step_time
+
+
+def test_single_layer_model_matches_engine_bit_exact():
+    """A 1-layer model is the smallest degenerate case: one AG prefetch,
+    one backward re-gather, one RS."""
+    cfg = reduced(get_model_config(MODEL), layers=1)
+    prof = derive_layer_profiles(cfg, dp=8)
+    assert len(prof) == 1
+    r = simulate_training_run(cfg, n_hosts=8, policy="split", fabric=FAB)
+    d = simulate_fsdp_step(layers=prof, p=8, fabric=FAB, policy="split")
+    assert r.step_time == d.step_time
+
+
+def test_single_host_is_pure_compute():
+    """dp=1: nothing on the wire; every fidelity collapses to the compute
+    timeline and there is no engine result."""
+    prof = derive_layer_profiles(MODEL, dp=1)
+    want = sum(p.fwd_s for p in prof) + sum(p.bwd_s for p in prof)
+    for fid in ("analytic", "fluid", "packet"):
+        r = simulate_training_run(MODEL, n_hosts=1, fidelity=fid, fabric=FAB)
+        assert r.step_time == want
+        assert r.fsdp is None
+        assert r.bubble_fraction == 0.0
+        assert 0.0 < r.mfu <= 1.0
+
+
+# --------------------------------------------------- fidelity ordering
+
+
+@pytest.mark.parametrize("policy", ["naive", "mcast", "split"])
+@pytest.mark.parametrize("topo_fn", [
+    lambda: None,
+    lambda: FatTree(k=8, n_hosts=16, oversubscription=4.0),
+    lambda: IslandFatTree(4, 16, island_size=4),
+    lambda: Torus2D(4, 4),
+], ids=["abstract", "fattree", "island", "torus"])
+def test_fidelity_ordering(policy, topo_fn):
+    """analytic <= fluid <= packet per (policy, fabric) — the same
+    contract the collective IR keeps (test_sched_search)."""
+    kw = dict(n_hosts=16, policy=policy, fabric=FAB, workers=WK)
+    a = simulate_training_run(MODEL, fidelity="analytic",
+                              topology=topo_fn(), **kw)
+    f = simulate_training_run(MODEL, fidelity="fluid",
+                              topology=topo_fn(), **kw)
+    p = simulate_training_run(MODEL, fidelity="packet", loss=0.01,
+                              rng=np.random.default_rng(0),
+                              topology=topo_fn(), **kw)
+    assert a.step_time <= f.step_time + 1e-12 <= p.step_time + 1e-9
+    for r in (a, f, p):
+        assert 0.0 < r.mfu <= 1.0
+        assert 0.0 <= r.bubble_fraction < 1.0
+
+
+@pytest.mark.parametrize("arch", training_sweep_archs())
+def test_sweep_models_all_run(arch):
+    """Every sweep model x a host-count pair, end-to-end on the abstract
+    fabric: times scale down with hosts, MFU stays physical."""
+    lo = simulate_training_run(arch, n_hosts=16, fabric=FAB)
+    hi = simulate_training_run(arch, n_hosts=64, fabric=FAB)
+    assert hi.step_time < lo.step_time
+    assert 0.0 < hi.mfu <= 1.0 and 0.0 < lo.mfu <= 1.0
+    assert lo.n_devices == 16 and hi.n_devices == 64
+
+
+# ------------------------------------------------ MFU under loss (property)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(min_value=0.0, max_value=0.02),
+       st.floats(min_value=0.0, max_value=0.02))
+def test_mfu_monotone_non_increasing_in_loss(q1, q2):
+    """More loss can only slow the step: MFU(q_hi) <= MFU(q_lo), and both
+    stay in (0, 1]. The naive policy's RC-goodput overlay is deterministic,
+    so the property is exact, not statistical."""
+    lo, hi = sorted((q1, q2))
+
+    def mfu(q):
+        if q == 0.0:
+            return simulate_training_run(MODEL, n_hosts=8, policy="naive",
+                                         fabric=FAB).mfu
+        return simulate_training_run(MODEL, n_hosts=8, policy="naive",
+                                     fidelity="packet", loss=q,
+                                     fabric=FAB).mfu
+    m_lo, m_hi = mfu(lo), mfu(hi)
+    assert 0.0 < m_hi <= m_lo <= 1.0
+
+
+# --------------------------------------------- pipeline / search / facade
+
+
+def test_pipeline_composition():
+    ga, pp = 4, 2
+    r = simulate_training_run(MODEL, n_hosts=16, pp=pp, grad_accum=ga,
+                              fabric=FAB)
+    assert r.dp == 8
+    assert r.step_time == (ga + pp - 1) * r.micro_time
+    assert r.pipeline_bubble_fraction == (pp - 1) / (ga + pp - 1)
+    # the simulated slice is the compute-heaviest contiguous stage
+    prof = r.layer_profiles
+    per = -(-len(prof) // pp)
+    spans = [(lo, min(lo + per, len(prof)))
+             for lo in range(0, len(prof), per)]
+    heaviest = max(spans, key=lambda sp: sum(p.fwd_s + p.bwd_s
+                                             for p in prof[sp[0]:sp[1]]))
+    assert r.stage_span == heaviest
+    # more microbatches amortize the pipeline bubble
+    r2 = simulate_training_run(MODEL, n_hosts=16, pp=pp, grad_accum=16,
+                               fabric=FAB)
+    assert r2.pipeline_bubble_fraction < r.pipeline_bubble_fraction
+
+
+def test_layer_profiles_are_heterogeneous():
+    """The embedding/head placement must produce real volume skew — the
+    whole point of the per-layer generalization."""
+    prof = derive_layer_profiles("yi-9b", dp=16)
+    body = prof[1:-1]
+    assert prof[0].layer_bytes > body[0].layer_bytes      # + embedding
+    assert prof[-1].layer_bytes > body[0].layer_bytes     # + LM head
+    assert prof[-1].fwd_s > body[0].fwd_s                 # head FLOPs
+    assert len({p.layer_bytes for p in body}) == 1        # uniform trunk
+
+
+def test_search_hook_attaches_search_result():
+    r = simulate_training_run(MODEL, n_hosts=8, fabric=FAB, search=True)
+    assert r.searched is not None
+    assert r.searched.winner_time > 0
+    assert r.searched_step_time is not None and r.searched_step_time > 0
+
+
+def test_make_fabric_specs():
+    assert make_fabric("abstract", 16) is None and make_fabric(None, 4) is None
+    ft = make_fabric("fattree", 16)
+    assert isinstance(ft, FatTree) and ft.n_hosts == 16 and ft.k == 4
+    isl = make_fabric("island", 64, island_size=8)
+    assert isinstance(isl, IslandFatTree) and isl.island_size == 8
+    t = make_fabric("torus", 32)
+    assert isinstance(t, Torus2D) and t.nx * t.ny == 32
+    with pytest.raises(AssertionError):
+        make_fabric("torus", 24)          # not a power of two
+    with pytest.raises(ValueError):
+        make_fabric("dragonfly", 16)
+
+
+def test_launch_facade():
+    from repro.launch import simulate_training_run as launch_sim
+
+    r = launch_sim(MODEL, n_hosts=16, fabric="fattree", fabric_params=FAB)
+    assert 0.0 < r.mfu <= 1.0
+    with pytest.raises(TypeError):
+        launch_sim(MODEL, n_hosts=16, topology=FatTree(k=4, n_hosts=16))
+
+
+def test_split_beats_naive_mfu_on_oversubscribed_fabric():
+    """The paper's direction-split schedule must win where it matters: at
+    oversubscription >= 2 the naive ring collides with itself on the thin
+    tier while AG_mc+RS_inc stream both directions. Gated as a train.*
+    benchmark ratio (benchmarks/paper_figs.training_run_sweep)."""
+    topo = lambda: FatTree(k=8, n_hosts=16, oversubscription=4.0)  # noqa: E731
+    naive = simulate_training_run(MODEL, n_hosts=16, policy="naive",
+                                  topology=topo(), fabric=FAB)
+    split = simulate_training_run(MODEL, n_hosts=16, policy="split",
+                                  topology=topo(), fabric=FAB)
+    assert split.mfu > naive.mfu
+    assert split.step_time < naive.step_time
+
+
+def test_chip_constants_scale_compute():
+    """Halving peak FLOPs cannot speed anything up, and the default chip
+    is the roofline's TPU v5e."""
+    slow = train_sim.ChipConstants(name="half", peak_flops=TPU_V5E.peak_flops / 2,
+                                   hbm_bw=TPU_V5E.hbm_bw)
+    r_fast = simulate_training_run(MODEL, n_hosts=16, fabric=FAB)
+    r_slow = simulate_training_run(MODEL, n_hosts=16, fabric=FAB, chip=slow)
+    assert r_slow.step_time > r_fast.step_time
+    assert TPU_V5E.peak_flops == 197e12 and TPU_V5E.hbm_bw == 819e9
