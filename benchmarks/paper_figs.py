@@ -378,7 +378,8 @@ def protocol_loss_sweep_smoke():
 def packet_scale_sweep(grid=((512, 1 << 26), (2048, 1 << 26), (10000, GIB)),
                        ref_grid=((512, 1 << 26), (2048, 1 << 26)),
                        big=(10000, GIB), ag_point=(512, 1 << 20, 4),
-                       min_big_speedup=20.0):
+                       ag_dense=(128, 16 << 20, 4),
+                       min_big_speedup=20.0, min_dense_speedup=1.0):
     """Simulator-throughput benchmark: wall-clock of the packet-fidelity
     engine itself vs host count, vectorized batch engine (default) against
     the per-leaf reference oracle. Lossless jitter-0 fabric with an 8-thread
@@ -452,6 +453,28 @@ def packet_scale_sweep(grid=((512, 1 << 26), (2048, 1 << 26), (10000, GIB)),
     rows.append((f"pscale.AG.P{p}.ref_vs_vec_speedup",
                  round(wr / max(wv, 1e-9), 1),
                  "reference / vectorized wall-clock"))
+    # dense big-row allgather (DESIGN §9/§13): few hosts, >= 16 MiB merged
+    # rows — the regime the residue-class-parallel pool scan closed. The
+    # engine="auto" fallback is retired, so this point carries a hard
+    # vectorized >= reference floor (the closure must not silently reopen).
+    if ag_dense is not None:
+        p, n, m = ag_dense
+        ra, wv = timed(simulate_allgather, p, n, fab, wk,
+                       np.random.default_rng(0), m, fidelity="packet",
+                       engine="vectorized")
+        rf, wr = timed(simulate_allgather, p, n, fab, wk,
+                       np.random.default_rng(0), m, fidelity="packet",
+                       engine="reference")
+        assert ra.completed and (ra.time, ra.bytes_total, ra.bytes_recovery) \
+            == (rf.time, rf.bytes_total, rf.bytes_recovery)
+        dense = wr / max(wv, 1e-9)
+        rows.append((f"pscale.AGdense.P{p}.vec_wall_s", round(wv, 4),
+                     f"allgather {n >> 20} MiB x{m} chains, vectorized"))
+        rows.append((f"pscale.AGdense.P{p}.ref_wall_s", round(wr, 4),
+                     f"allgather {n >> 20} MiB x{m} chains, reference"))
+        rows.append((f"pscale.AGdense.P{p}.ref_vs_vec_speedup",
+                     round(dense, 2), f"floor {min_dense_speedup:g}x"))
+        assert dense >= min_dense_speedup, (dense, wr, wv)
     return rows
 
 
@@ -610,10 +633,14 @@ def search_sweep():
     fat-tree AND the torus the searched allreduce must beat the best
     hand-written builder at fluid fidelity (strictly on at least one),
     validate at packet fidelity under loss, and report its lower-bound
-    certificate — all inside the smoke wall budget."""
+    certificate — all inside the smoke wall budget. The eval cache is the
+    persistent one ($REPRO_EVAL_CACHE when set — nightly CI carries it
+    across runs as an artifact); a warmed re-search of both fabrics then
+    self-verifies the cache contract: >= 3x faster than the cold fluid
+    sweep, identical winners."""
     from repro.core import sched_search
 
-    cache = sched_search.EvalCache()
+    cache = sched_search.EvalCache.persistent()
     p, n = 16, 16 << 20
     scenarios = [
         ("fattree_os4", FatTree(k=8, n_hosts=p, oversubscription=4.0)),
@@ -647,6 +674,37 @@ def search_sweep():
     assert wall < 30.0, f"search sweep blew the smoke budget: {wall:.1f}s"
     rows.append(("search.allreduce_p16_wall_s", round(wall, 3),
                  "both fabrics, shared eval cache"))
+    # warm-cache contract: a cold fluid sweep (fresh cache, no packet
+    # validation so the comparison isolates the searcher) vs the same sweep
+    # served from the now-populated cache — the memoization must buy >= 3x
+    # and change nothing about the winners
+    t_cold = time.perf_counter()
+    for label, topo in scenarios:
+        sched_search.search("allreduce", p, n, topology=topo,
+                            validate_packet=False,
+                            cache=sched_search.EvalCache())
+    wall_cold = time.perf_counter() - t_cold
+    t_warm = time.perf_counter()
+    warm_hits0 = cache.hits
+    for label, topo in scenarios:
+        rw = sched_search.search("allreduce", p, n, topology=topo,
+                                 validate_packet=False, cache=cache)
+        assert rw.cache_hits == rw.evaluations, (label, rw.cache_hits)
+    wall_warm = time.perf_counter() - t_warm
+    warm_x = wall_cold / max(wall_warm, 1e-9)
+    rows.append(("search.warm_cache_speedup", round(warm_x, 1),
+                 f"cold {wall_cold:.2f}s vs warm {wall_warm:.3f}s, "
+                 f"{cache.hits - warm_hits0} hits"))
+    assert warm_x >= 3.0, (warm_x, wall_cold, wall_warm)
+    cache.save()
+    # informational (ungated: neither a ratio nor a wall row) — the nightly
+    # CI job lifts this into $GITHUB_STEP_SUMMARY next to the uploaded
+    # persistent-cache artifact
+    total_evals = cache.hits + cache.misses
+    rows.append(("search.eval_cache_hit_rate",
+                 round(cache.hits / max(total_evals, 1), 4),
+                 f"{cache.hits}/{total_evals} evals served from cache"
+                 + (f"; persisted to {cache.path}" if cache.path else "")))
     return rows
 
 

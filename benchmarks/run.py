@@ -88,6 +88,11 @@ def main() -> None:
                          "--write-json; defaults to BENCH_smoke.json / "
                          "BENCH_full.json in the repo root, where "
                          "scripts/bench_gate.py looks for it)")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-phase wall breakdown (engine max-min solves / "
+                         "pool scans / RNG / bitmap packing) accumulated "
+                         "across every bench, printed as profile.* rows and "
+                         "written into the report JSON under \"profile\"")
     args = ap.parse_args()
     if args.json is None:
         args.json = os.path.join(
@@ -97,6 +102,12 @@ def main() -> None:
     benches = paper_figs.SMOKE if args.smoke else paper_figs.ALL
     if args.smoke:
         args.skip_roofline = True
+
+    if args.profile:
+        from repro.core import profiling
+
+        profiling.reset()
+        profiling.enable()
 
     print("name,value,derived")
     failures = 0
@@ -131,6 +142,14 @@ def main() -> None:
         report["scenarios"][fn.__name__] = {
             "wall_s": round(dt, 4), "rows": n_rows,
         }
+
+    if args.profile:
+        prof = profiling.report()
+        profiling.disable()
+        for phase, row in prof.items():
+            print(f"profile.{phase}.wall_s,{row['wall_s']},"
+                  f"{row['calls']} calls")
+        report["profile"] = prof
 
     if args.smoke or args.write_json:
         report["failures"] = failures

@@ -54,12 +54,15 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+import os
 from dataclasses import dataclass
 from typing import TYPE_CHECKING
 
 import numpy as np
 
 from repro.core import dpa as dpa_model
+from repro.core import profiling
+from repro.kernels.pool_np import pool_completion_rows_np
 
 if TYPE_CHECKING:  # avoid importing jax-heavy config machinery at module load
     from repro.configs.base import ModelConfig
@@ -299,7 +302,23 @@ def _max_min_rates_np(active: list[Flow]) -> dict[Flow, float]:
 class Engine:
     """Event-driven fluid simulator. Flows may be submitted with future start
     times; the loop advances between starts and finishes, recomputing the
-    global max-min rate allocation at every event."""
+    max-min rate allocation at every event.
+
+    The allocation is maintained INCREMENTALLY: the engine keeps the
+    flow-link incidence live (every Link holds its active flows), and when
+    flows arrive or complete it re-runs progressive filling only over the
+    affected connected component of the flow-link graph — flows in
+    components the event cannot touch keep their cached rates. All events
+    sharing a timestamp are batched into one dirty set, so a tree finish
+    that releases thousands of links triggers one component solve, not
+    thousands. Disjoint components share no links, so per-component
+    progressive filling performs the identical float operations in the
+    identical order as the global solve (modulo the measure-zero case of a
+    cross-component share tie within the 1e-12 freeze tolerance) —
+    tests/test_maxmin_incremental.py pins rate-for-rate equality against
+    the global oracle on random flow/link DAGs. ``ENGINE_MAXMIN=reference``
+    (mirroring ``REPRO_PACKET_ENGINE``) forces the pre-incremental global
+    re-solve on every event; a CI matrix leg keeps that path green."""
 
     def __init__(self, t0: float = 0.0):
         self.now = t0
@@ -307,6 +326,17 @@ class Engine:
         self._pending: list[tuple[float, int, Flow]] = []   # start events
         self._active: list[Flow] = []
         self._seq = itertools.count()
+        mode = os.environ.get("ENGINE_MAXMIN", "") or "incremental"
+        assert mode in ("incremental", "reference"), mode
+        self._maxmin_mode = mode
+        # incremental solver state: cached rates (valid for the current
+        # _active set once _dirty drains) + flows whose arrival/completion
+        # invalidated their component since the last solve
+        self._rates_cache: dict[Flow, float] = {}
+        self._dirty: list[Flow] = []
+        # solve telemetry (component-locality tests + --profile breakdown)
+        self.maxmin_solves = 0
+        self.maxmin_flows_solved = 0
 
     # -- construction
     def add_link(self, name: str, capacity: float) -> Link:
@@ -358,14 +388,71 @@ class Engine:
         return self.submit(edges, n_bytes, **kw)
 
     # -- event loop
+    def _solve(self, flows: list[Flow]) -> dict[Flow, float]:
+        """Progressive filling over ``flows``; the numpy COO path cuts in
+        by the GLOBAL active membership count (the same rule whether the
+        solve covers one component or everything, so incremental and
+        reference modes run the same solver on the same scenario)."""
+        n_members = sum(len(f.links) for f in self._active)
+        solver = (_max_min_rates_np if n_members >= _NUMPY_RATES_MIN_MEMBERS
+                  else _max_min_rates_py)
+        self.maxmin_solves += 1
+        self.maxmin_flows_solved += len(flows)
+        if profiling.ENABLED:
+            with profiling.phase("engine_solve"):
+                return solver(flows)
+        return solver(flows)
+
     def _rates(self) -> dict[Flow, float]:
-        active = self._active
-        if not active:
+        """Full (global) max-min allocation over the current active set."""
+        if not self._active:
             return {}
-        n_members = sum(len(f.links) for f in active)
-        if n_members >= _NUMPY_RATES_MIN_MEMBERS:
-            return _max_min_rates_np(active)
-        return _max_min_rates_py(active)
+        return self._solve(self._active)
+
+    def _component(self, seed_links) -> list[Flow]:
+        """Flows connected (transitively, via shared links) to any seed
+        link — the dirty component(s) an arrival/completion can affect —
+        in _active order, so per-component progressive filling visits
+        flows in the same relative order as the global solve."""
+        seen_links: set[int] = set()
+        stack: list[Link] = []
+        for link in seed_links:
+            if id(link) not in seen_links:
+                seen_links.add(id(link))
+                stack.append(link)
+        comp_ids: set[int] = set()
+        while stack:
+            link = stack.pop()
+            for f in link.active:
+                if id(f) not in comp_ids:
+                    comp_ids.add(id(f))
+                    for l2 in f.links:
+                        if id(l2) not in seen_links:
+                            seen_links.add(id(l2))
+                            stack.append(l2)
+        return [f for f in self._active if id(f) in comp_ids]
+
+    def _current_rates(self) -> dict[Flow, float]:
+        """The cached allocation, re-solving only the dirty component(s)
+        batched since the last event (``ENGINE_MAXMIN=reference`` escape
+        hatch: global re-solve every time, the pre-incremental behavior)."""
+        if self._maxmin_mode == "reference":
+            return self._rates()
+        if self._dirty:
+            dirty, self._dirty = self._dirty, []
+            cache = self._rates_cache
+            seed_links: list[Link] = []
+            for f in dirty:
+                if f.t_end is not None:
+                    cache.pop(f, None)
+                seed_links.extend(f.links)
+            if not self._active:
+                cache.clear()
+            else:
+                comp = self._component(seed_links)
+                if comp:
+                    cache.update(self._solve(comp))
+        return self._rates_cache
 
     def _progress(self, dt: float, rates: dict[Flow, float]) -> None:
         if dt <= 0:
@@ -380,7 +467,7 @@ class Engine:
 
     def _step(self, t_limit: float) -> bool:
         """Advance to the next event (or t_limit). Returns False when idle."""
-        rates = self._rates()
+        rates = self._current_rates()
         t_next = t_limit
         if self._pending:
             t_next = min(t_next, self._pending[0][0])
@@ -396,6 +483,7 @@ class Engine:
         # their finish time is indistinguishable from `now` in float64)
         still = []
         touched: set[Link] = set()
+        changed: list[Flow] = []
         for f in self._active:
             r = rates.get(f, 0.0)
             stalled = r > 0 and self.now + f.remaining / r <= self.now
@@ -403,6 +491,7 @@ class Engine:
                 f.remaining = 0.0
                 f.t_end = self.now
                 touched.update(f.links)
+                changed.append(f)
             else:
                 still.append(f)
         self._active = still
@@ -419,6 +508,10 @@ class Engine:
                 for link in f.links:
                     link.active.append(f)
                 self._active.append(f)
+                changed.append(f)
+        # every same-timestamp arrival/completion lands in ONE dirty batch;
+        # the next _current_rates() call re-solves their component(s) once
+        self._dirty.extend(changed)
         return bool(self._active or self._pending)
 
     def advance_to(self, t: float) -> None:
@@ -526,24 +619,23 @@ def worker_pool_completion_rows(arrivals: np.ndarray, n_workers: int,
     is position // W — both independent of the row length — and the
     maximum.accumulate runs left-to-right, so trailing +inf padding cannot
     reach any real entry. The same float ops run in the same order as the
-    1-D pass (tests/test_engine.py pins the equivalence)."""
+    1-D pass (tests/test_engine.py pins the equivalence).
+
+    The inner path is kernels/pool_np.py's residue-class-parallel scan
+    (one blocked maximum.accumulate over a (rows, n/W, W) view instead of
+    W fancy-index passes — the compiled-kernel twin lives in
+    kernels/pool.py); it closed the DESIGN §9 dense big-row allgather
+    regime that used to force the packet engine back to the per-leaf
+    reference executor."""
     assert arrivals.ndim == 2, arrivals.shape
     n = arrivals.shape[1]
     if n == 0:
         return np.empty_like(arrivals), np.zeros(arrivals.shape, dtype=bool)
-    done = np.empty_like(arrivals)
-    w = max(int(n_workers), 1)
-    for r in range(min(w, n)):
-        idx = np.arange(r, n, w)
-        i = np.arange(idx.size, dtype=float)
-        shifted = arrivals[:, idx] - i * service
-        done[:, idx] = (np.maximum.accumulate(shifted, axis=1)
-                        + (i + 1.0) * service)
-    mask = np.zeros(arrivals.shape, dtype=bool)
-    if n > staging:
-        # inf padding self-cancels: inf > inf and real > inf are both False
-        mask[:, staging:] = done[:, : n - staging] > arrivals[:, staging:]
-    return done, mask
+    if profiling.ENABLED:
+        with profiling.phase("pool_solve"):
+            return pool_completion_rows_np(arrivals, n_workers, service,
+                                           staging)
+    return pool_completion_rows_np(arrivals, n_workers, service, staging)
 
 
 # ----------------------------------------------------- FSDP contention model

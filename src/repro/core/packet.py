@@ -77,6 +77,7 @@ from repro.core.dpa_engine import (
     DpaEventPool,
     resolve_event_params,
 )
+from repro.core import profiling
 from repro.core.engine import (
     Engine,
     FabricParams,
@@ -102,33 +103,26 @@ DEFAULT_MAX_ROUNDS = 64
 # only moves wall-clock, never results.
 ENGINES = ("vectorized", "reference")
 
-# Dense big-row regime (DESIGN §9): with few hosts and >= 16 MiB of merged
-# per-leaf row bytes the batched pool pass pads every leaf row to the widest
-# chain and the vectorized engine drops to ~0.7x the per-leaf loop, so
-# "auto" picks "reference" there. Everywhere else (and for broadcast, whose
-# rows never merge) vectorized wins by 3-30x.
-DENSE_ROW_BYTES = 16 << 20
-DENSE_MAX_HOSTS = 256
-
-
 def resolve_engine(engine: str, kind: str, p: int, row_bytes: int) -> str:
     """Map ``engine="auto"`` to a concrete packet executor; pass explicit
     choices through untouched (they stay bit-exact by construction).
-    ``row_bytes`` is the merged per-leaf row size — for an allgather, the
-    widest activation generation's concurrent chains x payload bytes."""
+    ``kind``/``p``/``row_bytes`` stay in the signature for call-site
+    stability: the dense big-row allgather regime (DESIGN §9) used to route
+    "auto" to "reference" here, but the residue-class-parallel pool scan
+    (kernels/pool_np.py) closed it — vectorized now wins everywhere, so
+    "auto" is always "vectorized" and the only remaining redirection is the
+    REPRO_PACKET_ENGINE env escape hatch."""
     if engine != "auto":
         assert engine in ENGINES, engine
         return engine
-    # CI matrix hook: REPRO_PACKET_ENGINE pins "auto" to one executor so the
-    # per-leaf oracle leg stays exercised in CI. Explicit engine= arguments
-    # are untouched — the bit-exact pin tests keep comparing both engines.
+    # CI matrix hook + escape hatch: REPRO_PACKET_ENGINE pins "auto" to one
+    # executor so the per-leaf oracle leg stays exercised in CI. Explicit
+    # engine= arguments are untouched — the bit-exact pin tests keep
+    # comparing both engines.
     override = os.environ.get("REPRO_PACKET_ENGINE")
     if override:
         assert override in ENGINES, override
         return override
-    if kind == "allgather" and p <= DENSE_MAX_HOSTS \
-            and row_bytes >= DENSE_ROW_BYTES:
-        return "reference"
     return "vectorized"
 
 # Batched pool passes process leaves in blocks of at most this many matrix
@@ -357,6 +351,11 @@ def _sample_link_round(link_models: dict[int, LossModel | None],
     """One drop mask per distinct link for the round's n packets — sampled
     once per LINK (not per receiver), so an upstream drop is shared by every
     receiver below it."""
+    if profiling.ENABLED:
+        with profiling.phase("rng"):
+            zeros = np.zeros(n, dtype=bool)
+            return {lid: (m.sample(n) if m is not None else zeros)
+                    for lid, m in link_models.items()}
     zeros = np.zeros(n, dtype=bool)
     return {lid: (m.sample(n) if m is not None else zeros)
             for lid, m in link_models.items()}
@@ -801,6 +800,9 @@ class _VecBroadcastRun(_BroadcastRun):
     def _draw_jitter(self, total: int) -> np.ndarray | None:
         if self._skip_jitter:
             return None
+        if profiling.ENABLED:
+            with profiling.phase("rng"):
+                return self.rng.uniform(0.0, self.fabric.jitter, size=total)
         return self.rng.uniform(0.0, self.fabric.jitter, size=total)
 
     def _pool_rows(self, leaves, counts, psn_flat, arr_flat):
@@ -945,7 +947,13 @@ class _VecBroadcastRun(_BroadcastRun):
         flags = np.zeros((len(nackers), n + ((-n) % 32)), dtype=bool)
         for k, leaf in enumerate(nackers):
             flags[k, self.missing[leaf]] = True
-        agg_words = np.bitwise_or.reduce(bitmap_pack_rows_np(flags), axis=0)
+        if profiling.ENABLED:
+            with profiling.phase("packing"):
+                agg_words = np.bitwise_or.reduce(bitmap_pack_rows_np(flags),
+                                                 axis=0)
+        else:
+            agg_words = np.bitwise_or.reduce(bitmap_pack_rows_np(flags),
+                                             axis=0)
         union = np.nonzero(bitmap_unpack_np(agg_words, n))[0]
         idx = np.array([self._pos[leaf] for leaf in nackers], dtype=np.intp)
         t_send = np.maximum(self._tdone[idx], self._cutoff) + self.hop[idx]

@@ -1,0 +1,71 @@
+"""Opt-in per-phase wall-clock accounting for the simulator hot paths.
+
+``benchmarks/run.py --profile`` enables it; the accumulated per-phase
+seconds land in the report JSON under ``"profile"`` so a wall-clock
+regression in BENCH_*.json is attributable to a phase (engine max-min
+solves / leaf pool solves / RNG draws / bitmap packing) instead of a
+number that just got bigger.
+
+Disabled (the default) the hot paths pay a single module-attribute bool
+check — no perf_counter calls, no dict updates. The instrumented choke
+points are the four phase owners:
+
+  engine_solve  Engine max-min rate solves (full + incremental component)
+  pool_solve    worker pool completion scans (engine.py / kernels/pool_np)
+  rng           packet-engine loss-mask + jitter sampling
+  packing       bitmap pack/popcount + merged-row padding/sorting
+
+Not thread-safe by design: the simulator is single-threaded and the
+search process pool profiles per worker (child accumulators die with the
+worker — only the parent's phases are reported).
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+ENABLED = False
+
+PHASES = ("engine_solve", "pool_solve", "rng", "packing")
+
+_acc: dict[str, float] = {}
+_calls: dict[str, int] = {}
+
+
+def enable() -> None:
+    global ENABLED
+    ENABLED = True
+
+
+def disable() -> None:
+    global ENABLED
+    ENABLED = False
+
+
+def reset() -> None:
+    _acc.clear()
+    _calls.clear()
+
+
+def record(phase: str, seconds: float) -> None:
+    _acc[phase] = _acc.get(phase, 0.0) + seconds
+    _calls[phase] = _calls.get(phase, 0) + 1
+
+
+@contextmanager
+def phase(name: str):
+    """Time a block into ``name`` — no-op (yield only) when disabled."""
+    if not ENABLED:
+        yield
+        return
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        record(name, time.perf_counter() - t0)
+
+
+def report() -> dict[str, dict[str, float | int]]:
+    """{phase: {"wall_s": seconds, "calls": n}} for every phase seen."""
+    return {name: {"wall_s": round(_acc[name], 4), "calls": _calls[name]}
+            for name in sorted(_acc)}

@@ -48,7 +48,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import protocol
+from repro.core import profiling, protocol
 from repro.core import schedule as seq
 from repro.core.engine import (
     Engine,
@@ -262,8 +262,14 @@ def canonical_key(sched: Schedule) -> str:
     keys lower to identical runs at every fidelity, so the search layer
     (core/sched_search.py) uses this as the memoized-evaluation cache key —
     e.g. ``build_allreduce(p, n)`` and ``build_pipelined_allreduce(p, n,
-    n_segments=1)`` hash differently only if their DAGs or meta differ."""
+    n_segments=1)`` hash differently only if their DAGs or meta differ.
+    Memoized per object (Schedule is frozen): the searcher hashes the same
+    candidate for bound lookup, evaluation and prefetch keying."""
     import hashlib
+
+    memo = getattr(sched, "_canonical_memo", None)
+    if memo is not None:
+        return memo
 
     parts: list = [sched.kind, sched.p, sched.n_bytes]
     for op in sched.ops:
@@ -277,7 +283,9 @@ def canonical_key(sched: Schedule) -> str:
     parts.append(tuple(sorted(sched.activation)))
     parts.append(tuple((k, sched.meta[k]) for k in _CANONICAL_META
                        if k in sched.meta))
-    return hashlib.blake2b(repr(parts).encode(), digest_size=16).hexdigest()
+    key = hashlib.blake2b(repr(parts).encode(), digest_size=16).hexdigest()
+    object.__setattr__(sched, "_canonical_memo", key)
+    return key
 
 
 def validate(sched: Schedule) -> None:
@@ -1362,16 +1370,28 @@ def _packet_allgather(sched: Schedule, fabric: FabricParams,
             arr_pad[rows, within] = arr_flat
             key_pad[rows, within] = key_flat
             psn_pad[rows, within] = psn_flat
-        # stable row argsort == the reference's per-leaf argsort; elide it
-        # when every row is already nondecreasing (single chain, no
-        # jitter: a stable argsort of a sorted row is the identity)
+        # row sort == the reference's per-leaf argsort; elide it when every
+        # row is already nondecreasing (single chain, no jitter: a stable
+        # argsort of a sorted row is the identity). The pool only consumes
+        # the sorted VALUE sequence, so a plain np.sort feeds it (bitwise
+        # the sequence a stable-argsort gather produces — arrivals are
+        # nonnegative, no -0.0/NaN ambiguity); the stable permutation that
+        # attributes RNR drops back to (chain, psn) is materialised per
+        # row in the epilogue, and only for rows the mask actually hit —
+        # in the dense lossless regime that is none, saving the full
+        # argsort + three take_along_axis passes
+        sorted_rows = False
+        arr_sorted = arr_pad
         if total and bool(np.any(arr_pad[:, 1:] < arr_pad[:, :-1])):
-            order = np.argsort(arr_pad, axis=1, kind="stable")
-            arr_pad = np.take_along_axis(arr_pad, order, axis=1)
-            key_pad = np.take_along_axis(key_pad, order, axis=1)
-            psn_pad = np.take_along_axis(psn_pad, order, axis=1)
+            sorted_rows = True
+            if profiling.ENABLED:
+                with profiling.phase("packing"):
+                    arr_sorted = np.sort(arr_pad, axis=1)
+            else:
+                arr_sorted = np.sort(arr_pad, axis=1)
         done, rnr_mask = worker_pool_completion_rows(
-            arr_pad, workers.n_recv_workers, service, workers.staging_chunks)
+            arr_sorted, workers.n_recv_workers, service,
+            workers.staging_chunks)
         # row-batched epilogue: per-row t_done (max over the real prefix —
         # the -inf fill never wins for a nonempty row) and RNR totals; the
         # per-chain got split is only materialised for rows that actually
@@ -1390,7 +1410,13 @@ def _packet_allgather(sched: Schedule, fabric: FabricParams,
             if not nrnr[k]:
                 out.append((float(tdone[k]), None, 0))
                 continue
-            ro, ko, po = rnr_mask[k, :c], key_pad[k, :c], psn_pad[k, :c]
+            if sorted_rows:
+                order_k = np.argsort(arr_pad[k], kind="stable")
+                ko = key_pad[k][order_k][:c]
+                po = psn_pad[k][order_k][:c]
+            else:
+                ko, po = key_pad[k, :c], psn_pad[k, :c]
+            ro = rnr_mask[k, :c]
             got = {}
             for ky, ch in key_of[k].items():
                 sel = ko == ky
@@ -2034,8 +2060,9 @@ def execute(sched: Schedule, fabric: FabricParams | None = None,
     fidelity-specific (packet: max_rounds / aggregate_nacks / dpa_fidelity /
     dpa, plus engine="auto"|"vectorized"|"reference" selecting the batched
     packet executor or the per-leaf oracle it is pinned bit-exact against —
-    "auto" (default) resolves per-call via packet.resolve_engine, picking
-    "reference" only in the allgather dense big-row regime of DESIGN §9;
+    "auto" (default) resolves per-call via packet.resolve_engine — always
+    "vectorized" since the pool scan closed the DESIGN §9 dense regime,
+    unless REPRO_PACKET_ENGINE overrides;
     fsdp_step: the compute keywords of engine.simulate_fsdp_step)."""
     assert fidelity in FIDELITIES, fidelity
     fabric = fabric or FabricParams()

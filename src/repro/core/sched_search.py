@@ -55,7 +55,9 @@ Why the bounds are admissible:
 """
 from __future__ import annotations
 
+import json
 import math
+import os
 import time as _time
 from dataclasses import astuple, dataclass
 
@@ -107,16 +109,77 @@ class EvalResult:
                                  # topology; payload bytes otherwise)
 
 
+def _evaluate_uncached(sched: Schedule, ctx: EvalContext) -> EvalResult:
+    """One fluid/analytic evaluation, no memoization — the unit of work the
+    cache memoizes and the search process pool ships to workers."""
+    if ctx.topology is not None:
+        ctx.topology.reset()
+    if ctx.fidelity == "analytic":
+        res = sched_ir.execute(sched, ctx.fabric, ctx.workers,
+                               fidelity="analytic")
+        return EvalResult(time=float(res),
+                          fabric_bytes=sched_ir.payload_bytes(sched))
+    res = sched_ir.execute(
+        sched, ctx.fabric, ctx.workers,
+        np.random.default_rng(ctx.seed), fidelity=ctx.fidelity,
+        topology=ctx.topology,
+        hosts=list(ctx.hosts) if ctx.hosts is not None else None)
+    if ctx.topology is not None and res.link_bytes:
+        fabric_bytes = float(sum(res.link_bytes.values()))
+    else:
+        fabric_bytes = sched_ir.payload_bytes(sched)
+    return EvalResult(time=res.time, fabric_bytes=fabric_bytes)
+
+
+def _key_persistable(key: tuple) -> bool:
+    """Disk-persistable cache keys only: a topology keyed by object identity
+    (no ``signature()``) is process-local, so its entries never leave RAM."""
+    topo_key = key[1][2]
+    return not (isinstance(topo_key, tuple) and len(topo_key) == 2
+                and topo_key[0] == "id")
+
+
 class EvalCache:
     """Memoized schedule evaluations keyed on (canonical schedule hash,
     context key). Shared between search(), sweep_chains() and
     sched_ir.autotune_chains so repeated sweeps over the same fabric never
-    re-simulate a schedule."""
+    re-simulate a schedule.
 
-    def __init__(self) -> None:
+    With ``path=`` the cache is *content-addressed on disk* too: entries
+    load on construction (a disk hit counts toward ``hits`` like any other)
+    and ``save()`` writes them back atomically, keyed by
+    ``repr((canonical_key, ctx.key()))`` — repr of the float/str/tuple key
+    is deterministic, so runs in different processes address the same
+    entries. Identity-keyed topology entries (``("id", ...)`` — no
+    ``signature()``) are never persisted: ids are process-local.
+    ``search()``/``sweep_chains()`` save automatically on completion, so
+    repeated benchmark/CI runs and ``autotune_chains`` reuse scores across
+    processes."""
+
+    def __init__(self, path: str | None = None) -> None:
         self._store: dict[tuple, EvalResult] = {}
+        self._bounds: dict[tuple, tuple[float, str]] = {}
         self.hits = 0
         self.misses = 0
+        self.path = path
+        self._disk: dict[str, list] = {}
+        self._disk_bounds: dict[str, list] = {}
+        if path and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    payload = json.load(f)
+                assert payload.get("version") == 1, payload.get("version")
+                self._disk = payload["entries"]
+                self._disk_bounds = payload.get("bounds", {})
+            except (OSError, ValueError, KeyError, AssertionError):
+                self._disk = {}    # corrupt/foreign file: start cold
+                self._disk_bounds = {}
+
+    @classmethod
+    def persistent(cls) -> "EvalCache":
+        """A cache at ``$REPRO_EVAL_CACHE`` (in-memory only when unset) —
+        the hook CI nightlies use to carry scores across runs."""
+        return cls(os.environ.get("REPRO_EVAL_CACHE") or None)
 
     def __len__(self) -> int:
         return len(self._store)
@@ -124,30 +187,59 @@ class EvalCache:
     def evaluate(self, sched: Schedule, ctx: EvalContext) -> EvalResult:
         key = (sched_ir.canonical_key(sched), ctx.key())
         got = self._store.get(key)
+        if got is None and self._disk:
+            row = self._disk.get(repr(key))
+            if row is not None:
+                got = EvalResult(time=row[0], fabric_bytes=row[1])
+                self._store[key] = got
         if got is not None:
             self.hits += 1
             return got
         self.misses += 1
-        if ctx.topology is not None:
-            ctx.topology.reset()
-        if ctx.fidelity == "analytic":
-            res = sched_ir.execute(sched, ctx.fabric, ctx.workers,
-                                   fidelity="analytic")
-            out = EvalResult(time=float(res),
-                             fabric_bytes=sched_ir.payload_bytes(sched))
-        else:
-            res = sched_ir.execute(
-                sched, ctx.fabric, ctx.workers,
-                np.random.default_rng(ctx.seed), fidelity=ctx.fidelity,
-                topology=ctx.topology,
-                hosts=list(ctx.hosts) if ctx.hosts is not None else None)
-            if ctx.topology is not None and res.link_bytes:
-                fabric_bytes = float(sum(res.link_bytes.values()))
-            else:
-                fabric_bytes = sched_ir.payload_bytes(sched)
-            out = EvalResult(time=res.time, fabric_bytes=fabric_bytes)
+        out = _evaluate_uncached(sched, ctx)
         self._store[key] = out
         return out
+
+    def bound(self, sched: Schedule, ctx: EvalContext) -> tuple[float, str]:
+        """Memoized ``lower_bound`` — the bound is a pure function of
+        (schedule content, context), so warm searches skip the analytic
+        executor entirely. Persisted alongside the evaluations (same
+        identity-key exclusion)."""
+        key = (sched_ir.canonical_key(sched), ctx.key())
+        got = self._bounds.get(key)
+        if got is None and self._disk_bounds:
+            row = self._disk_bounds.get(repr(key))
+            if row is not None:
+                got = (row[0], row[1])
+                self._bounds[key] = got
+        if got is None:
+            got = lower_bound(sched, ctx)
+            self._bounds[key] = got
+        return got
+
+    def save(self) -> None:
+        """Atomically persist the persistable entries (no-op without a
+        path). Merges over what is already on disk, so concurrent sweeps
+        only ever add entries."""
+        if not self.path:
+            return
+        entries = dict(self._disk)
+        entries.update({
+            repr(k): [r.time, r.fabric_bytes]
+            for k, r in self._store.items() if _key_persistable(k)})
+        bounds = dict(self._disk_bounds)
+        bounds.update({
+            repr(k): [b, binding]
+            for k, (b, binding) in self._bounds.items()
+            if _key_persistable(k)})
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                    exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": entries, "bounds": bounds}, f)
+        os.replace(tmp, self.path)
+        self._disk = entries
+        self._disk_bounds = bounds
 
 
 # ------------------------------------------------------------ lower bounds
@@ -464,20 +556,85 @@ def _packet_converged(res) -> bool:
     return ok if seen else math.isfinite(res.time)
 
 
+def _prefetch_parallel(scored, n_seeds, incumbent_time, ctx, cache,
+                       n_jobs: int) -> dict[tuple, EvalResult]:
+    """Evaluate not-yet-cached derived candidates concurrently in a fork
+    process pool, gated by incumbent broadcast: candidates go out in
+    ascending-bound order and a candidate is only dispatched while its
+    bound still beats the best time any completed worker has reported
+    (seed incumbent included). Returns {cache key: result} for the replay
+    loop — which stays bitwise identical to the serial search because the
+    prefetched results are injected exactly where a serial evaluation
+    would have happened. Pickling failures degrade to an empty prefetch
+    (the replay loop just evaluates serially)."""
+    import multiprocessing as mp
+    from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+
+    todo = []
+    queued: set[tuple] = set()
+    for bound, _binding, cand in scored[n_seeds:]:
+        if bound >= incumbent_time:
+            break                          # sorted: the rest prune too
+        key = (sched_ir.canonical_key(cand.sched), ctx.key())
+        if key not in queued and cache._store.get(key) is None \
+                and (not cache._disk or repr(key) not in cache._disk):
+            queued.add(key)
+            todo.append((bound, key, cand))
+    prefetched: dict[tuple, EvalResult] = {}
+    if not todo:
+        return prefetched
+    try:
+        with ProcessPoolExecutor(
+                max_workers=min(n_jobs, len(todo)),
+                mp_context=mp.get_context("fork")) as pool:
+            best_seen = incumbent_time
+            pending: dict = {}
+            i = 0
+            while i < len(todo) or pending:
+                while i < len(todo) and len(pending) < n_jobs:
+                    bound, key, cand = todo[i]
+                    i += 1
+                    if bound >= best_seen:
+                        continue           # incumbent broadcast: stale bound
+                    fut = pool.submit(_evaluate_uncached, cand.sched, ctx)
+                    pending[fut] = key
+                if not pending:
+                    continue
+                done, _ = wait(pending, return_when=FIRST_COMPLETED)
+                for fut in done:
+                    key = pending.pop(fut)
+                    res = fut.result()
+                    prefetched[key] = res
+                    best_seen = min(best_seen, res.time)
+    except (TypeError, AttributeError, OSError, ImportError):
+        return {}                          # unpicklable schedule/topology
+    return prefetched
+
+
 def search(collective: str, p: int, n_bytes: int, *, topology=None,
            hosts=None, fabric: FabricParams | None = None,
            workers: WorkerParams | None = None, cache: EvalCache | None = None,
            seed: int = 0, validate_packet: bool = True,
-           loss=None) -> SearchResult:
+           loss=None, n_jobs: int | None = None) -> SearchResult:
     """Branch-and-bound schedule search (module docstring). Builder seeds
     are force-evaluated to establish the incumbent; derived candidates are
     visited in ascending bound order and pruned when their admissible lower
     bound already meets the incumbent. The winner is re-validated at packet
-    fidelity (optionally under ``loss``)."""
+    fidelity (optionally under ``loss``).
+
+    ``n_jobs`` > 1 turns on the parallel tier: derived candidates that the
+    seed incumbent cannot prune are *prefetched* in a fork process pool
+    (with incumbent-broadcast dispatch gating), then the serial loop
+    replays over the prefetched results — the SearchResult is bitwise
+    identical to ``n_jobs=1`` by construction, parallelism only moves
+    wall-clock. Defaults to ``$REPRO_SEARCH_WORKERS`` else serial (the
+    gated benchmark ratios stay machine-independent)."""
     t0 = _time.perf_counter()
     fabric = fabric or FabricParams(jitter=0.0)
     workers = workers or WorkerParams(n_recv_workers=8)
     cache = cache if cache is not None else EvalCache()
+    if n_jobs is None:
+        n_jobs = int(os.environ.get("REPRO_SEARCH_WORKERS", "0") or 0)
     ctx = EvalContext(fabric, workers, topology,
                       tuple(hosts) if hosts is not None else None,
                       "fluid", seed)
@@ -502,7 +659,7 @@ def search(collective: str, p: int, n_bytes: int, *, topology=None,
 
     scored: list[tuple[float, str, Candidate]] = []
     for cand in seeds + derived:
-        bound, binding = lower_bound(cand.sched, ctx)
+        bound, binding = cache.bound(cand.sched, ctx)
         if bound < min_bound:
             min_bound, min_binding = bound, binding
         scored.append((bound, binding, cand))
@@ -511,15 +668,33 @@ def search(collective: str, p: int, n_bytes: int, *, topology=None,
     # most promising run first and tighten the incumbent for pruning
     scored[n_seeds:] = sorted(scored[n_seeds:], key=lambda t: t[0])
 
+    prefetched: dict[tuple, EvalResult] = {}
+
+    def _eval(cand: Candidate) -> EvalResult:
+        # replay shim: a prefetched result lands exactly where the serial
+        # loop would have evaluated — same miss accounting, same store
+        nonlocal evaluations
+        evaluations += 1
+        key = (sched_ir.canonical_key(cand.sched), ctx.key())
+        res = prefetched.pop(key, None)
+        if res is not None and key not in cache._store:
+            cache.misses += 1
+            cache._store[key] = res
+            return res
+        return cache.evaluate(cand.sched, ctx)
+
     for i, (bound, binding, cand) in enumerate(scored):
         is_seed = i < n_seeds
+        if i == n_seeds and n_jobs > 1:
+            # seeds fixed the incumbent: fan the survivors out to workers
+            prefetched = _prefetch_parallel(scored, n_seeds, incumbent_time,
+                                            ctx, cache, n_jobs)
         if not is_seed and bound >= incumbent_time:
             pruned += 1
             table.append(CandidateReport(cand.name, cand.origin, bound,
                                          None, None))
             continue
-        res = cache.evaluate(cand.sched, ctx)
-        evaluations += 1
+        res = _eval(cand)
         table.append(CandidateReport(cand.name, cand.origin, bound,
                                      res.time, res.fabric_bytes))
         if is_seed and (res.time, res.fabric_bytes) < (best_builder_time,
@@ -551,6 +726,7 @@ def search(collective: str, p: int, n_bytes: int, *, topology=None,
             else None, loss=loss)
         packet_ok = _packet_converged(pres) and math.isfinite(pres.time)
 
+    cache.save()
     return SearchResult(
         collective=collective, p=p, n_bytes=n_bytes,
         winner=incumbent, winner_time=incumbent_time,
@@ -579,4 +755,5 @@ def sweep_chains(schedule_builder, topology=None, *, p: int, n_bytes: int,
     for m in candidates:
         times[m] = cache.evaluate(schedule_builder(p, n_bytes, m), ctx).time
     best = min(times, key=lambda m: (times[m], m))
+    cache.save()
     return best, times

@@ -253,7 +253,7 @@ def simulate_training_run(model, shape="train_4k", *, n_hosts: int,
                           fabric: FabricParams | None = None,
                           workers: WorkerParams | None = None,
                           fidelity: str = "fluid", loss=None,
-                          rng: "np.random.Generator | None" = None,
+                          rng: np.random.Generator | None = None,
                           chip: ChipConstants = TPU_V5E, n_chains: int = 2,
                           dtype_bytes: float = 2.0,
                           progress_engine: str = "dpa",

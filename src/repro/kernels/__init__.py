@@ -2,10 +2,12 @@
 #   chunk_reassembly — the DPA receive datapath (Appendix C) as a TPU kernel
 #   collective_matmul — allgather-fused MXU matmul (latency hiding)
 #   bitmap — reliability-state pack/popcount (bitmap_np: jax-free twins)
+#   pool — T-server pool completion as a residue-class-parallel scan
+#          (pool_np: jax-free twins on the engine's row-batched pool path)
 # Validated on CPU via interpret=True against the pure-jnp oracles in ref.py.
 #
-# Submodules load lazily (PEP 562): the jax-free bitmap_np twins are on the
-# packet-protocol simulator hot path, so importing repro.kernels.bitmap_np
+# Submodules load lazily (PEP 562): the jax-free bitmap_np/pool_np twins are
+# on the packet-protocol simulator hot path, so importing them
 # must not pull in jax through this package init. Star-import exposes only
 # ops/ref (the historical surface); attribute access reaches every submodule.
 import importlib
@@ -13,7 +15,7 @@ import importlib
 __all__ = ["ops", "ref"]
 
 _SUBMODULES = ("bitmap", "bitmap_np", "chunk_reassembly", "collective_matmul",
-               "ops", "ref", "ring_allgather")
+               "ops", "pool", "pool_np", "ref", "ring_allgather")
 
 
 def __getattr__(name):

@@ -1,0 +1,101 @@
+"""Pool-completion scan kernel — the T-server leaf receive pool (paper §V).
+
+The deterministic-service worker pool obeys, per worker residue class
+mod W,
+
+    done_i = max(a_i, done_{i-W}) + s  =  (i+1)s + max_{j<=i}(a_j - j*s)
+
+With the (rows, n) arrival matrix padded to a multiple of W and viewed as
+(rows, n/W, W), every residue class becomes a VPU lane and the recurrence
+is ONE running-max scan along the middle axis — the residue-class-parallel
+scan. The kernel tiles rows into VMEM blocks and walks the scan axis with
+a ``fori_loop`` carrying the per-lane running max; rows x W lanes advance
+in parallel each step.
+
+The ``*_np`` twins (kernels/pool_np.py, re-exported here) are the
+bit-identical numpy references over the SAME (rows, n/W, W) layout. They
+are what core/engine.worker_pool_completion_rows actually runs — the
+packet-engine hot path must stay jax-free — and tests cross-check the two
+implementations on the simulator's actual arrival matrices
+(tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pool_np import (  # noqa: F401  (re-exported twins)
+    pool_completion_rows_np,
+    pool_rnr_mask_rows_np,
+    pool_scan_rows_np,
+)
+
+
+def _scan_kernel(a_ref, o_ref, *, service):
+    br, n_per, w = a_ref.shape
+    dt = a_ref.dtype
+    s = jnp.asarray(service, dt)
+
+    def body(i, carry):
+        fi = i.astype(dt)
+        row = a_ref[:, pl.ds(i, 1), :].reshape(br, w) - fi * s
+        m = jnp.maximum(carry, row)
+        o_ref[:, pl.ds(i, 1), :] = (m + (fi + 1.0) * s).reshape(br, 1, w)
+        return m
+
+    init = jnp.full((br, w), -jnp.inf, dt)
+    jax.lax.fori_loop(0, n_per, body, init)
+
+
+def pool_scan_rows(arrivals: jax.Array, n_workers: int, service: float, *,
+                   block_rows: int = 8,
+                   interpret: bool | None = None) -> jax.Array:
+    """(R, n) sorted arrival rows -> (R, n) pool completion times under a
+    W-worker deterministic-service pool. Trailing +inf padding (ragged
+    rows) comes back +inf. Mirrors pool_scan_rows_np lane for lane."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    rows, n = arrivals.shape
+    if rows == 0 or n == 0:
+        return jnp.empty_like(arrivals)
+    w = max(int(n_workers), 1)
+    pad_c = (-n) % w
+    n_per = (n + pad_c) // w
+    br = min(block_rows, rows)
+    pad_r = (-rows) % br
+    a = arrivals
+    if pad_c or pad_r:
+        a = jnp.pad(a, ((0, pad_r), (0, pad_c)),
+                    constant_values=jnp.inf)
+    a3 = a.reshape(rows + pad_r, n_per, w)
+    done = pl.pallas_call(
+        functools.partial(_scan_kernel, service=float(service)),
+        grid=((rows + pad_r) // br,),
+        in_specs=[pl.BlockSpec((br, n_per, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((br, n_per, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad_r, n_per, w),
+                                       arrivals.dtype),
+        interpret=interpret,
+    )(a3)
+    return done.reshape(rows + pad_r, n_per * w)[:rows, :n]
+
+
+def pool_completion_rows(arrivals: jax.Array, n_workers: int, service: float,
+                         staging: int, *, block_rows: int = 8,
+                         interpret: bool | None = None,
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Scan + staging-ring RNR mask — the accelerator twin of
+    engine.worker_pool_completion_rows (same drop rule: chunk k is dropped
+    when the chunk ``staging`` places ahead is still unserviced at k's
+    arrival; padded columns come back +inf / False)."""
+    done = pool_scan_rows(arrivals, n_workers, service,
+                          block_rows=block_rows, interpret=interpret)
+    n = arrivals.shape[1]
+    mask = jnp.zeros(arrivals.shape, dtype=bool)
+    if n > staging:
+        mask = mask.at[:, staging:].set(
+            done[:, : n - staging] > arrivals[:, staging:])
+    return done, mask

@@ -1,0 +1,98 @@
+"""Numpy twin of the kernels/pool.py Pallas pool-completion scan — jax-free.
+
+The T-server deterministic-service pool (paper §V, the leaf receive path)
+obeys, per worker residue class mod W,
+
+    done_i = max(a_i, done_{i-W}) + s  =  (i+1)s + max_{j<=i}(a_j - j*s)
+
+— a running max per class. The row-at-a-time engine path used to walk the
+W classes with fancy-index gathers/scatters per class; on the dense
+allgather regime (hundreds of leaf rows x tens of thousands of merged
+chunks) that strided traffic made the vectorized packet engine ~0.7x the
+per-leaf reference (DESIGN §9). Here the W classes are laid side by side
+instead: pad each row to a multiple of W with +inf, view it as
+(rows, n/W, W), and run ONE ``np.maximum.accumulate`` over the class axis
+— every residue class scans in parallel lanes of the same pass
+(residue-class-parallel scan). Row blocks bound the temporaries so the
+scan stays cache-resident on big matrices.
+
+Bit-exactness: element (k, i, r) sees exactly the float ops of the old
+per-class pass — subtract ``i*service``, running max (exact, no
+rounding), add ``(i+1.0)*service`` — in the same left-to-right order per
+class, and the trailing +inf padding sits at the END of every class's
+sequence so the accumulate never feeds it back into a real entry.
+core/engine.py's ``worker_pool_completion_rows`` delegates its inner path
+here (tests/test_engine.py + tests/test_packet_vectorized.py pin the
+equivalence); importing this module must NOT pull in jax so the packet
+hot path stays numpy-only. kernels/pool.py mirrors the same scan as a
+Pallas kernel and re-exports these twins.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: row-block size cap: 2 temporaries x block_rows x n_cols f64 stay within
+#: a few MiB of L2 for the dense-regime column counts (~16k)
+_BLOCK_ROW_ELEMS = 1 << 21
+
+
+def pool_scan_rows_np(arrivals: np.ndarray, n_workers: int,
+                      service: float) -> np.ndarray:
+    """Pool completion times for (R, n) sorted arrival rows under a W-worker
+    deterministic-service pool: the residue-class-parallel scan. Padded
+    (+inf) trailing entries come back +inf. Bit-exact per row with
+    ``worker_pool_completion``'s per-class passes."""
+    assert arrivals.ndim == 2, arrivals.shape
+    arrivals = np.asarray(arrivals, dtype=np.float64)   # scan runs in f64
+    rows, n = arrivals.shape
+    if n == 0:
+        return np.empty_like(arrivals)
+    w = max(int(n_workers), 1)
+    pad = (-n) % w
+    n_per = (n + pad) // w
+    done = np.empty((rows, n), dtype=np.float64)
+    i3 = np.arange(n_per, dtype=float)[None, :, None]
+    shift = i3 * service
+    unshift = (i3 + 1.0) * service
+    blk = max(1, _BLOCK_ROW_ELEMS // max(n, 1))
+    scratch = (np.empty((min(blk, rows), n_per * w)) if pad else None)
+    for r0 in range(0, rows, blk):
+        r1 = min(r0 + blk, rows)
+        if pad:
+            buf = scratch[: r1 - r0]
+            buf[:, :n] = arrivals[r0:r1]
+            buf[:, n:] = np.inf
+        else:
+            # the output rows double as the workspace: subtract, scan and
+            # un-shift all run in place on the (block, n/W, W) view
+            buf = done[r0:r1]
+            buf[:] = arrivals[r0:r1]
+        b3 = buf.reshape(r1 - r0, n_per, w)
+        np.subtract(b3, shift, out=b3)
+        np.maximum.accumulate(b3, axis=1, out=b3)
+        np.add(b3, unshift, out=b3)
+        if pad:
+            done[r0:r1] = buf[:, :n]
+    return done
+
+
+def pool_rnr_mask_rows_np(done: np.ndarray, arrivals: np.ndarray,
+                          staging: int) -> np.ndarray:
+    """Row-batched staging-ring (RNR) overflow rule: chunk k is dropped when
+    the chunk ``staging`` places ahead is still unserviced at k's arrival —
+    the same predicate as core/engine.staging_rnr_mask, per row. Padded
+    (+inf) columns come back False (inf > inf is False)."""
+    mask = np.zeros(arrivals.shape, dtype=bool)
+    n = arrivals.shape[1]
+    if n > staging:
+        mask[:, staging:] = done[:, : n - staging] > arrivals[:, staging:]
+    return mask
+
+
+def pool_completion_rows_np(arrivals: np.ndarray, n_workers: int,
+                            service: float, staging: int,
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Scan + RNR mask in one call — the inner path behind
+    core/engine.worker_pool_completion_rows."""
+    done = pool_scan_rows_np(arrivals, n_workers, service)
+    return done, pool_rnr_mask_rows_np(done, arrivals, staging)

@@ -284,14 +284,14 @@ def test_engine_auto_sees_stripe_not_global_rows(monkeypatch):
     engine, kind, p_seen, row_bytes = calls[0]
     assert (engine, kind) == ("auto", "allgather")
     assert p_seen == P // G                 # island count, not P
-    # the stripe's merged rows stay below the dense threshold here, so the
-    # vectorized engine is kept — big island-local bundles never enter
+    # "auto" resolves to the vectorized engine (the dense fallback is
+    # retired) — big island-local bundles never enter the multicast engines
     assert real(*calls[0]) == "vectorized"
 
 
 def test_repro_packet_engine_env_override(monkeypatch):
     monkeypatch.delenv("REPRO_PACKET_ENGINE", raising=False)
-    assert pk.resolve_engine("auto", "allgather", 8, 32 << 20) == "reference"
+    assert pk.resolve_engine("auto", "allgather", 8, 32 << 20) == "vectorized"
     monkeypatch.setenv("REPRO_PACKET_ENGINE", "vectorized")
     assert pk.resolve_engine("auto", "allgather", 8, 32 << 20) == "vectorized"
     monkeypatch.setenv("REPRO_PACKET_ENGINE", "reference")

@@ -102,3 +102,59 @@ assert float(jnp.max(jnp.abs(y - yr))) < 1e-3
 print('ok')
 """
     )
+
+
+# ------------------------------------------------- pool-completion scan
+
+
+@pytest.mark.parametrize("cfg", [
+    # (rows, n, n_workers, service, staging) — ragged (w does not divide n),
+    # aligned, w > n, single element, and a staging window wider than W
+    (5, 17, 4, 0.3, 3),
+    (8, 32, 8, 1.5, 2),
+    (3, 7, 16, 0.01, 1),
+    (1, 1, 2, 1.0, 4),
+    (13, 40, 5, 0.7, 6),
+])
+def test_pool_scan_kernel_bit_exact_vs_numpy_twin(cfg):
+    """The Pallas residue-class-parallel scan must be BIT-exact with its
+    jax-free numpy twin (the engine's production inner path) in f64 — both
+    run the identical per-lane op sequence, so equality is exact, not
+    approximate."""
+    from jax.experimental import enable_x64
+
+    from repro.kernels import pool
+    from repro.kernels.pool_np import pool_completion_rows_np
+
+    rows, n, w, s, staging = cfg
+    rng = np.random.default_rng(rows * 1000 + n)
+    a = np.sort(rng.uniform(0.0, 10.0, (rows, n)), axis=1)
+    d_np, m_np = pool_completion_rows_np(a, w, s, staging)
+    with enable_x64():
+        d_j, m_j = pool.pool_completion_rows(jnp.asarray(a), w, s, staging)
+        assert np.asarray(d_j).dtype == np.float64
+        np.testing.assert_array_equal(np.asarray(d_j), d_np)
+        np.testing.assert_array_equal(np.asarray(m_j), m_np)
+
+
+def test_pool_scan_kernel_f32_lane_semantics():
+    """In f32 (jax default) the kernel replays the same lane ops at f32
+    precision — pin it bitwise against the scan replayed in f32 numpy."""
+    from repro.kernels import pool
+
+    rows, n, w, s = 6, 23, 4, 0.3
+    rng = np.random.default_rng(7)
+    a32 = np.sort(rng.uniform(0.0, 10.0, (rows, n)), axis=1) \
+        .astype(np.float32)
+    d_j = np.asarray(pool.pool_scan_rows(jnp.asarray(a32), w, s))
+    assert d_j.dtype == np.float32
+    s32 = np.float32(s)
+    pad = (-n) % w
+    n_per = (n + pad) // w
+    buf = np.full((rows, n_per * w), np.inf, np.float32)
+    buf[:, :n] = a32
+    b3 = buf.reshape(rows, n_per, w)
+    i3 = np.arange(n_per, dtype=np.float32)[None, :, None]
+    b3 = np.maximum.accumulate(b3 - i3 * s32, axis=1) \
+        + (i3 + np.float32(1.0)) * s32
+    np.testing.assert_array_equal(d_j, b3.reshape(rows, -1)[:, :n])

@@ -1,0 +1,162 @@
+"""Incremental max-min solver (core/engine.Engine): property suite.
+
+The engine re-solves only the dirty connected component of the flow-link
+graph on every arrival/completion (Engine._current_rates). This suite
+pins the two contracts that make that safe:
+
+  - EQUALITY: on hypothesis-sampled flow/link DAGs with random
+    arrival/completion interleavings, the incremental engine's rate
+    allocation is identical RATE FOR RATE (every progress segment, every
+    completion time, exact float equality) to the pre-incremental global
+    progressive-filling oracle (``ENGINE_MAXMIN=reference``). Disjoint
+    components share no links, so per-component progressive filling runs
+    the identical float ops in the identical order as the global solve.
+  - LOCALITY: events in one component never trigger solver work in
+    another — pinned via the engine's ``maxmin_flows_solved`` telemetry.
+"""
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # offline: seeded-random shim (tests/_hypothesis_shim.py)
+    from _hypothesis_shim import given, settings, strategies as st
+import pytest
+
+from repro.core.engine import Engine
+
+# capacities drawn from a small irrational-ish palette: shares collide in
+# interesting ways (equal bottleneck shares) without being hand-tuned ties
+_CAPS = (1.0, 2.0, 3.5, 5.0, 8.0, 10.0, 16.0)
+
+
+@st.composite
+def _scenario(draw):
+    """(n_links, [(route_link_ids, n_bytes, t_start, rate_cap)]) — random
+    flow/link DAGs: several disjoint-or-overlapping routes, batched and
+    staggered start times (duplicate timestamps exercise same-event
+    batching), occasional rate caps."""
+    n_links = draw(st.integers(2, 8))
+    caps = [draw(st.sampled_from(_CAPS)) for _ in range(n_links)]
+    n_flows = draw(st.integers(1, 12))
+    # a handful of start times, reused across flows so arrivals batch
+    starts = [draw(st.floats(0.0, 3.0)) for _ in range(4)]
+    flows = []
+    for _ in range(n_flows):
+        r_len = draw(st.integers(1, min(3, n_links)))
+        first = draw(st.integers(0, n_links - 1))
+        route = [first]
+        while len(route) < r_len:
+            nxt = draw(st.integers(0, n_links - 1))
+            if nxt not in route:
+                route.append(nxt)
+        n_bytes = draw(st.floats(0.5, 20.0))
+        t_start = starts[draw(st.integers(0, len(starts) - 1))]
+        cap = draw(st.sampled_from((None, None, None, 1.5, 4.0)))
+        flows.append((tuple(route), n_bytes, t_start, cap))
+    return caps, flows
+
+
+def _run(caps, flows, mode):
+    eng = Engine()
+    eng._maxmin_mode = mode
+    links = [eng.add_link(f"l{i}", c) for i, c in enumerate(caps)]
+    out = []
+    for route, n_bytes, t_start, cap in flows:
+        out.append(eng.submit([links[i] for i in route], n_bytes,
+                              t_start=t_start, rate_cap=cap))
+    eng.run()
+    return eng, out
+
+
+@settings(max_examples=40, deadline=None)
+@given(_scenario())
+def test_incremental_allocation_identical_to_global_oracle(scenario):
+    caps, flows = scenario
+    _, ref = _run(caps, flows, "reference")
+    _, inc = _run(caps, flows, "incremental")
+    for fr, fi in zip(ref, inc):
+        assert fi.t_end == fr.t_end          # exact: same floats, same order
+        assert fi.segments == fr.segments    # rate for rate, segment for
+        #                                      segment — not just end times
+
+
+@settings(max_examples=15, deadline=None)
+@given(_scenario(), st.floats(0.1, 5.0))
+def test_incremental_interleaved_advance_to(scenario, t_cut):
+    """Same contract under partial advancement (the training-run drivers
+    call advance_to between submissions)."""
+    caps, flows = scenario
+    engines = {}
+    for mode in ("reference", "incremental"):
+        eng = Engine()
+        eng._maxmin_mode = mode
+        links = [eng.add_link(f"l{i}", c) for i, c in enumerate(caps)]
+        fs = []
+        mid = len(flows) // 2
+        for route, n_bytes, t_start, cap in flows[:mid]:
+            fs.append(eng.submit([links[i] for i in route], n_bytes,
+                                 t_start=t_start, rate_cap=cap))
+        eng.advance_to(t_cut)
+        for route, n_bytes, t_start, cap in flows[mid:]:
+            fs.append(eng.submit([links[i] for i in route], n_bytes,
+                                 t_start=max(t_start, eng.now),
+                                 rate_cap=cap))
+        eng.run()
+        engines[mode] = (eng, fs)
+    (er, fr), (ei, fi) = engines["reference"], engines["incremental"]
+    assert ei.now == er.now
+    for a, b in zip(fr, fi):
+        assert b.t_end == a.t_end and b.segments == a.segments
+
+
+def test_component_locality_counters():
+    """Arrivals in one component must not re-solve the other: a long flow
+    on an isolated link is solved exactly once (its own arrival batch)
+    while a train of flows churns a disjoint link."""
+    eng = Engine()
+    la = eng.add_link("a", 1.0)
+    lb = eng.add_link("b", 1.0)
+    eng.submit(la, 100.0, t_start=0.0)             # the isolated long flow
+    for k in range(5):                             # churn on b: arrivals at
+        eng.submit(lb, 1.0, t_start=float(k))      # t=0..4, finishes between
+    eng.run()
+    # t=0 batch: both arrivals share the batch -> one solve of 2 flows (the
+    # components are solved together only because they went dirty together).
+    # Every later b-event (4 arrivals + 5 completions, some coinciding)
+    # re-solves ONLY b's 1-2 flows; flow a is never revisited until its own
+    # completion (solving an emptied component is skipped entirely).
+    assert eng.maxmin_solves <= 10
+    assert eng.maxmin_flows_solved <= 2 + 2 * 9
+    # the reference mode re-solves flow a on every event
+    ref = Engine()
+    ref._maxmin_mode = "reference"
+    la = ref.add_link("a", 1.0)
+    lb = ref.add_link("b", 1.0)
+    ref.submit(la, 100.0, t_start=0.0)
+    for k in range(5):
+        ref.submit(lb, 1.0, t_start=float(k))
+    ref.run()
+    assert ref.maxmin_flows_solved > eng.maxmin_flows_solved
+
+
+def test_component_bfs_respects_active_order():
+    """The component is returned in _active order — progressive filling
+    must visit flows in the same relative order as the global solve."""
+    eng = Engine()
+    l1 = eng.add_link("x", 2.0)
+    l2 = eng.add_link("y", 2.0)
+    f1 = eng.submit([l1], 4.0, t_start=0.0)
+    f2 = eng.submit([l1, l2], 4.0, t_start=0.0)
+    f3 = eng.submit([l2], 4.0, t_start=0.0)
+    eng.advance_to(0.5)                            # all active, one component
+    comp = eng._component([l2])
+    assert comp == [f1, f2, f3]                    # via shared links, ordered
+
+
+def test_engine_maxmin_env_wiring(monkeypatch):
+    monkeypatch.delenv("ENGINE_MAXMIN", raising=False)
+    assert Engine()._maxmin_mode == "incremental"
+    monkeypatch.setenv("ENGINE_MAXMIN", "reference")
+    assert Engine()._maxmin_mode == "reference"
+    monkeypatch.setenv("ENGINE_MAXMIN", "bogus")
+    with pytest.raises(AssertionError):
+        Engine()

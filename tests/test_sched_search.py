@@ -245,14 +245,15 @@ def test_segment_bytes_partition():
 
 
 def test_resolve_engine_passthrough_and_heuristic(monkeypatch):
-    # this test pins the built-in heuristic — shed any CI matrix override
+    # this test pins the built-in resolution — shed any CI matrix override
     monkeypatch.delenv("REPRO_PACKET_ENGINE", raising=False)
     assert pk.resolve_engine("vectorized", "allgather", 8, 1 << 30) \
         == "vectorized"
     assert pk.resolve_engine("reference", "allgather", 1024, 1) \
         == "reference"
-    # dense big-row regime (DESIGN §9): few hosts, >= 16 MiB merged rows
-    assert pk.resolve_engine("auto", "allgather", 8, 32 << 20) == "reference"
+    # the dense big-row fallback (DESIGN §9) is retired: the pool scan in
+    # kernels/pool_np closed the regime, so "auto" is vectorized everywhere
+    assert pk.resolve_engine("auto", "allgather", 8, 32 << 20) == "vectorized"
     assert pk.resolve_engine("auto", "allgather", 8, 1 << 20) == "vectorized"
     assert pk.resolve_engine("auto", "allgather", 512, 1 << 30) \
         == "vectorized"
@@ -282,3 +283,108 @@ def test_search_wall_clock_budget_p64():
                topology=FatTree(k=8, n_hosts=64, oversubscription=4.0))
     assert r.wall_s < 30.0
     assert r.searched_vs_best_builder <= 1.0
+
+
+# --------------------------------------- parallel tier / persistent cache
+
+
+def _result_fields(r):
+    return (r.winner.name, r.winner_time, r.winner_fabric_bytes,
+            r.best_builder.name, r.best_builder_time, r.evaluations,
+            r.cache_hits, r.pruned,
+            [(c.name, c.origin, c.bound, c.time, c.fabric_bytes)
+             for c in r.table])
+
+
+def test_parallel_search_bitwise_identical_to_serial(monkeypatch):
+    monkeypatch.delenv("REPRO_SEARCH_WORKERS", raising=False)
+    serial = search("allgather", 16, N, topology=_fattree(),
+                    hosts=list(range(16)), validate_packet=False)
+    par = search("allgather", 16, N, topology=_fattree(),
+                 hosts=list(range(16)), validate_packet=False, n_jobs=2)
+    assert _result_fields(par) == _result_fields(serial)
+
+
+def test_search_workers_env_opt_in(monkeypatch):
+    # the env var is the CI/benchmark opt-in — it must route through the
+    # same replay tier and change nothing about the result
+    serial = search("allreduce", P, N, validate_packet=False)
+    monkeypatch.setenv("REPRO_SEARCH_WORKERS", "2")
+    par = search("allreduce", P, N, validate_packet=False)
+    assert _result_fields(par) == _result_fields(serial)
+
+
+def test_eval_cache_persists_across_processes_keyspace(tmp_path):
+    """Disk round-trip: a fresh cache object (standing in for a fresh
+    process) serves every evaluation of a rerun from disk — zero misses."""
+    path = str(tmp_path / "evals.json")
+    r1 = search("allgather", 16, N, topology=_fattree(),
+                hosts=list(range(16)), validate_packet=False,
+                cache=EvalCache(path))
+    warm = EvalCache(path)
+    r2 = search("allgather", 16, N, topology=_fattree(),
+                hosts=list(range(16)), validate_packet=False, cache=warm)
+    assert warm.misses == 0
+    assert r2.cache_hits == r2.evaluations
+    assert r2.winner_time == r1.winner_time
+    assert r2.winner.name == r1.winner.name
+
+
+def test_eval_cache_never_persists_identity_keyed_topologies(tmp_path):
+    """A topology without signature() is keyed by id() — process-local, so
+    its entries must stay out of the disk file."""
+    class Opaque:
+        supports_packet = False
+
+        def reset(self):
+            pass
+
+    path = str(tmp_path / "evals.json")
+    cache = EvalCache(path)
+    sched = sched_ir.build_allgather(P, N, 2)
+    cache.evaluate(sched, EvalContext(FAB, WK))             # persistable
+    ctx_id = EvalContext(FAB, WK, Opaque())
+    try:
+        cache.evaluate(sched, ctx_id)
+    except Exception:
+        pass          # the opaque topology cannot lower — key still formed
+    cache.save()
+    reread = EvalCache(path)
+    assert all("'id'" not in k for k in reread._disk)
+    assert len(reread._disk) >= 1
+
+
+def test_eval_cache_survives_corrupt_file(tmp_path):
+    path = tmp_path / "evals.json"
+    path.write_text("{not json")
+    cache = EvalCache(str(path))
+    assert len(cache._disk) == 0
+    sched = sched_ir.build_allgather(P, N, 2)
+    cache.evaluate(sched, EvalContext(FAB, WK))
+    cache.save()                                   # replaces the bad file
+    assert len(EvalCache(str(path))._disk) == 1
+
+
+def test_eval_cache_persistent_classmethod(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_EVAL_CACHE", raising=False)
+    assert EvalCache.persistent().path is None
+    p = str(tmp_path / "c.json")
+    monkeypatch.setenv("REPRO_EVAL_CACHE", p)
+    cache = EvalCache.persistent()
+    assert cache.path == p
+    sched = sched_ir.build_allgather(P, N, 2)
+    cache.evaluate(sched, EvalContext(FAB, WK))
+    cache.save()
+    assert EvalCache.persistent().misses == 0      # loads, ready to serve
+
+
+def test_sweep_chains_saves_shared_cache(tmp_path):
+    path = str(tmp_path / "evals.json")
+    best, times = sched_search.sweep_chains(
+        sched_ir.build_allgather, p=P, n_bytes=N, fabric=FAB, workers=WK,
+        candidates=[1, 2, 4], cache=EvalCache(path))
+    warm = EvalCache(path)
+    best2, times2 = sched_search.sweep_chains(
+        sched_ir.build_allgather, p=P, n_bytes=N, fabric=FAB, workers=WK,
+        candidates=[1, 2, 4], cache=warm)
+    assert warm.misses == 0 and (best2, times2) == (best, times)
